@@ -1,0 +1,188 @@
+"""One benchmark per paper table/figure (KDD'21 JiZHI §8).
+
+All latency/throughput numbers come from the deterministic SimExecutor over
+calibrated service profiles (Table 1 spread) under diurnal Zipf traffic;
+'instances' use the paper's own capacity accounting. Paper reference values
+are printed alongside for the reproduction check in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.irm.offline import autotune
+from repro.core.irm.shedding import OnlineShedder, train_pruning_dnn
+from repro.core.service_model import (SERVICES, Knobs, diurnal_rate,
+                                      make_traffic, run_service)
+
+PAPER_TABLE2 = {  # service: (legacy_ms, jizhi_ms, legacy_tput, jizhi_tput, legacy_inst, jizhi_inst)
+    "A": (30, 23, 1.53e6, 4.42e6, 11450, 3970),
+    "B": (29, 24, 1.63e6, 4.36e6, 12750, 4773),
+    "C": (41, 40, 2.80e6, 5.21e6, 2067, 1110),
+    "D": (22, 18, 3.53e6, 8.24e6, 4280, 1833),
+}
+
+
+def table2_overall(n_events: int = 3000) -> list[dict]:
+    rows = []
+    for name in "ABCD":
+        spec = SERVICES[name]
+        leg, _, leg_inst = run_service(spec, Knobs(), n_events, legacy=True)
+        sedp, _, sedp_inst = run_service(spec, Knobs(), n_events, legacy=False)
+        p = PAPER_TABLE2[name]
+        rows.append({
+            "service": name,
+            # median = user-facing latency; the MEAN (stall-inflated for
+            # legacy) drives capacity via Little's law
+            "legacy_ms": leg.latency_percentile(0.5) * 1e3,
+            "jizhi_ms": sedp.latency_percentile(0.5) * 1e3,
+            "legacy_mean_ms": leg.avg_latency * 1e3,
+            "jizhi_mean_ms": sedp.avg_latency * 1e3,
+            "latency_gain_pct": 100 * (1 - sedp.latency_percentile(0.5)
+                                       / leg.latency_percentile(0.5)),
+            "paper_latency_gain_pct": 100 * (1 - p[1] / p[0]),
+            # capacity throughput: what the SAME fleet sustains — the paper's
+            # own arithmetic (their tput ratio equals their instance ratio)
+            "throughput_gain_pct": 100 * (leg_inst / max(1, sedp_inst) - 1),
+            "paper_throughput_gain_pct": 100 * (p[3] / p[2] - 1),
+            "legacy_instances": leg_inst, "jizhi_instances": sedp_inst,
+            "instance_reduction_pct": 100 * (1 - sedp_inst / max(1, leg_inst)),
+            "paper_instance_reduction_pct": 100 * (1 - p[5] / p[4]),
+        })
+    return rows
+
+
+def fig7_latency(n_events: int = 4000) -> dict:
+    spec = SERVICES["A"]
+    rep, rt, _ = run_service(spec, Knobs(), n_events)
+    lat = np.array(rep.latencies) * 1e3
+    hits = rt.query_cache.stats.hits
+    # bimodality: cache-hit latencies vs full-path latencies
+    lo = np.percentile(lat, 10)
+    hi = np.percentile(lat, 90)
+    # sub-linear latency growth vs traffic
+    lows, _, _ = run_service(spec, Knobs(), 1500, rate_qps=600)
+    highs, _, _ = run_service(spec, Knobs(), 1500, rate_qps=2400)
+    return {
+        "p10_ms": float(lo), "p50_ms": float(np.percentile(lat, 50)),
+        "p99_ms": float(np.percentile(lat, 99)),
+        "query_cache_hits": hits,
+        "latency_ratio_4x_traffic": highs.avg_latency / max(1e-9, lows.avg_latency),
+        "sublinear": bool(highs.avg_latency / lows.avg_latency < 4.0),
+    }
+
+
+def fig8_cache_hit_ratios(hours: int = 24, events_per_hour: int = 1500) -> dict:
+    """Hit ratios by hour over a simulated day (paper: cube 84.21% ± <3.61%,
+    query 19.26% with higher variance)."""
+    spec = SERVICES["A"]
+    from repro.core.service_model import ServiceRuntime, build_service
+    from repro.core.executors import SimExecutor
+    from repro.core.service_model import service_time_model
+    graph, rt = build_service(spec, Knobs())
+    plan = graph.compile()
+    cube_by_hour, query_by_hour = [], []
+    rng_seed = 0
+    for h in range(hours):
+        c0h = rt.cube_cache.stats["mem"].hits + rt.cube_cache.stats["disk"].hits
+        c0t = c0h + rt.cube_cache.stats["disk"].misses
+        q0h, q0m = rt.query_cache.stats.hits, rt.query_cache.stats.misses
+        rate = diurnal_rate(float(h), 1200.0)
+        n = max(200, int(events_per_hour * rate / 1200.0))
+        arrivals = make_traffic(spec, n, rate, seed=rng_seed + h,
+                                start_hour=float(h))
+        SimExecutor(plan, service_time=service_time_model).run(arrivals)
+        c1h = rt.cube_cache.stats["mem"].hits + rt.cube_cache.stats["disk"].hits
+        c1t = c1h + rt.cube_cache.stats["disk"].misses
+        q1h, q1m = rt.query_cache.stats.hits, rt.query_cache.stats.misses
+        cube_by_hour.append((c1h - c0h) / max(1, (c1t - c0t)))
+        query_by_hour.append((q1h - q0h) / max(1, (q1h - q0h) + (q1m - q0m)))
+    return {
+        "cube_hit_avg": float(np.mean(cube_by_hour[2:])),
+        "cube_hit_range": float(np.ptp(cube_by_hour[2:])),
+        "query_hit_avg": float(np.mean(query_by_hour[2:])),
+        "query_hit_range": float(np.ptp(query_by_hour[2:])),
+        "paper": {"cube": 0.8421, "cube_var": 0.0361, "query": 0.1926},
+    }
+
+
+def table3_offline_tuning(budget: int = 800, n_log_samples: int = 40) -> list[dict]:
+    rows = []
+    paper = {"A": 14.29, "B": 13.62, "C": 8.91, "D": 16.45}
+    for name in "ABCD":
+        res = autotune(SERVICES[name], n_log_samples=n_log_samples,
+                       n_events=900, budget=budget, seed=hash(name) % 1000)
+        rows.append({"service": name,
+                     "instances_before": res.instances_before,
+                     "instances_after": res.instances_after,
+                     "gain_pct": 100 * res.instance_gain,
+                     "paper_gain_pct": paper[name],
+                     "latency_before_ms": res.latency_before_ms,
+                     "latency_after_ms": res.latency_after_ms})
+    return rows
+
+
+def table4_knobs(budget: int = 800) -> dict:
+    res = autotune(SERVICES["A"], n_log_samples=40, n_events=900,
+                   budget=budget, seed=0)
+    b, a = res.knobs_before, res.knobs_after
+    return {"noOpt": b.__dict__ if hasattr(b, "__dict__") else str(b),
+            "opt": {f: getattr(a, f) for f, _, _ in Knobs.BOUNDS},
+            "paper_opt": {"user_batch": 34, "item_extractor_batch": 12,
+                          "item_processor_batch": 17, "cube_batch": 6,
+                          "dnn_batch": 25, "cube_cache_ratio": 1.2,
+                          "query_cache_window": 143, "arenas": 549,
+                          "max_active_extent": 25, "huge_page": True}}
+
+
+def fig9_shedding(hours: int = 24) -> dict:
+    """Cutoff ratio tracks traffic (and rises at midnight — low quota need)."""
+    from dataclasses import replace
+    dnn, _ = train_pruning_dnn(n_samples=1500, seed=0)
+    # shedding only binds when re-rank capacity (~370 req/s at parallel=2)
+    # saturates at peak hours
+    spec = replace(SERVICES["A"], dnn_parallel=2)
+    cutoffs, rates = [], []
+    for h in range(hours):
+        rate = diurnal_rate(float(h), 250.0)
+        shedder = OnlineShedder(dnn, capacity_qps_proxy=200.0)
+        rep, _, _ = run_service(spec, Knobs(), n_events=600, rate_qps=rate,
+                                seed=h, shedder=shedder)
+        total = shedder.state.shed_events + shedder.state.kept_events
+        cutoffs.append(shedder.state.shed_events / max(1, total))
+        rates.append(rate)
+    corr = float(np.corrcoef(rates, cutoffs)[0, 1])
+    return {"cutoff_by_hour": [round(c, 4) for c in cutoffs],
+            "traffic_correlation": corr,
+            "tracks_traffic": bool(corr > 0.5)}
+
+
+def table5_multitenant(n_events: int = 3000) -> dict:
+    """Service E: three DNNs as one multi-tenant pipeline vs three services."""
+    from dataclasses import replace
+    spec_e = SERVICES["E"]
+    mt_rep, _, mt_inst = run_service(spec_e, Knobs(), n_events)
+    singles = {}
+    tot_inst = 0
+    worst_tput = None
+    for tenant in spec_e.multi_tenant:
+        s = replace(spec_e, multi_tenant=(),
+                    n_features=int(spec_e.n_features
+                                   * (1 - spec_e.shared_feature_frac)
+                                   + spec_e.n_features / 3
+                                   * spec_e.shared_feature_frac))
+        rep, _, inst = run_service(s, Knobs(), n_events, seed=hash(tenant) % 97)
+        singles[tenant] = {"latency_ms": rep.avg_latency * 1e3,
+                           "throughput": rep.throughput, "instances": inst}
+        tot_inst += inst
+        worst_tput = min(worst_tput or 1e18, rep.throughput)
+    return {
+        "singles": singles,
+        "multitenant": {"latency_ms": mt_rep.avg_latency * 1e3,
+                        "throughput": mt_rep.throughput,
+                        "instances": mt_inst},
+        "instance_saving_pct": 100 * (1 - mt_inst / max(1, tot_inst)),
+        "throughput_vs_bottleneck_pct":
+            100 * (mt_rep.throughput / worst_tput - 1),
+        "paper": {"instance_saving_pct": 73.69,
+                  "throughput_vs_bottleneck_pct": 82.68},
+    }

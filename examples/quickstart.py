@@ -1,0 +1,46 @@
+"""Quickstart: the full JiZHI stack in one file.
+
+Builds an InferenceService (SEDP DAG + query cache + cube/cube-cache +
+online load shedding + a real jitted DIN ranking model), pushes requests
+through the async executor, and prints latency + cache effectiveness.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+from repro.core.service import InferenceService, ServiceConfig
+
+
+def main():
+    print("building service (DIN ranker + HHS + shedding)...")
+    svc = InferenceService(ServiceConfig(arch_id="din", batch_size=16))
+
+    print("SEDP stages:", " -> ".join(svc.plan.order))
+    t0 = time.time()
+    report = svc.run(n_requests=192)
+    dt = time.time() - t0
+
+    print(f"\nprocessed {len(report.results)} requests in {dt:.2f}s wall")
+    print(f"  avg latency   : {report.avg_latency * 1e3:.2f} ms")
+    print(f"  p99 latency   : {report.latency_percentile(0.99) * 1e3:.2f} ms")
+    qc = svc.query_cache.stats
+    print(f"  query cache   : {qc.hits} hits / {qc.misses} misses "
+          f"({100 * qc.hit_ratio:.1f}%)")
+    print(f"  cube cache    : {100 * svc.cube_cache.overall_hit_ratio:.1f}% "
+          f"hit ratio")
+    if svc.shedder:
+        st = svc.shedder.state
+        total = st.shed_events + st.kept_events
+        print(f"  load shedding : {st.shed_events}/{total} candidates pruned")
+    scored = [ev.payload["score"] for ev in report.results
+              if "score" in ev.payload]
+    print(f"  scored        : {len(scored)} items, "
+          f"mean score {sum(scored) / max(1, len(scored)):.3f}")
+    # second wave hits the query cache
+    report2 = svc.run(n_requests=192)
+    qc = svc.query_cache.stats
+    print(f"\nsecond wave query-cache hit ratio: {100 * qc.hit_ratio:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

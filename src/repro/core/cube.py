@@ -1,0 +1,158 @@
+"""The Distributed Sparse Parameter Cube (paper §5.1).
+
+A READ-ONLY distributed KV store for the sparse sub-network:
+  * key    — compact feature signature (universal hash; repro.sparse.hashing)
+  * value  — model weights (+ feedback statistics) for that sparse feature
+  * keys live purely in memory (to hide hash-probe latency); values are
+    grouped into ~1 GB blocks placed in MEMORY or DISK (SSD) — a tunable
+    latency/hardware trade-off (the "cube cache ratio" knob moves it)
+  * sharded over servers by key hash; every block replicated ``replication``
+    ways → fault tolerant (server failure reroutes to replicas)
+  * generation-stamped (model hot-loading swaps whole generations)
+
+Host-side numpy implementation: this tier backs the >HBM tail of the model;
+the HBM-resident head is the row-sharded table (repro.sparse.sharded) — see
+DESIGN.md §2 for how the two compose on a pod.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.sparse.hashing import signature_np
+
+
+@dataclass
+class CubeMetrics:
+    lookups: int = 0
+    mem_block_hits: int = 0
+    disk_block_hits: int = 0
+    failovers: int = 0
+    simulated_latency_s: float = 0.0
+
+
+class _Block:
+    """One value block: contiguous (n, dim) array, in RAM or memmapped."""
+
+    def __init__(self, values: np.ndarray, on_disk: bool, tmpdir: str, bid: str):
+        self.on_disk = on_disk
+        if on_disk:
+            path = os.path.join(tmpdir, f"block_{bid}.npy")
+            mm = np.lib.format.open_memmap(path, mode="w+",
+                                           dtype=values.dtype, shape=values.shape)
+            mm[:] = values
+            mm.flush()
+            self.values = mm
+        else:
+            self.values = values
+
+
+class CubeServer:
+    def __init__(self, server_id: int, tmpdir: str):
+        self.server_id = server_id
+        self.tmpdir = tmpdir
+        self.keys: dict[int, tuple[int, int]] = {}     # sig -> (block, offset)
+        self.blocks: list[_Block] = []
+        self.alive = True
+
+    def add_block(self, sigs: np.ndarray, values: np.ndarray, on_disk: bool):
+        bid = len(self.blocks)
+        # filename carries the server id — servers share a tmpdir
+        self.blocks.append(_Block(values, on_disk, self.tmpdir,
+                                  f"s{self.server_id}_{bid}"))
+        for off, s in enumerate(sigs):
+            self.keys[int(s)] = (bid, off)
+
+    def get(self, sig: int) -> Optional[tuple[np.ndarray, bool]]:
+        loc = self.keys.get(int(sig))
+        if loc is None:
+            return None
+        blk = self.blocks[loc[0]]
+        return np.asarray(blk.values[loc[1]]), blk.on_disk
+
+
+class ParameterCube:
+    """Build from feature-group embedding tables; serve batched lookups."""
+
+    def __init__(self, n_servers: int = 4, replication: int = 2,
+                 block_rows: int = 65536, mem_block_fraction: float = 0.5,
+                 mem_latency_s: float = 2e-6, disk_latency_s: float = 50e-6,
+                 net_latency_s: float = 300e-6, generation: int = 0,
+                 tmpdir: Optional[str] = None):
+        assert replication <= n_servers
+        self.n_servers = n_servers
+        self.replication = replication
+        self.block_rows = block_rows
+        self.mem_block_fraction = mem_block_fraction
+        self.lat = {"mem": mem_latency_s, "disk": disk_latency_s,
+                    "net": net_latency_s}
+        self.generation = generation
+        self.tmpdir = tmpdir or tempfile.mkdtemp(prefix="cube_")
+        self.servers = [CubeServer(i, self.tmpdir) for i in range(n_servers)]
+        self.metrics = CubeMetrics()
+
+    # ------------------------------------------------------------- build
+    def load_table(self, group: int, table: np.ndarray,
+                   raw_ids: Optional[np.ndarray] = None):
+        """Ingest rows of one feature group. Values are the rows; keys are
+        signature(group, row_id)."""
+        ids = raw_ids if raw_ids is not None else np.arange(table.shape[0])
+        sigs = signature_np(group, ids)
+        order = np.argsort(sigs % np.uint64(self.n_servers), kind="stable")
+        sigs, rows = sigs[order], table[order]
+        shard = (sigs % np.uint64(self.n_servers)).astype(np.int64)
+        for sid in range(self.n_servers):
+            sel = shard == sid
+            s_sigs, s_rows = sigs[sel], rows[sel]
+            for start in range(0, len(s_sigs), self.block_rows):
+                blk_s = s_sigs[start:start + self.block_rows]
+                blk_v = s_rows[start:start + self.block_rows]
+                n_blocks = max(1, len(s_sigs) // self.block_rows)
+                on_disk = (start // self.block_rows) >= max(
+                    1, int(n_blocks * self.mem_block_fraction))
+                for r in range(self.replication):
+                    self.servers[(sid + r) % self.n_servers].add_block(
+                        blk_s, blk_v, on_disk)
+
+    # ------------------------------------------------------------ lookup
+    def lookup(self, group: int, raw_ids: np.ndarray) -> np.ndarray:
+        sigs = signature_np(group, np.asarray(raw_ids))
+        out = []
+        t = 0.0
+        for s in np.atleast_1d(sigs):
+            primary = int(s % np.uint64(self.n_servers))
+            row = None
+            for r in range(self.replication):
+                srv = self.servers[(primary + r) % self.n_servers]
+                if not srv.alive:
+                    if r == 0:
+                        self.metrics.failovers += 1
+                    continue
+                got = srv.get(int(s))
+                if got is not None:
+                    row, on_disk = got
+                    t += self.lat["net"] / 64 + (
+                        self.lat["disk"] if on_disk else self.lat["mem"])
+                    if on_disk:
+                        self.metrics.disk_block_hits += 1
+                    else:
+                        self.metrics.mem_block_hits += 1
+                    break
+            if row is None:
+                raise KeyError(f"signature {s} unavailable (group {group})")
+            out.append(row)
+        self.metrics.lookups += len(out)
+        self.metrics.simulated_latency_s += t
+        return np.stack(out)
+
+    # ----------------------------------------------------- fault injection
+    def kill_server(self, sid: int):
+        self.servers[sid].alive = False
+
+    def revive_server(self, sid: int):
+        self.servers[sid].alive = True

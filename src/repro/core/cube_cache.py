@@ -1,0 +1,116 @@
+"""Cube cache (paper §5.2): two-tier local LFU over cube key-values.
+
+  * memory tier  — hottest ~0.1% of keys, avoids even disk I/O
+  * disk tier    — hottest ~1%, hides remote-cube network I/O
+  * LFU replacement (paper's choice — access counts, not recency, match the
+    heavy-tailed, slowly-drifting feature popularity of Fig. 5a)
+
+The paper reports ~84% hit ratio, avoiding up to 90% of remote accesses →
+~10% average latency reduction. benchmarks/fig8 reproduces this on Zipf
+traffic.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+
+@dataclass
+class TierStats:
+    hits: int = 0
+    misses: int = 0
+
+    @property
+    def hit_ratio(self):
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+class _LFU:
+    """O(log n) LFU via lazy heap; counts persist across evictions (paper
+    replaces *entries*, not statistics)."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.data: dict[Any, Any] = {}
+        self.counts: dict[Any, int] = {}
+        self._heap: list = []
+        self._tick = itertools.count()
+
+    def get(self, key):
+        self.counts[key] = self.counts.get(key, 0) + 1
+        if key in self.data:
+            heapq.heappush(self._heap, (self.counts[key], next(self._tick), key))
+            return self.data[key]
+        return None
+
+    def put(self, key, value):
+        if self.capacity <= 0:
+            return None
+        evicted = None
+        if key not in self.data and len(self.data) >= self.capacity:
+            while self._heap:
+                cnt, _, k = heapq.heappop(self._heap)
+                if k in self.data and cnt >= self.counts.get(k, 0):
+                    evicted = (k, self.data.pop(k))
+                    break
+            if evicted is None and self.data:
+                k = min(self.data, key=lambda k: self.counts.get(k, 0))
+                evicted = (k, self.data.pop(k))
+        self.data[key] = value
+        self.counts[key] = self.counts.get(key, 0) + 1
+        heapq.heappush(self._heap, (self.counts[key], next(self._tick), key))
+        return evicted
+
+
+class TwoTierLFUCache:
+    """get() probes memory → disk (promoting on disk hit); put() inserts to
+    memory, demoting memory evictions to the disk tier."""
+
+    def __init__(self, mem_capacity: int, disk_capacity: int,
+                 mem_latency_s: float = 1e-6, disk_latency_s: float = 40e-6):
+        self.mem = _LFU(mem_capacity)
+        self.disk = _LFU(disk_capacity)
+        self.stats = {"mem": TierStats(), "disk": TierStats()}
+        self.lat = {"mem": mem_latency_s, "disk": disk_latency_s}
+        self.simulated_latency_s = 0.0
+
+    def get(self, key) -> Optional[Any]:
+        v = self.mem.get(key)
+        if v is not None:
+            self.stats["mem"].hits += 1
+            self.simulated_latency_s += self.lat["mem"]
+            return v
+        self.stats["mem"].misses += 1
+        v = self.disk.get(key)
+        if v is not None:
+            self.stats["disk"].hits += 1
+            self.simulated_latency_s += self.lat["disk"]
+            dem = self.mem.put(key, v)          # promote
+            if dem is not None:
+                self.disk.put(*dem)
+            return v
+        self.stats["disk"].misses += 1
+        return None
+
+    def put(self, key, value):
+        dem = self.mem.put(key, value)
+        if dem is not None:
+            self.disk.put(*dem)
+
+    @property
+    def overall_hit_ratio(self) -> float:
+        m, d = self.stats["mem"], self.stats["disk"]
+        total = m.hits + m.misses
+        return (m.hits + d.hits) / total if total else 0.0
+
+
+def capacity_from_ratio(vocab: int, cache_ratio_pct: float,
+                        mem_share: float = 0.1) -> tuple[int, int]:
+    """Paper defaults: disk tier = cache_ratio (~1%) of keys, memory tier =
+    top tenth of that (~0.1%). Both are offline-tunable (Table 6)."""
+    disk = max(1, int(vocab * cache_ratio_pct / 100.0))
+    mem = max(1, int(disk * mem_share))
+    return mem, disk

@@ -1,0 +1,173 @@
+"""Online load shedding via a pruning DNN (paper §6.2, Fig. 6, Table 7).
+
+Funnel context: recall hands ~10³ candidates per request to the expensive
+re-rank stage; only ~a dozen are shown. When traffic exceeds capacity, prune
+low-quality candidates per-request, bounded by a recommendation-effectiveness
+constraint |L* − L̂| ≤ ε (Eq. 2).
+
+  * Features (Table 7): quota (available resource), previous cutoff ratio,
+    queue id, and the recall-score statistics (avg/var/max/min).
+  * The pruning DNN is an ultra-lightweight MLP (decides in ~μs) trained to
+    imitate the ORACLE cutoff: the largest prune such that the expected
+    recall@K loss ≤ ε, shrunk further as quota tightens.
+  * Candidates are sorted by recall score; everything behind the cutoff is
+    dropped before re-rank.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import mlp_tower_apply, mlp_tower_init
+
+FEATURES = ("quota", "cutoff_ratio_prev", "qid",
+            "escore_avg", "escore_variance", "escore_max", "escore_min")
+
+
+def features_from(scores: np.ndarray, quota: float, prev_cutoff: float,
+                  qid: int) -> np.ndarray:
+    return np.array([quota, prev_cutoff, float(qid % 16) / 16.0,
+                     float(scores.mean()), float(scores.var()),
+                     float(scores.max()), float(scores.min())], np.float32)
+
+
+def oracle_cutoff(scores: np.ndarray, quota: float, eps: float,
+                  k: int = 12) -> float:
+    """Max prune ratio with bounded effectiveness loss: keep every candidate
+    that could plausibly reach the final top-k (score within the ε-quantile
+    band of the k-th best), then shed further only as quota forces it."""
+    s = np.sort(scores)[::-1]
+    n = len(s)
+    kth = s[min(k, n) - 1]
+    # ε-band: items scoring within eps-quantile of the k-th score may reorder
+    # under the re-rank model; they must survive
+    thresh = kth - eps * (s[0] - s[-1] + 1e-9)
+    must_keep = int(np.sum(s >= thresh))
+    quota_keep = int(np.ceil(n * min(1.0, max(quota, 0.02))))
+    keep = max(k, min(n, max(must_keep, quota_keep) if quota >= 1.0
+                      else max(k, min(must_keep, quota_keep))))
+    keep = max(keep, k)
+    return 1.0 - keep / n
+
+
+class PruningDNN:
+    """7 → 32 → 16 → 1 sigmoid MLP: predicts the cutoff ratio."""
+
+    def __init__(self, seed: int = 0):
+        self.params = mlp_tower_init(jax.random.PRNGKey(seed), len(FEATURES),
+                                     (32, 16, 1), jnp.float32)
+        self.x_mean = np.zeros(len(FEATURES), np.float32)
+        self.x_std = np.ones(len(FEATURES), np.float32)
+
+        def fwd(params, x):
+            return jax.nn.sigmoid(
+                mlp_tower_apply(params, x, act="silu")[..., 0])
+
+        self._fwd = jax.jit(fwd)
+
+        def loss(params, x, y):
+            return jnp.mean((fwd(params, x) - y) ** 2)
+
+        self._grad = jax.jit(jax.value_and_grad(loss))
+
+    def __call__(self, feats: np.ndarray) -> np.ndarray:
+        x = (np.atleast_2d(feats) - self.x_mean) / self.x_std
+        return np.asarray(self._fwd(self.params, jnp.asarray(x)))
+
+    def fit(self, X: np.ndarray, y: np.ndarray, steps: int = 2000,
+            lr: float = 3e-3, seed: int = 0) -> float:
+        rng = np.random.default_rng(seed)
+        # feature standardization (quota ~O(1) but variance features are not)
+        self.x_mean = X.mean(0)
+        self.x_std = X.std(0) + 1e-6
+        Xn = (X - self.x_mean) / self.x_std
+        Xj, yj = jnp.asarray(Xn), jnp.asarray(y)
+        m = jax.tree.map(jnp.zeros_like, self.params)
+        v = jax.tree.map(jnp.zeros_like, self.params)
+        for step in range(steps):
+            idx = jnp.asarray(rng.integers(0, Xj.shape[0], 256))
+            l, g = self._grad(self.params, Xj[idx], yj[idx])
+            m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+            v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+            self.params = jax.tree.map(
+                lambda p, mm, vv: p - lr * mm / (jnp.sqrt(vv) + 1e-8),
+                self.params, m, v)
+        final, _ = self._grad(self.params, Xj, yj)
+        return float(final)
+
+
+def train_pruning_dnn(n_samples: int = 4000, eps: float = 0.05,
+                      seed: int = 0) -> tuple[PruningDNN, float]:
+    """Generate oracle-labelled synthetic funnel traffic and fit the DNN."""
+    rng = np.random.default_rng(seed)
+    X, y = [], []
+    prev = 0.0
+    for i in range(n_samples):
+        # candidate-count and score distributions matched to the serving
+        # traffic (lognormal funnel sizes; mixed score shapes)
+        n = int(np.clip(rng.lognormal(np.log(120), 1.0), 8, 2000))
+        mode = rng.choice(4)
+        if mode == 0:
+            scores = rng.beta(2, 5, n)
+        elif mode == 1:
+            scores = rng.beta(5, 2, n)
+        elif mode == 2:
+            scores = rng.random(n)
+        else:
+            scores = rng.normal(0.5, 0.15, n).clip(0, 1)
+        quota = float(rng.uniform(0.02, 1.2))
+        cut = oracle_cutoff(scores, quota, eps)
+        X.append(features_from(scores, quota, prev, i))
+        y.append(cut)
+        prev = cut
+    dnn = PruningDNN(seed)
+    mse = dnn.fit(np.stack(X), np.array(y, np.float32))
+    return dnn, mse
+
+
+@dataclass
+class ShedderState:
+    prev_cutoff: float = 0.0
+    shed_events: int = 0
+    kept_events: int = 0
+
+
+class OnlineShedder:
+    """SEDP-stage wrapper: reads queue depth → quota, prunes candidate lists
+    in event payloads (payload["candidates"] = list of (item, score))."""
+
+    def __init__(self, dnn: PruningDNN, capacity_qps_proxy: float = 100.0,
+                 min_keep: int = 12, downstream: str = "rerank"):
+        self.dnn = dnn
+        self.capacity = capacity_qps_proxy
+        self.min_keep = min_keep
+        self.downstream = downstream
+        self.state = ShedderState()
+
+    def quota(self, queue_depth: int) -> float:
+        return float(np.clip(self.capacity / (queue_depth + self.capacity), 0.02, 1.2))
+
+    def op(self, batch, ctx):
+        depth = (ctx.queue_depth(self.downstream)
+                 if hasattr(ctx, "queue_depth") else 0)
+        q = self.quota(depth)
+        for ev in batch:
+            cands = ev.payload.get("candidates", [])
+            if not cands:
+                continue
+            scores = np.array([c[1] for c in cands], np.float32)
+            feats = features_from(scores, q, self.state.prev_cutoff,
+                                  ev.req_id)
+            cut = float(self.dnn(feats[None])[0])
+            keep = max(self.min_keep, int(len(cands) * (1.0 - cut)))
+            order = np.argsort(-scores)
+            kept = [cands[i] for i in order[:keep]]
+            self.state.shed_events += len(cands) - len(kept)
+            self.state.kept_events += len(kept)
+            self.state.prev_cutoff = cut
+            ev.payload["candidates"] = kept
+            ev.meta["cutoff_ratio"] = cut
+        return batch

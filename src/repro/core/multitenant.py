@@ -1,0 +1,64 @@
+"""Multi-tenant extension (paper §4): multiple DNNs in ONE pipeline.
+
+Two production uses:
+  * multi-objective / multi-phase inference — several models share the
+    upstream data processing + sparse parameter access (Service E: CTR, FR,
+    CMT share >80% of feature groups);
+  * A/B testing — a dispatch stage splits traffic between test groups, each
+    an independent SEDP branch on shared infrastructure (no per-variant
+    service deployments, no manual traffic splitting).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.core.sedp import Event
+
+
+@dataclass
+class TrafficSplit:
+    """Deterministic hash-based splitting (stable per user — the standard
+    requirement for A/B assignment)."""
+    groups: dict[str, float]                 # stage-name → traffic fraction
+
+    def __post_init__(self):
+        total = sum(self.groups.values())
+        self._cum = []
+        acc = 0.0
+        for name, frac in self.groups.items():
+            acc += frac / total
+            self._cum.append((acc, name))
+
+    def assign(self, user_id: int) -> str:
+        u = (hash(("ab", user_id)) % 10_000) / 10_000.0
+        for edge, name in self._cum:
+            if u < edge:
+                return name
+        return self._cum[-1][1]
+
+
+def make_dispatch_op(split: TrafficSplit) -> Callable:
+    """SEDP stage op routing each event to its test-group branch."""
+    def op(batch: list[Event], ctx):
+        for ev in batch:
+            ev.route = split.assign(ev.payload["user"])
+            ev.meta["tenant"] = ev.route
+        return batch
+    return op
+
+
+def make_fanout_op(targets: list[str]) -> Callable:
+    """Multi-objective: clone each event to every tenant DNN (they share the
+    already-computed features in the payload by reference)."""
+    def op(batch: list[Event], ctx):
+        out = []
+        for ev in batch:
+            for i, t in enumerate(targets):
+                e = ev if i == 0 else Event(payload=dict(ev.payload),
+                                            req_id=ev.req_id,
+                                            born_at=ev.born_at)
+                e.route = t
+                out.append(e)
+        return out
+    return op

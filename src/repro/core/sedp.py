@@ -1,0 +1,132 @@
+"""Staged Event-Driven Pipeline (paper §4).
+
+  Definition 1: stage processor p = ⟨op, c⟩ — op: unit primitive for one
+  execution stage; c: channel queuing events from upstream processors.
+  Definition 2: SEDP = DAG G = (P, E); all edges into a stage SHARE one
+  channel (join/aggregation semantics).
+
+``SEDP.compile()`` validates the DAG, builds the shared channels, and
+returns an execution plan (topological order + routing table) that the
+executors (repro.core.executors) run fully asynchronously.
+
+Events carry an optional ``route`` so an op can steer each event to a subset
+of its successors — this is how the query cache short-circuits to the
+response stage and how the multi-tenant dispatcher fans traffic to test
+groups (§4 "multi-tenant extension").
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+_uid = itertools.count()
+
+
+@dataclass
+class Event:
+    """One inference task (user-item pair / request) flowing through the DAG."""
+    payload: Any
+    req_id: int = field(default_factory=lambda: next(_uid))
+    route: Optional[str] = None        # next-stage override (None = all succs)
+    born_at: float = 0.0               # set by the executor clock
+    done_at: float = 0.0
+    meta: dict = field(default_factory=dict)
+
+
+@dataclass
+class StageProcessor:
+    """op(batch: list[Event], ctx) -> list[Event]. Tunables (batch size,
+    parallelism) are exactly the paper's per-stage knobs (Table 6)."""
+    name: str
+    op: Callable
+    batch_size: int = 1
+    parallelism: int = 1
+    max_queue: int = 100_000
+    # offline-tunable service-time model (used by SimExecutor):
+    # seconds = base + per_item * n  (amortization is what batch tuning buys)
+    sim_base_s: float = 0.0
+    sim_per_item_s: float = 0.0
+
+
+class GraphError(ValueError):
+    pass
+
+
+@dataclass
+class Plan:
+    stages: dict[str, StageProcessor]
+    succs: dict[str, list[str]]
+    preds: dict[str, list[str]]
+    order: list[str]
+    sources: list[str]
+    sinks: list[str]
+
+
+class SEDP:
+    def __init__(self):
+        self.stages: dict[str, StageProcessor] = {}
+        self.edges: list[tuple[str, str]] = []
+
+    def add_stage(self, name: str, op: Callable, **kw) -> StageProcessor:
+        if name in self.stages:
+            raise GraphError(f"duplicate stage {name!r}")
+        sp = StageProcessor(name, op, **kw)
+        self.stages[name] = sp
+        return sp
+
+    def add_edge(self, src: str, dst: str):
+        for s in (src, dst):
+            if s not in self.stages:
+                raise GraphError(f"unknown stage {s!r}")
+        if (src, dst) in self.edges:
+            raise GraphError(f"duplicate edge {src}->{dst}")
+        self.edges.append((src, dst))
+
+    def chain(self, *names: str):
+        for a, b in zip(names, names[1:]):
+            self.add_edge(a, b)
+
+    def compile(self) -> Plan:
+        """Validate DAG + topo-sort. One channel per stage, shared by all
+        in-edges (Definition 2)."""
+        succs = {n: [] for n in self.stages}
+        preds = {n: [] for n in self.stages}
+        for a, b in self.edges:
+            succs[a].append(b)
+            preds[b].append(a)
+        # Kahn topo sort → cycle detection
+        indeg = {n: len(p) for n, p in preds.items()}
+        frontier = [n for n, d in indeg.items() if d == 0]
+        order = []
+        while frontier:
+            n = frontier.pop()
+            order.append(n)
+            for m in succs[n]:
+                indeg[m] -= 1
+                if indeg[m] == 0:
+                    frontier.append(m)
+        if len(order) != len(self.stages):
+            cyc = [n for n, d in indeg.items() if d > 0]
+            raise GraphError(f"cycle through {cyc}")
+        sources = [n for n in self.stages if not preds[n]]
+        sinks = [n for n in self.stages if not succs[n]]
+        if not sources or not sinks:
+            raise GraphError("SEDP needs at least one source and one sink")
+        # route targets must be real successors
+        return Plan(self.stages, succs, preds, order, sources, sinks)
+
+
+# ------------------------------------------------------------------ helpers
+
+def passthrough(batch: list[Event], ctx) -> list[Event]:
+    return batch
+
+
+def map_op(fn: Callable[[Any], Any]) -> Callable:
+    """Lift an item-level function to a batch op."""
+    def op(batch: list[Event], ctx):
+        for ev in batch:
+            ev.payload = fn(ev.payload)
+        return batch
+    return op

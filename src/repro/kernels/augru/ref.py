@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused AUGRU kernel (matches repro.models.recsys.dien)."""
+import jax
+import jax.numpy as jnp
+
+
+def augru_ref(x, att, w, u, b):
+    """x (B,T,Din), att (B,T), w (Din,3H), u (H,3H), b (3H,) → final h (B,H).
+    Gate order [r | z | n]; AUGRU scales the update gate by attention."""
+    B, T, _ = x.shape
+    H = u.shape[0]
+
+    def step(h, inputs):
+        x_t, a_t = inputs
+        gx = x_t @ w + b
+        gh = h @ u
+        r = jax.nn.sigmoid(gx[:, :H] + gh[:, :H])
+        z = jax.nn.sigmoid(gx[:, H:2 * H] + gh[:, H:2 * H])
+        n = jnp.tanh(gx[:, 2 * H:] + r * gh[:, 2 * H:])
+        z = z * a_t[:, None]
+        h = (1 - z) * h + z * n
+        return h, None
+
+    h, _ = jax.lax.scan(step, jnp.zeros((B, H), x.dtype),
+                        (x.transpose(1, 0, 2), att.T))
+    return h

@@ -1,0 +1,65 @@
+"""Pallas TPU fused candidate scorer: blocked dot + in-kernel per-block
+top-k (the recall phase's 1M-candidate hot loop).
+
+Why fuse: scoring 1M candidates then lax.top_k writes the full (C,) score
+vector to HBM and re-reads it for the sort (two extra sweeps). The kernel
+streams (BC, D) candidate tiles through VMEM, scores them on the MXU
+((BC, D) @ (D, 1)), and keeps only each block's top-k via k iterations of
+masked-argmax IN REGISTERS (exact for k ≤ ~16; k·BC VPU work ≪ the dot).
+HBM output shrinks from C floats to (C/BC)·k value+index pairs; the tiny
+cross-block merge happens in ops.py.
+
+Grid: (C // BC,). VMEM: candidate tile (BC·D·4 ≈ 1 MB @ BC 1024, D 256) +
+query (D,) + (k, ) accumulators.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(c_ref, q_ref, v_ref, i_ref, *, k: int, block_c: int, c_real: int):
+    b = pl.program_id(0)
+    scores = jnp.dot(c_ref[...], q_ref[...],
+                     preferred_element_type=jnp.float32)      # (BC,)
+    base = b * block_c
+    # padding rows (last block) must never win a top-k slot
+    scores = jnp.where(base + jnp.arange(block_c) < c_real, scores, NEG_INF)
+    # exact top-k within the block: k rounds of masked argmax (unrolled)
+    for j in range(k):
+        m = jnp.max(scores)
+        am = jnp.argmax(scores)
+        v_ref[0, j] = m
+        i_ref[0, j] = (base + am).astype(jnp.int32)
+        scores = jnp.where(jnp.arange(block_c) == am, NEG_INF, scores)
+
+
+def candidate_scorer_pallas(cands, query, *, k: int = 8, block_c: int = 1024,
+                            c_real: int = None, interpret: bool = False):
+    """cands (C, D), query (D,) → per-block (n_blocks, k) values + indices."""
+    C, D = cands.shape
+    assert C % block_c == 0, (C, block_c)
+    n_blocks = C // block_c
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k, block_c=block_c,
+                          c_real=c_real if c_real is not None else C),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_c, D), lambda b: (b, 0)),
+            pl.BlockSpec((D,), lambda b: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda b: (b, 0)),
+            pl.BlockSpec((1, k), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_blocks, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cands, query)

@@ -1,0 +1,24 @@
+"""jit wrapper: pad → blocked kernel → tiny cross-block merge."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.candidate_scorer.kernel import candidate_scorer_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_c", "interpret"))
+def candidate_scorer(cands, query, k: int = 8, block_c: int = 1024,
+                     interpret: bool = True):
+    """cands (C, D), query (D,) → exact global (top-k values, indices).
+    Exact because every block keeps its own top-k ≥ any global top-k member."""
+    C, D = cands.shape
+    pad = (-C) % block_c
+    if pad:
+        cands = jnp.pad(cands, ((0, pad), (0, 0)))
+    v, i = candidate_scorer_pallas(cands, query, k=k, block_c=block_c,
+                                   c_real=C, interpret=interpret)
+    vv, pos = jax.lax.top_k(v.reshape(-1), k)
+    return vv, i.reshape(-1)[pos]

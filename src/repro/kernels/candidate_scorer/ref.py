@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused candidate scorer."""
+import jax
+import jax.numpy as jnp
+
+
+def candidate_scorer_ref(cands, query, k: int):
+    """cands (C, D), query (D,) → (topk values desc, topk indices)."""
+    scores = (cands @ query).astype(jnp.float32)
+    v, i = jax.lax.top_k(scores, k)
+    return v, i

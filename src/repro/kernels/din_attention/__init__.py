@@ -1,0 +1,4 @@
+from repro.kernels.din_attention.ops import din_attention
+from repro.kernels.din_attention.ref import din_attention_ref
+
+__all__ = ["din_attention", "din_attention_ref"]

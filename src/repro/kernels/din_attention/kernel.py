@@ -1,0 +1,75 @@
+"""Pallas TPU fused DIN target-attention (local activation unit).
+
+Why fuse: the jnp path materializes (B,T,4D) concat features plus two MLP
+intermediates in HBM — 5 round-trips of (B,T,·) for an op whose useful
+output is (B,D). Fused, one pass: each grid step loads a (BT, T, D) tile of
+history + its (BT, D) targets into VMEM, builds the 4-way feature blocks
+IN REGISTERS, runs the tiny attention MLP on the MXU (weights resident in
+VMEM — ~26 kB for the paper config 72→80→40→1), masks, and accumulates the
+weighted sum. HBM traffic drops from ~(9·T·D + 2·T·H₁ + …) to (T·D + 2·D)
+per row — a ~10× reduction for the paper shapes.
+
+Grid: (B // BT,). VMEM: hist tile BT·T·D·4 ≈ 8·100·18·4 ≈ 58 kB + weights.
+The T and feature dims are zero-padded to the 8×128 TPU tile grid by the
+caller (ops.py) — zero rows produce zero attention weight contributions,
+preserving exactness.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(hist_ref, mask_ref, tgt_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+            w3_ref, b3_ref, out_ref):
+    hist = hist_ref[...]                     # (BT, T, D)
+    tgt = tgt_ref[...]                       # (BT, D)
+    BT, T, D = hist.shape
+    t = jnp.broadcast_to(tgt[:, None, :], (BT, T, D))
+    feat = jnp.concatenate([hist, t, hist - t, hist * t], axis=-1)
+    h = feat.reshape(BT * T, 4 * D)
+    h = jax.nn.silu(jnp.dot(h, w1_ref[...],
+                            preferred_element_type=jnp.float32) + b1_ref[...])
+    h = jax.nn.silu(jnp.dot(h, w2_ref[...],
+                            preferred_element_type=jnp.float32) + b2_ref[...])
+    w = jnp.dot(h, w3_ref[...], preferred_element_type=jnp.float32) + b3_ref[...]
+    w = w.reshape(BT, T) * mask_ref[...]
+    out_ref[...] = jnp.einsum("bt,btd->bd", w, hist.astype(jnp.float32)
+                              ).astype(out_ref.dtype)
+
+
+def din_attention_pallas(hist, mask, target, w1, b1, w2, b2, w3, b3,
+                         *, block_b: int = 8, interpret: bool = False):
+    B, T, D = hist.shape
+    H1, H2 = w1.shape[1], w2.shape[1]
+    assert B % block_b == 0, (B, block_b)
+    grid = (B // block_b,)
+
+    def bmap(i):
+        return (i, 0, 0)
+
+    def bmap2(i):
+        return (i, 0)
+
+    def wmap(i):
+        return (0, 0)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, T, D), bmap),
+            pl.BlockSpec((block_b, T), bmap2),
+            pl.BlockSpec((block_b, D), bmap2),
+            pl.BlockSpec((4 * D, H1), wmap),
+            pl.BlockSpec((H1,), lambda i: (0,)),
+            pl.BlockSpec((H1, H2), wmap),
+            pl.BlockSpec((H2,), lambda i: (0,)),
+            pl.BlockSpec((H2, 1), wmap),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, D), bmap2),
+        out_shape=jax.ShapeDtypeStruct((B, D), hist.dtype),
+        interpret=interpret,
+    )(hist, mask, target, w1, b1, w2, b2, w3, b3)

@@ -1,0 +1,36 @@
+"""jit'd wrapper: pads to TPU tile multiples, calls the fused kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.din_attention.kernel import din_attention_pallas
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_b"))
+def din_attention(hist, mask, target, w1, b1, w2, b2, w3, b3,
+                  interpret: bool = True, block_b: int = 8):
+    """Fused DIN local activation unit. Zero-pads T to 8 and B to block_b;
+    padded history rows have mask 0 → zero contribution (exact)."""
+    B, T, D = hist.shape
+    hist_p = _pad_to(hist, 8, 1)
+    mask_p = _pad_to(mask, 8, 1)
+    pad_b = (-B) % block_b
+    if pad_b:
+        hist_p = jnp.pad(hist_p, ((0, pad_b), (0, 0), (0, 0)))
+        mask_p = jnp.pad(mask_p, ((0, pad_b), (0, 0)))
+        target = jnp.pad(target, ((0, pad_b), (0, 0)))
+    out = din_attention_pallas(hist_p, mask_p, target, w1, b1, w2, b2, w3, b3,
+                               block_b=block_b, interpret=interpret)
+    return out[:B]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused DIN local-activation-unit kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def din_attention_ref(hist, mask, target, w1, b1, w2, b2, w3, b3):
+    """hist (B,T,D), mask (B,T), target (B,D);
+    attention MLP: 4D → H1 → H2 → 1 (silu), weights (4D,H1),(H1,H2),(H2,1).
+    Returns (B, D): activation-weighted sum over history (no softmax —
+    DIN paper §4.3 keeps raw weights)."""
+    t = jnp.broadcast_to(target[:, None], hist.shape)
+    feat = jnp.concatenate([hist, t, hist - t, hist * t], -1)   # (B,T,4D)
+    h = jax.nn.silu(feat @ w1 + b1)
+    h = jax.nn.silu(h @ w2 + b2)
+    w = (h @ w3 + b3)[..., 0] * mask                            # (B,T)
+    return jnp.einsum("bt,btd->bd", w, hist)

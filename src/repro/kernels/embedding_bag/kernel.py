@@ -1,0 +1,64 @@
+"""Pallas TPU embedding-bag: gather + weighted pool, HBM → VMEM row streaming.
+
+TPU adaptation (vs. the GPU gather kernels the recsys literature assumes):
+there is no per-lane random HBM access on TPU — the *grid pipeline* does the
+gather instead. Ids live in SMEM via scalar prefetch
+(PrefetchScalarGridSpec); the TABLE BlockSpec's index_map reads the
+prefetched id for grid cell (b, k) and selects that ROW as the block, so the
+pipeline emitter issues exactly one (1, D) HBM→VMEM DMA per bag member,
+double-buffered across the sequential grid. The output block is revisited
+for all k of one bag (TPU grids are sequential), accumulating the weighted
+sum in VMEM; it is flushed to HBM once per bag.
+
+Grid: (B, K). VMEM working set: 2×(1, D) table rows (double buffer) +
+(1, D) accumulator — D up to ~8k rows fit trivially; MXU is not involved
+(pure VPU multiply-add), which is correct for a bandwidth-bound op.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, w_ref, trow, out_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += trow[...] * w_ref[0, 0].astype(out_ref.dtype)
+
+
+def embedding_bag_pallas(table: jax.Array, ids: jax.Array, weights: jax.Array,
+                         *, interpret: bool = False) -> jax.Array:
+    """table (V, D); ids (B, K) int32; weights (B, K) (0 ⇒ padding).
+    Returns (B, D) weighted sums (combiner handling lives in ops.py)."""
+    B, K = ids.shape
+    V, D = table.shape
+
+    def t_map(b, k, ids_ref):
+        return (ids_ref[b, k], 0)
+
+    def w_map(b, k, ids_ref):
+        return (b, k)
+
+    def o_map(b, k, ids_ref):
+        return (b, 0)
+
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, K),
+            in_specs=[
+                pl.BlockSpec((1, 1), w_map),          # weight scalar
+                pl.BlockSpec((1, D), t_map),          # gathered table row
+            ],
+            out_specs=pl.BlockSpec((1, D), o_map),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
+        interpret=interpret,
+    )(ids, weights, table)

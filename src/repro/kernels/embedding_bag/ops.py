@@ -1,0 +1,24 @@
+"""jit'd wrapper for the embedding_bag Pallas kernel (+combiner/vjp)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+@functools.partial(jax.jit, static_argnames=("combiner", "interpret"))
+def embedding_bag(table, ids, weights=None, combiner: str = "sum",
+                  interpret: bool = True):
+    """Drop-in EmbeddingBag. interpret=True on CPU (container); on TPU pass
+    interpret=False for the compiled kernel."""
+    if weights is None:
+        weights = jnp.ones(ids.shape, jnp.float32)
+    ids = jnp.clip(ids, 0, table.shape[0] - 1).astype(jnp.int32)
+    out = embedding_bag_pallas(table, ids, weights, interpret=interpret)
+    if combiner == "mean":
+        out = out / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9).astype(out.dtype)
+    return out

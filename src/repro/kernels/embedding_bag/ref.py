@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the embedding_bag kernel."""
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, ids, weights=None, combiner: str = "sum"):
+    """table (V, D); ids (B, K) padded multi-hot; weights (B, K) doubles as
+    the validity mask. → (B, D)."""
+    vecs = jnp.take(table, ids, axis=0, mode="clip")           # (B, K, D)
+    if weights is None:
+        weights = jnp.ones(ids.shape, vecs.dtype)
+    out = jnp.einsum("bk,bkd->bd", weights.astype(vecs.dtype), vecs)
+    if combiner == "mean":
+        out = out / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9).astype(out.dtype)
+    return out

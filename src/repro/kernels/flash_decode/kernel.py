@@ -1,0 +1,95 @@
+"""Pallas TPU flash-decode: split-K online-softmax decode attention.
+
+One new token vs an S-long KV cache (decode_32k / long_500k serving shapes).
+The jnp path materializes (B,H,G,S) scores in HBM; at S=512k that's the
+whole HBM budget in traffic. This kernel streams the cache once:
+
+  grid = (B, H, S // BK)   — sequential minor axis → running accumulation
+  per step: K tile (BK, D) and V tile (BK, D) DMA into VMEM (double-
+  buffered by the pipeline); scores for the G query heads of this kv head
+  are computed on the MXU ((G, D) @ (D, BK)); an online-softmax carry
+  (m, l, acc) lives in VMEM scratch across the S tiles; the final tile
+  normalizes and writes (G, D) out.
+
+Masking: tiles beyond cache_len are skipped entirely (pl.when on the
+scalar-prefetched length) — decode cost is O(cache_len), not O(S_max).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, block_k: int, scale: float):
+    s_idx = pl.program_id(2)
+    n_s = pl.num_programs(2)
+    cache_len = len_ref[0]
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start = s_idx * block_k
+
+    @pl.when(start < cache_len)
+    def _step():
+        q = q_ref[0, 0]                           # (G, D)
+        k = k_ref[0, :, 0, :]                     # (BK, D)
+        v = v_ref[0, :, 0, :]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        s = jnp.where(pos < cache_len, s, NEG_INF)      # (G, BK)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def flash_decode_pallas(q, k_cache, v_cache, cache_len, *, block_k: int = 512,
+                        interpret: bool = False):
+    """q (B,H,G,D); caches (B,S,H,D); cache_len scalar int32 → (B,H,G,D)."""
+    B, H, G, D = q.shape
+    S = k_cache.shape[1]
+    assert S % block_k == 0, (S, block_k)
+    grid = (B, H, S // block_k)
+    scale = 1.0 / np.sqrt(D)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, block_k=block_k, scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D), lambda b, h, s, L: (b, h, 0, 0)),
+                pl.BlockSpec((1, block_k, 1, D), lambda b, h, s, L: (b, s, h, 0)),
+                pl.BlockSpec((1, block_k, 1, D), lambda b, h, s, L: (b, s, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, s, L: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, G, D), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(cache_len, jnp.int32).reshape(1), q, k_cache, v_cache)

@@ -1,0 +1,23 @@
+"""jit'd wrapper for flash-decode."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.kernel import flash_decode_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_k"))
+def flash_decode(q, k_cache, v_cache, cache_len, interpret: bool = True,
+                 block_k: int = 512):
+    """q (B,H,G,D) one new token per sequence; caches (B,S,H,D);
+    cache_len: valid prefix. Pads S to block_k (masked)."""
+    B, S, H, D = k_cache.shape
+    pad = (-S) % block_k
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return flash_decode_pallas(q, k_cache, v_cache, cache_len,
+                               block_k=block_k, interpret=interpret)

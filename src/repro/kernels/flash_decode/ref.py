@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for GQA flash-decode (matches models.attention.decode_attention)."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_decode_ref(q, k_cache, v_cache, cache_len):
+    """q (B,H,G,D); caches (B,S,H,D); cache_len scalar → (B,H,G,D)."""
+    B, H, G, D = q.shape
+    S = k_cache.shape[1]
+    s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / np.sqrt(D)
+    mask = jnp.arange(S) < cache_len
+    s = jnp.where(mask[None, None, None, :], s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bhgs,bshd->bhgd", p,
+                      v_cache.astype(jnp.float32)).astype(q.dtype)

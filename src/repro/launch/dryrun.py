@@ -1,0 +1,166 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (The two lines above MUST precede any jax import: jax locks the device
+# count at first init. Tests may shrink the placeholder fleet:)
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: .lower().compile() every (arch × shape × mesh) cell on
+the production mesh and record memory/cost/collective analyses.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # subprocesses
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+V5E = {"peak_flops": 197e12, "hbm_gbps": 819e9, "ici_gbps": 50e9,
+       "hbm_bytes": 16 * 1024**3}
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             out_dir: str, mesh_override=None, save_hlo: bool = False) -> dict:
+    import jax
+    from repro import runtime
+    from repro.configs import registry
+    from repro.launch import hlo_analysis
+    from repro.launch.mesh import make_mesh, make_production_mesh
+    from repro.launch.specs import build_cell
+
+    if mesh_override:
+        shape, axes = mesh_override
+        mesh = make_mesh(shape, axes)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "n_devices": n_dev, "ok": False}
+    t0 = time.time()
+    try:
+        with runtime.use_mesh(mesh):
+            cell = build_cell(arch_id, shape_name, mesh)
+            rec["meta"] = {k: (float(v) if isinstance(v, (int, float)) else v)
+                           for k, v in cell.meta.items()}
+            jitted = cell.jitted(mesh)
+            lowered = jitted.lower(*cell.args)
+            rec["t_lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["t_compile_s"] = round(time.time() - t1, 2)
+
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "code_bytes": mem.generated_code_size_in_bytes,
+            }
+            hbm = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                   + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+            rec["memory"]["hbm_per_device"] = hbm
+            rec["memory"]["fits_v5e"] = bool(hbm < V5E["hbm_bytes"])
+            # XLA:CPU float-normalizes bf16 arithmetic to f32, so every
+            # bf16 temp/carry doubles vs the TPU lowering (verified via
+            # buffer-assignment dump: the dominant temps are f32 versions
+            # of bf16 tensors). Report a TPU-side estimate alongside.
+            cfgobj = registry.get(arch_id).config
+            bf16 = getattr(cfgobj, "param_dtype", "float32") == "bfloat16"
+            factor = 0.55 if bf16 else 1.0
+            hbm_tpu = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                       - mem.alias_size_in_bytes
+                       + mem.temp_size_in_bytes * factor)
+            rec["memory"]["hbm_per_device_tpu_est"] = int(hbm_tpu)
+            rec["memory"]["fits_v5e_tpu_est"] = bool(hbm_tpu < V5E["hbm_bytes"])
+
+            ca = compiled.cost_analysis() or {}
+            rec["xla_cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                        if k in ("flops", "bytes accessed")}
+            txt = compiled.as_text()
+            rec["hlo"] = hlo_analysis.analyze_hlo(txt, n_dev)
+            if save_hlo:
+                with open(f"{out_dir}/{arch_id}__{shape_name}__{mesh_name}.hlo",
+                          "w") as f:
+                    f.write(txt)
+            rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-3000:]
+    rec["t_total_s"] = round(time.time() - t0, 2)
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = f"{out_dir}/{arch_id}__{shape_name}__{mesh_name}.json"
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def run_all(multi_pod: bool, out_dir: str, only=None, timeout=3600):
+    """One subprocess per cell (isolates compile RAM; survives one bad cell)."""
+    from repro.configs import registry
+    results = []
+    for arch in registry.ARCHS.values():
+        for shape in arch.shapes:
+            if only and arch.arch_id not in only:
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch.arch_id, "--shape", shape.name,
+                   "--out", out_dir]
+            if multi_pod:
+                cmd.append("--multi-pod")
+            t0 = time.time()
+            try:
+                p = subprocess.run(cmd, capture_output=True, text=True,
+                                   timeout=timeout)
+                ok = p.returncode == 0
+                tail = (p.stdout + p.stderr)[-400:] if not ok else ""
+            except subprocess.TimeoutExpired:
+                ok, tail = False, "TIMEOUT"
+            results.append((arch.arch_id, shape.name, ok, round(time.time() - t0, 1)))
+            print(f"[{'OK' if ok else 'FAIL'}] {arch.arch_id} × {shape.name} "
+                  f"({results[-1][3]}s) {tail}", flush=True)
+    n_ok = sum(1 for r in results if r[2])
+    print(f"\n{n_ok}/{len(results)} cells compiled "
+          f"({'multi-pod 2x16x16' if multi_pod else 'single-pod 16x16'})")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--mesh", help="override, e.g. 2x4 (with pod: 2x2x4)")
+    args = ap.parse_args()
+
+    if args.all:
+        run_all(args.multi_pod, args.out)
+        return
+    mesh_override = None
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("pod", "data", "model")[-len(dims):]
+        mesh_override = (dims, axes)
+    rec = run_cell(args.arch, args.shape, args.multi_pod, args.out,
+                   mesh_override=mesh_override, save_hlo=args.save_hlo)
+    print(json.dumps({k: v for k, v in rec.items() if k != "traceback"},
+                     indent=1, default=str))
+    if not rec["ok"]:
+        print(rec.get("traceback", ""), file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,244 @@
+"""HLO-text analyzer for the roofline: FLOPs / bytes / collective traffic
+with correct while-loop (lax.scan) trip-count multipliers.
+
+Motivation: ``compiled.cost_analysis()`` counts a while body exactly ONCE
+(verified empirically), so scan-over-layers models would be understated by
+~n_layers×. We therefore parse the *partitioned* ``compiled.as_text()``
+(per-device shapes), build the computation call graph, read each while op's
+``known_trip_count`` backend config (fallback: max s32 constant in the
+condition computation), and accumulate:
+
+  * flops            — dot ops: 2 · prod(out) · prod(contracting dims)
+  * bytes            — Σ over top-level ops of (output + operand bytes);
+                       fusion internals excluded (a fusion reads its operands
+                       from HBM and writes its output — the TPU model)
+  * collective_bytes — per-device ICI traffic with ring-model factors:
+                       all-reduce 2·b·(g-1)/g, all-gather/all-to-all b·(g-1)/g,
+                       reduce-scatter b_out·(g-1), collective-permute b
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f4e2m1fn": 1,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^{]*\))?\s*->.*\{\s*$")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "iota", "while", "conditional",
+                   "broadcast", "partition-id", "replica-id"}
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    kind: str
+    rest: str          # everything after the opening paren (operands + attrs)
+    operands: list = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: list = field(default_factory=list)
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = Computation(m.group(2), bool(m.group(1)))
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, kind, rest = m.groups()
+        operands = re.findall(r"%([\w\.\-]+)", rest.split(" metadata=")[0])
+        cur.ops.append(Op(name, type_str, kind, rest, operands))
+    return comps
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", rest)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _trip_count(op: Op, comps: dict[str, Computation]) -> tuple[int, bool]:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.rest)
+    if m:
+        return int(m.group(1)), True
+    mc = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+    if mc and mc.group(1) in comps:
+        consts = []
+        for o in comps[mc.group(1)].ops:
+            mk = re.search(r"constant\((\d+)\)", o.rest)
+            if o.kind == "constant" and mk:
+                consts.append(int(mk.group(1)))
+        if consts:
+            return max(consts), False
+    return 1, False
+
+
+def _called(op: Op) -> list[str]:
+    out = []
+    for attr in ("calls", "body"):
+        m = re.search(attr + r"=%?([\w\.\-]+)", op.rest)
+        if m:
+            out.append(m.group(1))
+    m = re.search(r"branch_computations=\{([^}]*)\}", op.rest)
+    if m:
+        out += re.findall(r"%?([\w\.\-]+)", m.group(1))
+    return out
+
+
+_COLL_RE = re.compile("^(" + "|".join(_COLLECTIVES) + r")(-start)?$")
+
+
+def _collective_traffic(kind: str, out_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * out_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return float(out_bytes) * (g - 1)
+    if kind in ("all-gather", "all-to-all"):
+        return float(out_bytes) * (g - 1) / g
+    return float(out_bytes)          # collective-permute
+
+
+class Analyzer:
+    def __init__(self, text: str, n_devices: int):
+        self.comps = parse_module(text)
+        self.n_devices = n_devices
+        self.warnings: list[str] = []
+        self._memo: dict[str, tuple] = {}
+        # symbol table per computation: op name -> bytes
+        self._sym: dict[str, dict[str, int]] = {
+            c.name: {o.name: shape_bytes(o.type_str) for o in c.ops}
+            for c in self.comps.values()}
+        self._types: dict[str, dict[str, str]] = {
+            c.name: {o.name: o.type_str for o in c.ops}
+            for c in self.comps.values()}
+
+    def _dot_flops(self, comp: Computation, op: Op) -> float:
+        _, out_dims = _shape_dims(op.type_str)
+        out_prod = 1
+        for d in out_dims:
+            out_prod *= d
+        mlhs = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+        lhs_name = op.operands[0] if op.operands else None
+        lhs_type = self._types[comp.name].get(lhs_name, "")
+        _, lhs_dims = _shape_dims(lhs_type)
+        k = 1
+        if mlhs and lhs_dims:
+            for d in mlhs.group(1).split(","):
+                if d:
+                    k *= lhs_dims[int(d)]
+        return 2.0 * out_prod * k
+
+    def analyze_comp(self, name: str, *, top_level: bool = True) -> tuple:
+        """Returns (flops, bytes, coll_bytes, coll_by_kind) for ONE invocation."""
+        memo_key = name
+        if memo_key in self._memo:
+            return self._memo[memo_key]
+        comp = self.comps.get(name)
+        if comp is None:
+            return (0.0, 0.0, 0.0, {})
+        flops = byts = coll = 0.0
+        by_kind: dict[str, float] = {}
+        sym = self._sym[comp.name]
+        for op in comp.ops:
+            mult = 1
+            if op.kind == "while":
+                mult, known = _trip_count(op, self.comps)
+                if not known and mult == 1:
+                    self.warnings.append(f"while {op.name}: trip count unknown")
+            if op.kind == "dot":
+                flops += self._dot_flops(comp, op)
+            mcoll = _COLL_RE.match(op.kind)
+            if mcoll:
+                g = _group_size(op.rest, self.n_devices)
+                ob = shape_bytes(op.type_str)
+                if mcoll.group(2):           # -start returns (operand, result)
+                    ob = ob / 2
+                t = _collective_traffic(mcoll.group(1), ob, g)
+                coll += t
+                by_kind[mcoll.group(1)] = by_kind.get(mcoll.group(1), 0.0) + t
+            # recurse into called computations
+            for child in _called(op):
+                f, b, c, bk = self.analyze_comp(child, top_level=False)
+                is_fusion = op.kind in ("fusion", "call", "custom-call")
+                flops += mult * f
+                coll += mult * c
+                for k, v in bk.items():
+                    by_kind[k] = by_kind.get(k, 0.0) + mult * v
+                if not is_fusion:            # while/conditional body bytes count
+                    byts += mult * b
+            # byte accounting at this computation's top level
+            if op.kind not in _SKIP_BYTES_OPS and not op.kind.endswith("-done"):
+                ob = shape_bytes(op.type_str)
+                ib = sum(sym.get(o, 0) for o in op.operands)
+                byts += ob + ib
+        out = (flops, byts, coll, by_kind)
+        self._memo[memo_key] = out
+        return out
+
+    def analyze(self) -> dict:
+        entry = next((c for c in self.comps.values() if c.is_entry), None)
+        if entry is None:
+            return {"error": "no ENTRY computation"}
+        f, b, c, bk = self.analyze_comp(entry.name)
+        return {"flops_per_device": f, "bytes_per_device": b,
+                "collective_bytes_per_device": c,
+                "collectives_by_kind": bk,
+                "warnings": self.warnings[:20]}
+
+
+def analyze_hlo(text: str, n_devices: int) -> dict:
+    return Analyzer(text, n_devices).analyze()

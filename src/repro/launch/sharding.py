@@ -1,0 +1,237 @@
+"""PartitionSpec rules: params, optimizer state, inputs, KV caches.
+
+Encodes the distribution design of DESIGN.md §5:
+  * LM dense: batch → ("pod","data"); TP on ``model`` for d_ff / attention
+    heads (replicated where head counts don't divide 16 — smollm fully,
+    qwen3/starcoder2 kv projections); vocab (embed + head) on ``model``.
+  * MLA: q_b/k_b/v_b shard the head dim (16 | H for both deepseeks); the
+    latent projections (wkv_a, wq_a) replicate (tiny).
+  * MoE: experts on ``model``, expert d_ff on ``data`` (2-D expert weights);
+    router replicated.
+  * RecSys tables: rows on flat ("data","model"); dense parts replicated.
+  * KV caches: sequence dim on ``model`` (batch on data axes), or on
+    ("data","model") for batch-1 long-context — distributed-softmax decode.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import GNNConfig, LMConfig, RecsysConfig
+
+
+def _names(path) -> list[str]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+    return out
+
+
+def _divides(n: int, mesh: Mesh, axis: str) -> bool:
+    return n % mesh.shape.get(axis, 1) == 0
+
+
+# ------------------------------------------------------------------ LM
+
+def _lm_leaf_spec(names: list[str], leaf, cfg: LMConfig, mesh: Mesh) -> P:
+    stacked = ("layers" in names or "dense_layers" in names) and "mtp" not in names
+    pre = (None,) if stacked else ()
+    name = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    nm = mesh.shape.get("model", 1)
+    H, Hkv, D = cfg.n_heads, cfg.n_kv, cfg.d_head
+
+    def spec(*s):
+        return P(*(pre + s))
+
+    if "embed" in names:
+        return P("model", None) if _divides(cfg.vocab, mesh, "model") else P(None, None)
+    if "lm_head" in names:
+        return P(None, "model") if _divides(cfg.vocab, mesh, "model") else P(None, None)
+    if name in ("scale", "bias"):          # norms (incl. q_norm/k_norm/kv_norm)
+        return spec(*(None,) * (leaf.ndim - len(pre)))
+    if parent == "moe":
+        f_ok = _divides(cfg.moe.d_ff_expert, mesh, "data")
+        fs = "data" if f_ok else None
+        return {"router": spec(None, None),
+                "w1": spec("model", None, fs), "w3": spec("model", None, fs),
+                "w2": spec("model", fs, None)}[name]
+    if parent in ("mlp", "shared"):        # dense FFN / shared experts: TP on f
+        d_ff = leaf.shape[-1] if name in ("w1", "w3") else leaf.shape[-2]
+        ok = d_ff % nm == 0
+        if name in ("w1", "w3"):
+            return spec(None, "model") if ok else spec(None, None)
+        return spec("model", None) if ok else spec(None, None)
+    if parent == "attn" or name in ("wq", "wk", "wv", "wo", "wq_a", "wq_b",
+                                    "wkv_a", "wk_b", "wv_b"):
+        if cfg.mla:
+            h_ok = H % nm == 0
+            hs = "model" if h_ok else None
+            return {"wq": spec(None, hs), "wq_a": spec(None, None),
+                    "wq_b": spec(None, hs), "wkv_a": spec(None, None),
+                    "wk_b": spec(None, hs), "wv_b": spec(None, hs),
+                    "wo": spec(hs, None)}.get(name, spec(*(None,) * (leaf.ndim - len(pre))))
+        q_ok = H % nm == 0
+        kv_ok = Hkv % nm == 0
+        return {"wq": spec(None, "model" if q_ok else None),
+                "wk": spec(None, "model" if kv_ok else None),
+                "wv": spec(None, "model" if kv_ok else None),
+                "wo": spec("model" if q_ok else None, None)}.get(
+                    name, spec(*(None,) * (leaf.ndim - len(pre))))
+    if name == "proj":                     # mtp projection
+        return P(None, None)
+    return spec(*(None,) * (leaf.ndim - len(pre)))
+
+
+def lm_param_specs(params_shape: Any, cfg: LMConfig, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _lm_leaf_spec(_names(path), leaf, cfg, mesh),
+        params_shape)
+
+
+# ------------------------------------------------------------- recsys/gnn
+
+def recsys_param_specs(params_shape: Any, cfg: RecsysConfig, mesh: Mesh):
+    n_shards = mesh.shape.get("data", 1) * mesh.shape.get("model", 1)
+
+    def leaf_spec(path, leaf):
+        names = _names(path)
+        if "tables" in names and leaf.ndim == 2 and leaf.shape[0] % n_shards == 0:
+            return P(("data", "model"), None)
+        return P(*(None,) * leaf.ndim)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def gnn_param_specs(params_shape: Any, cfg: GNNConfig, mesh: Mesh):
+    return jax.tree.map(lambda leaf: P(*(None,) * leaf.ndim), params_shape,
+                        is_leaf=lambda x: hasattr(x, "ndim"))
+
+
+def param_specs(params_shape, cfg, mesh: Mesh):
+    if isinstance(cfg, LMConfig):
+        return lm_param_specs(params_shape, cfg, mesh)
+    if isinstance(cfg, RecsysConfig):
+        return recsys_param_specs(params_shape, cfg, mesh)
+    return gnn_param_specs(params_shape, cfg, mesh)
+
+
+# ------------------------------------------------------------- ZeRO grads
+
+def zero_specs(params_shape: Any, pspecs: Any, mesh: Mesh,
+               min_size: int = 1 << 20) -> Any:
+    """ZeRO-2 sharding for gradient accumulators + optimizer state: add the
+    ``data`` axis to the largest unsharded, divisible dim of every big leaf
+    whose spec doesn't already use it. Params keep their compute sharding;
+    grads are reduce-scattered into this spec and the optimizer update runs
+    sharded (GSPMD all-gathers the updated params once per step)."""
+    nd = mesh.shape.get("data", 1)
+    if nd <= 1:
+        return pspecs
+
+    def one(leaf, spec: P) -> P:
+        if int(np.prod(leaf.shape)) < min_size:
+            return spec
+        used = set()
+        for s in spec:
+            if s is None:
+                continue
+            for a in (s if isinstance(s, tuple) else (s,)):
+                used.add(a)
+        if "data" in used:
+            return spec
+        entries = list(spec) + [None] * (leaf.ndim - len(tuple(spec)))
+        cands = [i for i in range(leaf.ndim)
+                 if entries[i] is None and leaf.shape[i] % nd == 0]
+        if not cands:
+            return spec
+        dim = max(cands, key=lambda i: leaf.shape[i])
+        entries[dim] = "data"
+        return P(*entries)
+
+    return jax.tree.map(one, params_shape, pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# -------------------------------------------------------- optimizer state
+
+def opt_state_specs(opt_state_shape: Any, params_shape: Any, pspecs: Any):
+    """Infer optimizer-state specs structurally: any state leaf whose shape
+    matches a param's shape/prefix inherits the param spec (adamw m/v,
+    adafactor vr/vc, rowwise accumulators); scalars replicate."""
+    flat_params = {tuple(_names(p)): (leaf, spec) for (p, leaf), (_, spec) in zip(
+        jax.tree_util.tree_flatten_with_path(params_shape)[0],
+        jax.tree_util.tree_flatten_with_path(pspecs)[0])}
+
+    by_shape: dict[tuple, P] = {}
+    for shape_spec in flat_params.values():
+        leaf, spec = shape_spec
+        by_shape.setdefault(tuple(leaf.shape), spec)
+        # factored / rowwise variants
+        if leaf.ndim >= 2:
+            sp = tuple(spec) + (None,) * (leaf.ndim - len(tuple(spec)))
+            by_shape.setdefault(tuple(leaf.shape[:-1]), P(*sp[:-1]))
+            by_shape.setdefault(tuple(leaf.shape[:-2] + leaf.shape[-1:]),
+                                P(*(sp[:-2] + sp[-1:])))
+            by_shape.setdefault(tuple(leaf.shape[:1]), P(sp[0]))
+
+    def leaf_spec(leaf):
+        if leaf.ndim == 0:
+            return P()
+        return by_shape.get(tuple(leaf.shape), P(*(None,) * leaf.ndim))
+
+    return jax.tree.map(leaf_spec, opt_state_shape,
+                        is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "dtype"))
+
+
+# ----------------------------------------------------------------- inputs
+
+def batch_axes_of(mesh: Mesh) -> tuple:
+    axes = tuple(a for a in ("pod", "data") if mesh.shape.get(a, 1) > 1)
+    return axes or ("data",)
+
+
+def data_size(mesh: Mesh) -> int:
+    return mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)
+
+
+def batched_spec(mesh: Mesh, shape: tuple, extra_axes: int | None = None) -> P:
+    """Shard dim0 over the data axes when divisible, else replicate."""
+    nd = len(shape) if extra_axes is None else extra_axes + 1
+    if shape and shape[0] % data_size(mesh) == 0 and shape[0] >= data_size(mesh):
+        return P(batch_axes_of(mesh), *(None,) * (nd - 1))
+    return P(*(None,) * nd)
+
+
+def edge_spec(mesh: Mesh, ndim: int) -> P:
+    return P(("data", "model"), *(None,) * (ndim - 1))
+
+
+def kv_cache_specs(cfg: LMConfig, batch: int, mesh: Mesh):
+    """(a, b, length) specs — sequence-sharded decode caches."""
+    if batch % data_size(mesh) == 0 and batch >= data_size(mesh):
+        b_ax, s_ax = batch_axes_of(mesh), ("model",)
+    else:
+        b_ax, s_ax = (), tuple(a for a in ("pod", "data", "model")
+                               if mesh.shape.get(a, 1) > 1)
+    bspec = b_ax if b_ax else None
+    if cfg.mla:
+        a = P(None, bspec, s_ax, None)
+        b = P(None, bspec, s_ax, None)
+    else:
+        a = P(None, bspec, s_ax, None, None)
+        b = P(None, bspec, s_ax, None, None)
+    return a, b, P()
+
+
+def to_named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,326 @@
+"""Cell builder: (arch × shape × mesh) → step fn + abstract inputs +
+shardings + analytic MODEL_FLOPS. The dry-run, roofline, and launcher all
+consume Cells; nothing here allocates device memory (ShapeDtypeStruct only).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import GNNConfig, LMConfig, RecsysConfig, ShapeSpec
+from repro.launch import sharding as shr
+from repro.models import schnet, transformer
+from repro.models.recsys import dien, din, mind, towers
+from repro.train import optimizer as opt_lib
+from repro.train.train_step import build_train_step
+
+REC_MODULES = {"two_tower": towers, "mind": mind, "din": din, "dien": dien}
+
+S32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+F32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.float32)
+
+
+@dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    fn: Callable                    # positional args match .args
+    args: tuple                     # pytrees of ShapeDtypeStruct
+    in_specs: tuple                 # pytrees of PartitionSpec
+    out_specs: Any
+    donate: tuple = ()
+    meta: dict = field(default_factory=dict)
+
+    def jitted(self, mesh: Mesh):
+        return jax.jit(self.fn,
+                       in_shardings=shr.to_named(mesh, self.in_specs),
+                       out_shardings=shr.to_named(mesh, self.out_specs),
+                       donate_argnums=self.donate)
+
+
+def abstract_params(init_fn) -> Any:
+    return jax.eval_shape(lambda: init_fn(jax.random.PRNGKey(0)))
+
+
+# ------------------------------------------------------------------ LM
+
+def _lm_micro(cfg: LMConfig, batch: int, mesh: Mesh) -> int:
+    """Grad-accum microbatches: hold ~1-4 sequences per data shard."""
+    per_shard = {"deepseek-v3-671b": 1, "qwen3-8b": 2, "starcoder2-7b": 2,
+                 "deepseek-v2-lite-16b": 4, "smollm-135m": 2}.get(cfg.name, 2)
+    ds = shr.data_size(mesh)
+    n = max(1, batch // (per_shard * ds))
+    while batch % n or (batch // n) % ds:
+        n -= 1
+    return max(1, n)
+
+
+def lm_model_flops(cfg: LMConfig, shape: ShapeSpec) -> float:
+    n_active = cfg.active_param_count()
+    d = shape.dims
+    if shape.kind == "train":
+        return 6.0 * n_active * d["seq_len"] * d["global_batch"]
+    if shape.kind == "prefill":
+        return 2.0 * n_active * d["seq_len"] * d["global_batch"]
+    return 2.0 * n_active * d["global_batch"]       # decode: 1 token/seq
+
+
+def lm_model_bytes(cfg: LMConfig, shape: ShapeSpec, n_dev: int) -> float:
+    """Analytic minimum HBM traffic per device per step (roofline floor):
+    weights read once + KV cache read (decode) / activations (train)."""
+    d = shape.dims
+    B, S = d["global_batch"], d["seq_len"]
+    bpp = 2 if cfg.param_dtype == "bfloat16" else 4
+    w = cfg.active_param_count() * bpp
+    if cfg.mla:
+        per_tok = (cfg.mla.kv_lora + cfg.mla.d_rope) * bpp * cfg.n_layers
+    else:
+        per_tok = 2 * cfg.n_kv * cfg.d_head * bpp * cfg.n_layers
+    if shape.kind in ("decode", "decode_long"):
+        return (w + B * S * per_tok) / n_dev
+    if shape.kind == "prefill":
+        return (w + 3 * B * S * cfg.d_model * bpp * cfg.n_layers) / n_dev
+    # train: params+grads+opt traffic (~3 weight passes) + layer activations
+    return (3 * w * 3 + 4 * B * S * cfg.d_model * bpp * cfg.n_layers) / n_dev
+
+
+def build_lm_cell(arch, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    cfg: LMConfig = arch.config
+    dims = shape.dims
+    B, S = dims["global_batch"], dims["seq_len"]
+    params = abstract_params(lambda k: transformer.init(k, cfg))
+    pspecs = shr.param_specs(params, cfg, mesh)
+    meta = {"model_flops": lm_model_flops(cfg, shape),
+            "model_bytes_per_device": lm_model_bytes(cfg, shape, mesh.size),
+            "param_dtype": cfg.param_dtype,
+            "params": cfg.param_count(), "active_params": cfg.active_param_count()}
+
+    if shape.kind == "train":
+        n_micro = _lm_micro(cfg, B, mesh)
+        opt = opt_lib.for_family("lm", cfg.param_count())
+        # ZeRO-2: grad accumulator + optimizer state pick up an extra `data`
+        # sharding; updated params all-gather back to the compute sharding.
+        zspecs = shr.zero_specs(params, pspecs, mesh)
+        if getattr(cfg, "fsdp_params", False):
+            # ZeRO-3: params themselves stay data-sharded; each layer
+            # re-gathers its weights on use (GSPMD inserts the all-gather)
+            pspecs = zspecs
+        step, opt_init = build_train_step(
+            lambda p, toks: transformer.lm_loss(p, toks, cfg), opt,
+            n_micro=n_micro, grad_shardings=shr.to_named(mesh, zspecs))
+        opt_state = jax.eval_shape(opt_init, params)
+        ospecs = shr.opt_state_specs(opt_state, params, zspecs)
+        toks = S32((B, S))
+        tspec = shr.batched_spec(mesh, (B, S))
+        meta["n_micro"] = n_micro
+        return Cell(arch.arch_id, shape.name, step,
+                    (params, opt_state, toks),
+                    (pspecs, ospecs, tspec),
+                    (pspecs, ospecs, P()),
+                    donate=(0, 1), meta=meta)
+
+    if shape.kind == "prefill":
+        ca, cb, cl = shr.kv_cache_specs(cfg, B, mesh)
+        fn = lambda p, toks: transformer.prefill(p, toks, cfg, smax=S)
+        toks = S32((B, S))
+        logits_spec = shr.batched_spec(mesh, (B, cfg.vocab))
+        return Cell(arch.arch_id, shape.name, fn, (params, toks),
+                    (pspecs, shr.batched_spec(mesh, (B, S))),
+                    (logits_spec, transformer.KVCache(a=ca, b=cb, length=cl)),
+                    meta=meta)
+
+    # decode / decode_long: one new token against a seq_len KV cache
+    cache = transformer.KVCache.shapes(cfg, B, S)
+    ca, cb, cl = shr.kv_cache_specs(cfg, B, mesh)
+    cache_specs = transformer.KVCache(a=ca, b=cb, length=cl)
+    fn = lambda p, c, toks: transformer.decode_step(p, c, toks, cfg)
+    toks = S32((B, 1))
+    logits_spec = shr.batched_spec(mesh, (B, cfg.vocab))
+    return Cell(arch.arch_id, shape.name, fn, (params, cache, toks),
+                (pspecs, cache_specs, shr.batched_spec(mesh, (B, 1))),
+                (logits_spec, cache_specs),
+                donate=(1,), meta=meta)
+
+
+# ------------------------------------------------------------------ GNN
+
+def gnn_model_flops(cfg: GNNConfig, n_nodes: int, n_edges: int, d_in: int,
+                    train: bool = True) -> float:
+    h, r = cfg.d_hidden, cfg.n_rbf
+    per_edge = 2 * (r * h + h * h) + 2 * h
+    per_node = 2 * (2 * h * h)
+    fwd = cfg.n_interactions * (n_edges * per_edge + n_nodes * per_node) \
+        + 2 * n_nodes * d_in * h
+    return (3.0 if train else 1.0) * fwd
+
+
+def build_gnn_cell(arch, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    cfg: GNNConfig = arch.config
+    d = shape.dims
+    if shape.kind == "graph_batched":
+        N = d["batch"] * d["n_nodes"]
+        E = d["batch"] * d["n_edges"]
+        n_graphs = d["batch"]
+        inputs = {"atom_z": S32((N,)), "positions": F32((N, 3)),
+                  "edges": S32((E, 2)), "edge_dist": F32((E,)),
+                  "graph_ids": S32((N,))}
+        targets = F32((d["batch"],))
+        init_fn = lambda k: schnet.init(k, cfg)
+        d_in = cfg.d_hidden
+    else:
+        if shape.kind == "graph_mini":
+            f1, f2 = d["fanout"]
+            bn = d["batch_nodes"]
+            N = bn + bn * f1 + bn * f1 * f2
+            E = bn * f1 + bn * f1 * f2
+        else:
+            N, E = d["n_nodes"], d["n_edges"]
+        # pad the edge list to the multi-pod mesh multiple; sentinel edges
+        # (src=dst=N) drain into the stripped sentinel node row
+        E = -(-E // 512) * 512
+        inputs = {"node_feat": F32((N, d["d_feat"])), "edges": S32((E, 2)),
+                  "edge_dist": F32((E,)), "graph_ids": S32((N,))}
+        n_graphs = 1
+        targets = F32((1,))
+        init_fn = lambda k: schnet.init(k, cfg, d_feat_in=d["d_feat"])
+        d_in = d["d_feat"]
+
+    params = abstract_params(init_fn)
+    pspecs = shr.param_specs(params, cfg, mesh)
+    opt = opt_lib.adamw()
+    step, opt_init = build_train_step(
+        lambda p, b: schnet.loss_fn(p, b["inputs"], b["targets"], cfg,
+                                    n_graphs=n_graphs), opt)
+    opt_state = jax.eval_shape(opt_init, params)
+    ospecs = shr.opt_state_specs(opt_state, params, pspecs)
+
+    in_spec = {k: (shr.edge_spec(mesh, v.ndim) if k in ("edges", "edge_dist")
+                   else P(*(None,) * v.ndim))
+               for k, v in inputs.items()}
+    batch = {"inputs": inputs, "targets": targets}
+    bspec = {"inputs": in_spec, "targets": P(None)}
+    n_nodes_eff = N if shape.kind != "graph_batched" else N
+    meta = {"model_flops": gnn_model_flops(cfg, n_nodes_eff, E, d_in),
+            "model_bytes_per_device":
+                (E * (cfg.n_rbf + 3 * cfg.d_hidden) * 4 * cfg.n_interactions
+                 + N * (d_in + 4 * cfg.d_hidden) * 4) / mesh.size,
+            "param_dtype": "float32",
+            "params": sum(np.prod(l.shape) for l in jax.tree.leaves(params))}
+    return Cell(arch.arch_id, shape.name, step, (params, opt_state, batch),
+                (pspecs, ospecs, bspec), (pspecs, ospecs, P()),
+                donate=(0, 1), meta=meta)
+
+
+# --------------------------------------------------------------- recsys
+
+def _rec_batch_specs(cfg: RecsysConfig, batch: int, mesh: Mesh, with_label=True):
+    def fspec(f):
+        shape = (batch,) if f.bag == 1 else (batch, f.bag)
+        return S32(shape), shr.batched_spec(mesh, shape)
+
+    user_fields, user_fspecs = {}, {}
+    for f in cfg.user_fields:
+        user_fields[f.name], user_fspecs[f.name] = fspec(f)
+    item, item_specs = {}, {}
+    for f in cfg.item_fields:
+        item[f.name], item_specs[f.name] = fspec(f)
+    user = {"fields": user_fields}
+    uspec = {"fields": user_fspecs}
+    if cfg.seq_len:
+        user["hist"] = S32((batch, cfg.seq_len))
+        uspec["hist"] = shr.batched_spec(mesh, (batch, cfg.seq_len))
+    b = {"user": user, "item": item}
+    bs = {"user": uspec, "item": item_specs}
+    if with_label:
+        b["label"] = F32((batch,))
+        bs["label"] = shr.batched_spec(mesh, (batch,))
+    return b, bs
+
+
+def rec_dense_params(params) -> int:
+    return int(sum(np.prod(l.shape) for path, l in
+                   jax.tree_util.tree_flatten_with_path(params)[0]
+                   if not any(getattr(k, "key", None) == "tables" for k in path)))
+
+
+def build_rec_cell(arch, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    cfg: RecsysConfig = arch.config
+    mod = REC_MODULES[cfg.model]
+    params = abstract_params(lambda k: mod.init(k, cfg))
+    pspecs = shr.param_specs(params, cfg, mesh)
+    n_dense = rec_dense_params(params)
+    n_table = int(sum(np.prod(l.shape) for l in jax.tree.leaves(params))) - n_dense
+    d = shape.dims
+
+    n_lookup_rows = sum(f.bag for f in cfg.user_fields + cfg.item_fields) \
+        + (cfg.seq_len or 0)
+
+    def rec_bytes(B):
+        # embedding rows touched + dense params + activations (fp32)
+        return (B * n_lookup_rows * cfg.embed_dim * 4 + n_dense * 4
+                + B * n_lookup_rows * cfg.embed_dim * 4) / mesh.size
+
+    if shape.kind == "rec_train":
+        B = d["batch"]
+        batch, bspec = _rec_batch_specs(cfg, B, mesh)
+        opt = opt_lib.for_family("recsys")
+        step, opt_init = build_train_step(lambda p, b: mod.loss_fn(p, b, cfg), opt)
+        opt_state = jax.eval_shape(opt_init, params)
+        ospecs = shr.opt_state_specs(opt_state, params, pspecs)
+        meta = {"model_flops": 6.0 * n_dense * B, "params": n_dense + n_table,
+                "model_bytes_per_device": 3 * rec_bytes(B),
+                "param_dtype": "float32", "dense_params": n_dense}
+        return Cell(arch.arch_id, shape.name, step, (params, opt_state, batch),
+                    (pspecs, ospecs, bspec), (pspecs, ospecs, P()),
+                    donate=(0, 1), meta=meta)
+
+    if shape.kind == "rec_serve":
+        B = d["batch"]
+        batch, bspec = _rec_batch_specs(cfg, B, mesh, with_label=False)
+        fn = lambda p, b: mod.serve_scores(p, b, cfg)
+        meta = {"model_flops": 2.0 * n_dense * B, "params": n_dense + n_table,
+                "model_bytes_per_device": rec_bytes(B),
+                "param_dtype": "float32"}
+        return Cell(arch.arch_id, shape.name, fn, (params, batch),
+                    (pspecs, bspec), shr.batched_spec(mesh, (B,)), meta=meta)
+
+    # rec_retrieval: 1 query vs n_candidates
+    C = d["n_candidates"]
+    user, uspec = {}, {}
+    for f in cfg.user_fields:
+        shp = (1,) if f.bag == 1 else (1, f.bag)
+        user[f.name], uspec[f.name] = S32(shp), P(*(None,) * len(shp))
+    cand, cspec = {}, {}
+    for f in cfg.item_fields:
+        shp = (C,) if f.bag == 1 else (C, f.bag)
+        cand[f.name] = S32(shp)
+        cspec[f.name] = shr.batched_spec(mesh, shp)
+    meta = {"model_flops": 2.0 * n_dense * C, "params": n_dense + n_table,
+            "model_bytes_per_device": rec_bytes(C), "param_dtype": "float32"}
+    if cfg.model == "two_tower":
+        fn = lambda p, u, c: towers.retrieve(p, u, c, cfg)
+        return Cell(arch.arch_id, shape.name, fn, (params, user, cand),
+                    (pspecs, uspec, cspec), (P(None), P(None)), meta=meta)
+    ub = {"fields": user, "hist": S32((1, cfg.seq_len))}
+    ubspec = {"fields": uspec, "hist": P(None, None)}
+    if cfg.model == "mind":
+        fn = lambda p, u, c: mind.retrieve(p, u, c, cfg)
+    else:
+        fn = lambda p, u, c: mod.score_candidates(p, u, c, cfg)
+    return Cell(arch.arch_id, shape.name, fn, (params, ub, cand),
+                (pspecs, ubspec, cspec), (P(None), P(None)), meta=meta)
+
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh) -> Cell:
+    arch = registry.get(arch_id)
+    shape = registry.get_shape(arch, shape_name)
+    builder = {"lm": build_lm_cell, "gnn": build_gnn_cell,
+               "recsys": build_rec_cell}[arch.family]
+    return builder(arch, shape, mesh)

@@ -1,0 +1,113 @@
+"""Production training launcher: mesh + cell + data pipeline + checkpoints +
+elastic restart, in one driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --steps 50 \
+      --devices 8 --mesh 2x4 --reduced
+
+On a real pod, drop --devices/--reduced and run under your cluster runner;
+the mesh comes from make_production_mesh(), restarts resume from the newest
+generation in --ckpt-dir, and a changed device count re-plans the mesh
+(repro.train.elastic.plan_mesh) before restore — the checkpoint reshards on
+device_put.
+"""
+import os
+
+if os.environ.get("REPRO_TRAIN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_TRAIN_DEVICES"])
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--mesh", default=None, help="e.g. 2x4 (else production)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config + tiny batch (CPU-runnable)")
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt_train")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro import runtime
+    from repro.configs import registry
+    from repro.data.pipeline import Prefetcher
+    from repro.data import synthetic
+    from repro.launch.mesh import make_mesh, make_production_mesh
+    from repro.launch import sharding as shr
+    from repro.models import transformer
+    from repro.train import optimizer as opt_lib
+    from repro.train.checkpoint import AsyncCheckpointer, restore
+    from repro.train.train_step import build_train_step
+    from repro.train.elastic import plan_mesh
+
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        mesh = make_mesh(dims, ("pod", "data", "model")[-len(dims):])
+    elif args.reduced:
+        mesh = make_mesh((1, 1), ("data", "model"))
+    else:
+        plan = plan_mesh(len(jax.devices()), 256)
+        mesh = make_mesh(plan.shape, plan.axes)
+    print(f"mesh: {dict(mesh.shape)} over {mesh.size} devices")
+
+    arch = registry.get(args.arch)
+    cfg = arch.reduced(arch.config) if args.reduced else arch.config
+    batch, seq = (8, 64) if args.reduced else (256, 4096)
+
+    rng = np.random.default_rng(0)
+    ckpt = AsyncCheckpointer(args.ckpt_dir, keep=3)
+
+    with runtime.use_mesh(mesh):
+        params = transformer.init(jax.random.PRNGKey(0), cfg)
+        pspecs = shr.param_specs(params, cfg, mesh)
+        zspecs = shr.zero_specs(params, pspecs, mesh)
+        opt = opt_lib.for_family("lm", cfg.param_count())
+        step_fn, opt_init = build_train_step(
+            lambda p, t: transformer.lm_loss(p, t, cfg), opt,
+            n_micro=1 if args.reduced else 8,
+            grad_shardings=shr.to_named(mesh, zspecs))
+        opt_state = opt_init(params)
+        start_step = 0
+        latest = ckpt.latest()
+        if latest:
+            params, start_step = restore(latest, params,
+                                         shr.to_named(mesh, pspecs))
+            print(f"resumed from {latest} (step {start_step})")
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1),
+                         in_shardings=(shr.to_named(mesh, pspecs),
+                                       None,
+                                       shr.to_named(
+                                           mesh, shr.batched_spec(
+                                               mesh, (batch, seq)))),
+                         )
+        ckpt.install_sigterm_hook(lambda: params, lambda: step)
+
+        pipe = Prefetcher(lambda s: synthetic.lm_batch(rng, cfg, batch, seq),
+                          depth=2)
+        t0 = time.time()
+        step = start_step
+        for step in range(start_step, start_step + args.steps):
+            tokens = jnp.asarray(next(pipe)["tokens"])
+            params, opt_state, loss = jitted(params, opt_state, tokens)
+            if step % 10 == 0:
+                print(f"step {step:5d} loss {float(loss):.4f} "
+                      f"({(time.time()-t0)/max(1,step-start_step+1):.2f}s/step)",
+                      flush=True)
+            if step and step % args.ckpt_every == 0:
+                ckpt.save(params, step)
+        pipe.close()
+        ckpt.save(params, step + 1, block=True)
+        print(f"done; latest checkpoint: {ckpt.latest()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,300 @@
+"""Attention: GQA + MLA, with memory-efficient (online-softmax) prefill/train
+and KV-cache decode. Pure JAX — the Pallas ``flash_decode`` kernel mirrors the
+decode path for the TPU hot-spot; this module is also its oracle.
+
+Layouts:
+  q: (B, Sq, Hkv, G, D)   grouped — G = n_heads // n_kv (no KV repeat!)
+  k: (B, Sk, Hkv, D)
+  v: (B, Sk, Hkv, Dv)
+
+Train/prefill never materialize (Sq, Sk): lax.scan over KV chunks with a
+running (m, l, acc) — FlashAttention recurrence in XLA-native form, which is
+the TPU-correct adaptation (VMEM-sized chunks, MXU-aligned matmuls) of the
+GPU kernel the literature assumes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _chunk_scores(q, k, scale):
+    # q (B,Sq,H,G,D) k (B,C,H,D) -> (B,H,G,Sq,C)
+    return jnp.einsum("bqhgd,bchd->bhgqc", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, chunk: int, q_offset=0,
+                      scale: Optional[float] = None,
+                      q_blocks: int = 4) -> jax.Array:
+    """Online-softmax attention, O(Sq/q_blocks * chunk) live memory.
+
+    q (B,Sq,H,G,D); k,v (B,Sk,H,D/Dv). q_offset: position of q[0] within the
+    kv axis (chunked prefill). Returns (B,Sq,H,G,Dv).
+
+    Causal inputs are processed in ``q_blocks`` row blocks, each scanning
+    ONLY the KV chunks at or below its diagonal — skipping the fully-masked
+    upper triangle halves both the FLOPs and the score traffic vs the naive
+    full scan (flash-attention's causal-block skipping, in XLA form).
+    """
+    B, Sq, H, G, D = q.shape
+    Sk = k.shape[1]
+    if (causal and q_blocks > 1 and Sq == Sk and q_offset == 0
+            and Sq % q_blocks == 0 and Sq // q_blocks >= chunk):
+        qb = Sq // q_blocks
+        outs = []
+        for i in range(q_blocks):
+            hi = (i + 1) * qb
+            outs.append(_chunked_attention(
+                q[:, i * qb: hi], k[:, :hi], v[:, :hi],
+                causal=True, chunk=chunk, q_offset=i * qb, scale=scale))
+        return jnp.concatenate(outs, axis=1)
+    return _chunked_attention(q, k, v, causal=causal, chunk=chunk,
+                              q_offset=q_offset, scale=scale)
+
+
+def _chunked_attention(q, k, v, *, causal, chunk, q_offset=0, scale=None):
+    B, Sq, H, G, D = q.shape
+    Sk, Dv = k.shape[1], v.shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, H, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, H, Dv).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        # checkpointed: backward recomputes the (Sq, C) score block instead
+        # of saving one per chunk (flash-attention backward discipline —
+        # without this the scan stacks n_chunks × (B,H,G,Sq,C) f32).
+        m, l, acc = carry
+        idx, k_i, v_i = xs
+        s = _chunk_scores(q, k_i, scale)                        # (B,H,G,Sq,C) f32
+        k_pos = idx * chunk + jnp.arange(chunk)
+        valid = k_pos < Sk
+        if causal:
+            valid = valid[None, :] & (q_pos[:, None] >= k_pos[None, :])
+            s = jnp.where(valid[None, None, None], s, NEG_INF)
+        else:
+            s = jnp.where(valid[None, None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(-1)
+        pv = jnp.einsum("bhgqc,bchd->bhgqd", p.astype(v_i.dtype), v_i,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, G, Sq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)       # (B,Sq,H,G,Dv)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array,
+                     scale: Optional[float] = None) -> jax.Array:
+    """Single-token decode. q (B,1,H,G,D); caches (B,Smax,H,D/Dv);
+    cache_len: number of valid cache positions (static or traced scalar).
+    O(Smax) per step — sub-quadratic by construction; with the cache sequence
+    dim sharded, XLA turns the reductions into psums (distributed softmax)."""
+    B, _, H, G, D = q.shape
+    Smax, Dv = k_cache.shape[1], v_cache.shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale   # (B,H,G,1,S)
+    mask = jnp.arange(Smax) < cache_len
+    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    m = s.max(-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(-1, keepdims=True)
+    out = jnp.einsum("bhgqs,bshd->bhgqd", (p / l).astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)          # (B,1,H,G,Dv)
+
+
+# ---------------------------------------------------------------- GQA block
+
+def gqa_init(key, cfg, dtype) -> dict:
+    from repro.models.layers import norm_init
+    d, Hq, Hkv, D = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, Hq * D), jnp.float32) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, Hkv * D), jnp.float32) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, Hkv * D), jnp.float32) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (Hq * D, d), jnp.float32)
+               / np.sqrt(Hq * D)).astype(dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(D, "rmsnorm", dtype)
+        p["k_norm"] = norm_init(D, "rmsnorm", dtype)
+    return p
+
+
+def _gqa_qkv(p, x, positions, cfg):
+    from repro.models.layers import rmsnorm
+    B, S, _ = x.shape
+    Hq, Hkv, D = cfg.n_heads, cfg.n_kv, cfg.d_head
+    G = Hq // Hkv
+    q = (x @ p["wq"]).reshape(B, S, Hkv, G, D)
+    k = (x @ p["wk"]).reshape(B, S, Hkv, D)
+    v = (x @ p["wv"]).reshape(B, S, Hkv, D)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"]["scale"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"]["scale"], cfg.norm_eps)
+    # RoPE on the last dim; q grouped layout rotates per (Hkv,G) head.
+    q = apply_rope_grouped(q, positions, cfg.rope_theta)
+    k = apply_rope_heads(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def apply_rope_heads(x, positions, theta):
+    from repro.models.layers import apply_rope
+    return apply_rope(x, positions, theta)
+
+
+def apply_rope_grouped(q, positions, theta):
+    from repro.models.layers import apply_rope
+    B, S, H, G, D = q.shape
+    q = apply_rope(q.reshape(B, S, H * G, D), positions, theta)
+    return q.reshape(B, S, H, G, D)
+
+
+def gqa_forward(p, x, positions, cfg, *, cache=None, cache_len=None):
+    """cache=None: full/train self-attention (causal). With cache: decode —
+    x is (B,1,d); returns (out, (k_new, v_new)) for the cache update."""
+    B, S, _ = x.shape
+    q, k, v = _gqa_qkv(p, x, positions, cfg)
+    if cache is None:
+        o = chunked_attention(q, k, v, causal=True, chunk=min(cfg.attn_chunk, S))
+        new_kv = (k, v)
+    else:
+        k_cache, v_cache = cache
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), cache_len, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), cache_len, 1)
+        o = decode_attention(q, k_cache, v_cache, cache_len + S)
+        new_kv = (k_cache, v_cache)
+    o = o.reshape(B, S, cfg.n_heads * cfg.d_head)
+    return o @ p["wo"], new_kv
+
+
+# ---------------------------------------------------------------- MLA block
+
+def mla_init(key, cfg, dtype) -> dict:
+    from repro.models.layers import norm_init
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    dq = m.d_nope + m.d_rope
+    ks = jax.random.split(key, 8)
+    s = 1.0 / np.sqrt(d)
+    p = {}
+    if m.q_lora:
+        p["wq_a"] = (jax.random.normal(ks[0], (d, m.q_lora), jnp.float32) * s).astype(dtype)
+        p["q_norm"] = norm_init(m.q_lora, "rmsnorm", dtype)
+        p["wq_b"] = (jax.random.normal(ks[1], (m.q_lora, H * dq), jnp.float32)
+                     / np.sqrt(m.q_lora)).astype(dtype)
+    else:
+        p["wq"] = (jax.random.normal(ks[0], (d, H * dq), jnp.float32) * s).astype(dtype)
+    p["wkv_a"] = (jax.random.normal(ks[2], (d, m.kv_lora + m.d_rope), jnp.float32) * s).astype(dtype)
+    p["kv_norm"] = norm_init(m.kv_lora, "rmsnorm", dtype)
+    p["wk_b"] = (jax.random.normal(ks[3], (m.kv_lora, H * m.d_nope), jnp.float32)
+                 / np.sqrt(m.kv_lora)).astype(dtype)
+    p["wv_b"] = (jax.random.normal(ks[4], (m.kv_lora, H * m.v_dim), jnp.float32)
+                 / np.sqrt(m.kv_lora)).astype(dtype)
+    p["wo"] = (jax.random.normal(ks[5], (H * m.v_dim, d), jnp.float32)
+               / np.sqrt(H * m.v_dim)).astype(dtype)
+    return p
+
+
+def _mla_q(p, x, positions, cfg):
+    from repro.models.layers import rmsnorm, apply_rope
+    m = cfg.mla
+    B, S, _ = x.shape
+    H, dq = cfg.n_heads, m.d_nope + m.d_rope
+    if m.q_lora:
+        ql = rmsnorm(x @ p["wq_a"], p["q_norm"]["scale"], cfg.norm_eps)
+        q = (ql @ p["wq_b"]).reshape(B, S, H, dq)
+    else:
+        q = (x @ p["wq"]).reshape(B, S, H, dq)
+    q_nope, q_rope = q[..., : m.d_nope], q[..., m.d_nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_forward(p, x, positions, cfg, *, cache=None, cache_len=None):
+    """MLA attention. Cache holds the LATENT (c_kv, k_rope): kv_lora + d_rope
+    per token — the paper-family (DeepSeek-V2) KV compression. Decode uses the
+    absorbed form: w_k_b folds into q, w_v_b applies after the latent-space
+    attention, so per-step cost is O(S * kv_lora), never re-expanding S heads.
+    """
+    from repro.models.layers import rmsnorm, apply_rope
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    scale = 1.0 / np.sqrt(m.d_nope + m.d_rope)
+
+    kv = x @ p["wkv_a"]                                     # (B,S,kv_lora+d_rope)
+    c_kv = rmsnorm(kv[..., : m.kv_lora], p["kv_norm"]["scale"], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., None, m.kv_lora:], positions, cfg.rope_theta)[:, :, 0]
+
+    q_nope, q_rope = _mla_q(p, x, positions, cfg)           # (B,S,H,d_nope/d_rope)
+
+    if cache is None:
+        # Train/prefill: expand per-head k,v from the latent (flops-optimal at
+        # large S because scores are computed once per (q,k) pair anyway).
+        k_nope = (c_kv @ p["wk_b"]).reshape(B, S, H, m.d_nope)
+        v = (c_kv @ p["wv_b"]).reshape(B, S, H, m.v_dim)
+        q = jnp.concatenate([q_nope, q_rope], -1)[:, :, :, None]  # (B,S,H,1,dq)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                                      (B, S, H, m.d_rope))], -1)
+        o = chunked_attention(q, k, v, causal=True,
+                              chunk=min(cfg.attn_chunk, S), scale=scale)
+        o = o[:, :, :, 0]                                   # (B,S,H,v_dim)
+        new_cache = (c_kv, k_rope)
+    else:
+        c_cache, r_cache = cache                            # (B,Smax,kv_lora),(B,Smax,d_rope)
+        c_cache = jax.lax.dynamic_update_slice_in_dim(c_cache, c_kv.astype(c_cache.dtype), cache_len, 1)
+        r_cache = jax.lax.dynamic_update_slice_in_dim(r_cache, k_rope.astype(r_cache.dtype), cache_len, 1)
+        Smax = c_cache.shape[1]
+        # Absorbed decode: q_c = q_nope @ wk_b^T per head → latent space.
+        wkb = p["wk_b"].reshape(m.kv_lora, H, m.d_nope)
+        q_c = jnp.einsum("bshd,lhd->bshl", q_nope, wkb)     # (B,1,H,kv_lora)
+        s_l = jnp.einsum("bshl,bSl->bhsS", q_c, c_cache, preferred_element_type=jnp.float32)
+        s_r = jnp.einsum("bshd,bSd->bhsS", q_rope, r_cache, preferred_element_type=jnp.float32)
+        s = (s_l + s_r) * scale                             # (B,H,1,Smax)
+        mask = jnp.arange(Smax) < (cache_len + S)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhsS,bSl->bshl", pr.astype(c_cache.dtype), c_cache)
+        wvb = p["wv_b"].reshape(m.kv_lora, H, m.v_dim)
+        o = jnp.einsum("bshl,lhv->bshv", o_lat, wvb)        # (B,1,H,v_dim)
+        new_cache = (c_cache, r_cache)
+    o = o.reshape(B, S, H * m.v_dim).astype(x.dtype)
+    return o @ p["wo"], new_cache
+
+
+def attn_init(key, cfg, dtype):
+    return mla_init(key, cfg, dtype) if cfg.mla else gqa_init(key, cfg, dtype)
+
+
+def attn_forward(p, x, positions, cfg, *, cache=None, cache_len=None):
+    if cfg.mla:
+        return mla_forward(p, x, positions, cfg, cache=cache, cache_len=cache_len)
+    return gqa_forward(p, x, positions, cfg, cache=cache, cache_len=cache_len)

@@ -1,0 +1,113 @@
+"""Shared neural building blocks (norms, RoPE, FFN) — pure functional JAX."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_apply(x, p, kind: str, eps: float):
+    if kind == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], eps)
+    return rmsnorm(x, p["scale"], eps)
+
+
+def norm_init(d: int, kind: str, dtype) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def activation(x, kind: str):
+    return jax.nn.gelu(x) if kind == "gelu" else jax.nn.silu(x)
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_freqs(d_rot: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, D) with positions (..., S) — rotate the full D."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                   # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs      # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                            # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- MLP
+
+def mlp_init(key, d_in: int, d_ff: int, d_out: int, glu: bool, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d_in)
+    s_ff = 1.0 / np.sqrt(d_ff)
+    p = {"w1": jax.random.normal(k1, (d_in, d_ff), jnp.float32) * s_in,
+         "w2": jax.random.normal(k2, (d_ff, d_out), jnp.float32) * s_ff}
+    if glu:
+        p["w3"] = jax.random.normal(k3, (d_in, d_ff), jnp.float32) * s_in
+    return jax.tree.map(lambda a: a.astype(dtype), p)
+
+
+def mlp_apply(p: dict, x: jax.Array, act: str, glu: bool) -> jax.Array:
+    h = x @ p["w1"]
+    h = activation(h, act)
+    if glu:
+        h = h * (x @ p["w3"])
+    return h @ p["w2"]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = True, scale=None) -> dict:
+    s = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def mlp_tower_init(key, d_in: int, widths, dtype, out_bias=True) -> list:
+    keys = jax.random.split(key, len(widths))
+    layers, d = [], d_in
+    for k, w in zip(keys, widths):
+        layers.append(dense_init(k, d, w, dtype, bias=out_bias))
+        d = w
+    return layers
+
+
+def mlp_tower_apply(layers: list, x: jax.Array, act: str = "silu",
+                    final_act: bool = False) -> jax.Array:
+    for i, p in enumerate(layers):
+        x = dense_apply(p, x)
+        if i < len(layers) - 1 or final_act:
+            x = activation(x, act)
+    return x

@@ -1,0 +1,50 @@
+"""Shared recsys substrate: hashed feature fields → TB-scale sharded tables."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FeatureField, RecsysConfig
+from repro.sparse.sharded import sharded_embedding_bag_2d
+
+
+def tables_init(key, cfg: RecsysConfig) -> dict:
+    fields = cfg.user_fields + cfg.item_fields
+    keys = jax.random.split(key, len(fields))
+    return {f.name: (jax.random.normal(k, (f.vocab, cfg.embed_dim), jnp.float32)
+                     * 0.01)
+            for f, k in zip(fields, keys)}
+
+
+def embed_fields(tables: dict, fields: tuple[FeatureField, ...],
+                 ids: dict) -> jax.Array:
+    """ids[name]: (B,) or (B, bag) int32 → concat (B, n_fields * D)."""
+    outs = []
+    for f in fields:
+        outs.append(sharded_embedding_bag_2d(tables[f.name], ids[f.name],
+                                             combiner=f.combiner))
+    return jnp.concatenate(outs, axis=-1)
+
+
+def bce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    ls = jax.nn.log_sigmoid(logits)
+    return -jnp.mean(labels * ls + (1 - labels) * (ls - logits))
+
+
+def sampled_softmax_loss(user_vecs: jax.Array, item_vecs: jax.Array,
+                         log_q: jax.Array | None = None,
+                         temperature: float = 0.05) -> jax.Array:
+    """In-batch sampled softmax with logQ correction [Yi et al., RecSys'19].
+    user/item (B, D) row-aligned positives."""
+    logits = (user_vecs @ item_vecs.T) / temperature       # (B, B)
+    if log_q is not None:
+        logits = logits - log_q[None, :]
+    labels = jnp.arange(user_vecs.shape[0])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def l2_normalize(x: jax.Array, eps: float = 1e-9) -> jax.Array:
+    return x / jnp.sqrt(jnp.sum(x * x, -1, keepdims=True) + eps)

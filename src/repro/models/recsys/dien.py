@@ -1,0 +1,156 @@
+"""DIEN [arXiv:1809.03672] — interest extraction (GRU) + interest evolution
+(AUGRU: attentional update gate), plus the auxiliary next-behavior loss.
+
+The AUGRU recurrence is the serving hot spot (seq scan per candidate); the
+Pallas ``augru`` kernel fuses the full T-step recurrence in VMEM — this
+module is its jnp oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RecsysConfig
+from repro.models.layers import mlp_tower_apply, mlp_tower_init
+from repro.models.recsys.common import bce_loss, embed_fields, tables_init
+from repro.sparse.sharded import sharded_embedding_bag_2d
+
+
+def gru_init(key, d_in: int, h: int) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (d_in, 3 * h), jnp.float32) / np.sqrt(d_in),
+            "u": jax.random.normal(k2, (h, 3 * h), jnp.float32) / np.sqrt(h),
+            "b": jnp.zeros((3 * h,), jnp.float32)}
+
+
+def _gates(p, x_t, h):
+    gx = x_t @ p["w"] + p["b"]
+    gh = h @ p["u"]
+    H = h.shape[-1]
+    r = jax.nn.sigmoid(gx[..., :H] + gh[..., :H])
+    z = jax.nn.sigmoid(gx[..., H:2 * H] + gh[..., H:2 * H])
+    n = jnp.tanh(gx[..., 2 * H:] + r * gh[..., 2 * H:])
+    return z, n
+
+
+def gru_apply(p, x: jax.Array) -> jax.Array:
+    """x (B,T,D) → all hidden states (B,T,H)."""
+    B, T, _ = x.shape
+    H = p["u"].shape[0]
+
+    def step(h, x_t):
+        z, n = _gates(p, x_t, h)
+        h_new = (1 - z) * n + z * h
+        return h_new, h_new
+
+    _, hs = jax.lax.scan(step, jnp.zeros((B, H), x.dtype),
+                         x.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2)
+
+
+def augru_apply(p, x: jax.Array, att: jax.Array) -> jax.Array:
+    """AUGRU: att (B,T) scales the update gate. Returns final hidden (B,H)."""
+    B, T, _ = x.shape
+    H = p["u"].shape[0]
+
+    def step(h, xs):
+        x_t, a_t = xs
+        z, n = _gates(p, x_t, h)
+        z = z * a_t[:, None]
+        h_new = (1 - z) * h + z * n
+        return h_new, None
+
+    h, _ = jax.lax.scan(step, jnp.zeros((B, H), x.dtype),
+                        (x.transpose(1, 0, 2), att.T))
+    return h
+
+
+def init(key, cfg: RecsysConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    D, H = cfg.embed_dim, cfg.gru_dim
+    d_other = (len(cfg.user_fields) + len(cfg.item_fields) - 1) * D
+    return {
+        "tables": tables_init(ks[0], cfg),
+        "gru": gru_init(ks[1], D, H),
+        "augru": gru_init(ks[2], H, H),
+        "att_w": jax.random.normal(ks[3], (H, D), jnp.float32) / np.sqrt(H),
+        "mlp": mlp_tower_init(ks[4], H + D + d_other, cfg.mlp + (1,), jnp.float32),
+        "aux_w": jax.random.normal(ks[5], (H, D), jnp.float32) / np.sqrt(H),
+    }
+
+
+def _hist_emb(params, hist_ids, cfg):
+    mask = (hist_ids >= 0).astype(jnp.float32)
+    emb = sharded_embedding_bag_2d(
+        params["tables"]["item_id"], jnp.maximum(hist_ids, 0).reshape(-1, 1))
+    emb = emb.reshape(*hist_ids.shape, cfg.embed_dim) * mask[..., None]
+    return emb, mask
+
+
+def _evolved_interest(params, hist, mask, target):
+    """GRU states → attention vs target → AUGRU final state. (B,H)."""
+    states = gru_apply(params["gru"], hist)                   # (B,T,H)
+    att = jnp.einsum("bth,hd,bd->bt", states, params["att_w"], target)
+    att = jax.nn.softmax(jnp.where(mask > 0, att, -1e30), axis=-1) * mask
+    return states, augru_apply(params["augru"], states, att)
+
+
+def logits_fn(params, batch: dict, cfg: RecsysConfig, return_aux=False):
+    hist, mask = _hist_emb(params, batch["user"]["hist"], cfg)
+    target = sharded_embedding_bag_2d(params["tables"]["item_id"],
+                                      batch["item"]["item_id"])
+    states, final = _evolved_interest(params, hist, mask, target)
+    other_u = embed_fields(params["tables"], cfg.user_fields, batch["user"]["fields"])
+    other_i = embed_fields(params["tables"],
+                           tuple(f for f in cfg.item_fields if f.name != "item_id"),
+                           batch["item"])
+    x = jnp.concatenate([final, target, other_u, other_i], axis=-1)
+    logits = mlp_tower_apply(params["mlp"], x, act="silu")[..., 0]
+    if not return_aux:
+        return logits
+    # auxiliary loss: state_t should predict behavior t+1 (vs shuffled negative)
+    pred = states[:, :-1] @ params["aux_w"]                   # (B,T-1,D)
+    pos = jnp.sum(pred * hist[:, 1:], -1)
+    neg = jnp.sum(pred * jnp.roll(hist[:, 1:], 1, axis=0), -1)
+    m = mask[:, 1:]
+    aux = -(jax.nn.log_sigmoid(pos) + jax.nn.log_sigmoid(-neg)) * m
+    aux = aux.sum() / jnp.maximum(m.sum(), 1.0)
+    return logits, aux
+
+
+def loss_fn(params, batch: dict, cfg: RecsysConfig, aux_weight=0.5) -> jax.Array:
+    logits, aux = logits_fn(params, batch, cfg, return_aux=True)
+    return bce_loss(logits, batch["label"]) + aux_weight * aux
+
+
+def serve_scores(params, batch: dict, cfg: RecsysConfig) -> jax.Array:
+    return jax.nn.sigmoid(logits_fn(params, batch, cfg))
+
+
+def score_candidates(params, user_batch: dict, cand_ids: dict,
+                     cfg: RecsysConfig, top_k: int = 100):
+    """Re-rank vs C candidates: GRU once, AUGRU per candidate."""
+    C = cand_ids["item_id"].shape[0]
+    hist, mask = _hist_emb(params, user_batch["hist"], cfg)   # (1,T,D)
+    states = gru_apply(params["gru"], hist)                   # (1,T,H)
+    from repro import runtime
+    from repro.sparse.sharded import sharded_gather_a2a
+    target = sharded_gather_a2a(params["tables"]["item_id"],
+                                cand_ids["item_id"])           # (C,D)
+    target = runtime.shard(target, ("data", "model"), None)
+    states_b = runtime.shard(jnp.broadcast_to(states, (C, *states.shape[1:])),
+                             ("data", "model"), None, None)
+    mask_b = jnp.broadcast_to(mask, (C, mask.shape[1]))
+    att = jnp.einsum("bth,hd,bd->bt", states_b, params["att_w"], target)
+    att = jax.nn.softmax(jnp.where(mask_b > 0, att, -1e30), -1) * mask_b
+    final = augru_apply(params["augru"], states_b, att)        # (C,H)
+    other_u = embed_fields(params["tables"], cfg.user_fields, user_batch["fields"])
+    other_u = jnp.broadcast_to(other_u, (C, other_u.shape[-1]))
+    other_i = embed_fields(params["tables"],
+                           tuple(f for f in cfg.item_fields if f.name != "item_id"),
+                           cand_ids)
+    x = jnp.concatenate([final, target, other_u, other_i], axis=-1)
+    scores = mlp_tower_apply(params["mlp"], x, act="silu")[..., 0]
+    v, i = jax.lax.top_k(scores.astype(jnp.float32), top_k)
+    return v, i

@@ -1,0 +1,94 @@
+"""DIN [arXiv:1706.06978] — deep interest network (target attention).
+
+The local activation unit scores each history item against the candidate via
+an MLP over [h, t, h−t, h⊙t] (80→40→1, paper-exact), then weighted-sum pools
+WITHOUT softmax normalization (paper §4.3). The Pallas ``din_attention``
+kernel fuses this unit; this module is its oracle and the default path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.models.layers import mlp_tower_apply, mlp_tower_init
+from repro.models.recsys.common import bce_loss, embed_fields, tables_init
+from repro.sparse.sharded import sharded_embedding_bag_2d
+
+
+def init(key, cfg: RecsysConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    D = cfg.embed_dim
+    # final MLP sees [pooled, target, all user fields, item fields sans item_id]
+    d_other = (len(cfg.user_fields) + len(cfg.item_fields) - 1) * D
+    return {
+        "tables": tables_init(k1, cfg),
+        "attn_mlp": mlp_tower_init(k2, 4 * D, cfg.attn_mlp + (1,), jnp.float32),
+        "mlp": mlp_tower_init(k3, D + D + d_other, cfg.mlp + (1,), jnp.float32),
+    }
+
+
+def attention_pool(params, hist: jax.Array, mask: jax.Array,
+                   target: jax.Array) -> jax.Array:
+    """hist (B,T,D), target (B,D) → (B,D) activation-weighted sum."""
+    t = jnp.broadcast_to(target[:, None], hist.shape)
+    feat = jnp.concatenate([hist, t, hist - t, hist * t], axis=-1)  # (B,T,4D)
+    w = mlp_tower_apply(params["attn_mlp"], feat, act="silu")[..., 0]
+    w = w * mask
+    return jnp.einsum("bt,btd->bd", w, hist)
+
+
+def _hist_emb(params, hist_ids, cfg):
+    mask = (hist_ids >= 0).astype(jnp.float32)
+    emb = sharded_embedding_bag_2d(
+        params["tables"]["item_id"], jnp.maximum(hist_ids, 0).reshape(-1, 1))
+    emb = emb.reshape(*hist_ids.shape, cfg.embed_dim) * mask[..., None]
+    return emb, mask
+
+
+def logits_fn(params, batch: dict, cfg: RecsysConfig) -> jax.Array:
+    hist, mask = _hist_emb(params, batch["user"]["hist"], cfg)
+    target = sharded_embedding_bag_2d(params["tables"]["item_id"],
+                                      batch["item"]["item_id"])
+    other_u = embed_fields(params["tables"], cfg.user_fields, batch["user"]["fields"])
+    other_i = embed_fields(params["tables"],
+                           tuple(f for f in cfg.item_fields if f.name != "item_id"),
+                           batch["item"])
+    pooled = attention_pool(params, hist, mask, target)
+    x = jnp.concatenate([pooled, target, other_u, other_i], axis=-1)
+    return mlp_tower_apply(params["mlp"], x, act="silu")[..., 0]
+
+
+def loss_fn(params, batch: dict, cfg: RecsysConfig) -> jax.Array:
+    return bce_loss(logits_fn(params, batch, cfg), batch["label"])
+
+
+def serve_scores(params, batch: dict, cfg: RecsysConfig) -> jax.Array:
+    return jax.nn.sigmoid(logits_fn(params, batch, cfg))
+
+
+def score_candidates(params, user_batch: dict, cand_ids: dict,
+                     cfg: RecsysConfig, top_k: int = 100):
+    """Re-rank phase vs C candidates: hist computed once, attention per
+    candidate (C as batch)."""
+    from repro import runtime
+    C = cand_ids["item_id"].shape[0]
+    hist, mask = _hist_emb(params, user_batch["hist"], cfg)   # (1,T,D)
+    hist = runtime.shard(jnp.broadcast_to(hist, (C, *hist.shape[1:])),
+                         ("data", "model"), None, None)
+    mask = jnp.broadcast_to(mask, (C, mask.shape[1]))
+    from repro.sparse.sharded import sharded_gather_a2a
+    target = sharded_gather_a2a(params["tables"]["item_id"],
+                                cand_ids["item_id"])           # (C,D)
+    target = runtime.shard(target, ("data", "model"), None)
+    pooled = attention_pool(params, hist, mask, target)
+    other_u = embed_fields(params["tables"], cfg.user_fields,
+                           user_batch["fields"])               # (1, ...)
+    other_u = jnp.broadcast_to(other_u, (C, other_u.shape[-1]))
+    other_i = embed_fields(params["tables"],
+                           tuple(f for f in cfg.item_fields if f.name != "item_id"),
+                           cand_ids)
+    x = jnp.concatenate([pooled, target, other_u, other_i], axis=-1)
+    scores = mlp_tower_apply(params["mlp"], x, act="silu")[..., 0]
+    v, i = jax.lax.top_k(scores.astype(jnp.float32), top_k)
+    return v, i

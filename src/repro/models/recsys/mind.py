@@ -1,0 +1,101 @@
+"""MIND [arXiv:1904.08030] — multi-interest capsule network.
+
+Behavior-to-interest (B2I) dynamic routing: T history embeddings → K interest
+capsules (squash nonlinearity, routing logits NOT backpropagated across
+iterations, per the paper). Label-aware attention (pow-2) for training;
+serving scores are max over interests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import runtime
+from repro.configs.base import RecsysConfig
+from repro.models.layers import mlp_tower_apply, mlp_tower_init
+from repro.models.recsys.common import (embed_fields, l2_normalize,
+                                        sampled_softmax_loss, tables_init)
+from repro.sparse.sharded import sharded_embedding_bag_2d
+
+
+def init(key, cfg: RecsysConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    D = cfg.embed_dim
+    return {
+        "tables": tables_init(k1, cfg),
+        "s_bilinear": jax.random.normal(k2, (D, D), jnp.float32) / np.sqrt(D),
+        "interest_mlp": mlp_tower_init(k3, D, cfg.mlp + (D,), jnp.float32),
+    }
+
+
+def squash(s: jax.Array) -> jax.Array:
+    n2 = jnp.sum(s * s, -1, keepdims=True)
+    return (n2 / (1.0 + n2)) * s / jnp.sqrt(n2 + 1e-9)
+
+
+def interests(params, hist_emb: jax.Array, hist_mask: jax.Array,
+              cfg: RecsysConfig) -> jax.Array:
+    """hist_emb (B,T,D), mask (B,T) → (B,K,D) interest capsules."""
+    B, T, D = hist_emb.shape
+    K = cfg.n_interests
+    low = hist_emb @ params["s_bilinear"]                    # (B,T,D)
+    # fixed pseudo-random routing init (paper: random, not learned)
+    b0 = jnp.asarray(np.random.default_rng(0).normal(size=(1, K, T)),
+                     jnp.float32)
+    b = jnp.broadcast_to(b0, (B, K, T))
+    neg = -1e30 * (1.0 - hist_mask)[:, None, :]
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(b + neg, axis=1)                  # over K
+        s = jnp.einsum("bkt,btd->bkd", w, jax.lax.stop_gradient(low))
+        u = squash(s)
+        b = b + jnp.einsum("bkd,btd->bkt", u, jax.lax.stop_gradient(low))
+    # final pass lets gradients flow through the last aggregation
+    w = jax.nn.softmax(b + neg, axis=1)
+    u = squash(jnp.einsum("bkt,btd->bkd", w, low))
+    u = mlp_tower_apply(params["interest_mlp"], u, final_act=False)
+    return l2_normalize(u)
+
+
+def _hist(params, batch, cfg):
+    hist_ids = batch["user"]["hist"]                          # (B,T)
+    mask = (hist_ids >= 0).astype(jnp.float32)
+    table = params["tables"]["item_id"]
+    emb = sharded_embedding_bag_2d(
+        table, jnp.maximum(hist_ids, 0).reshape(-1, 1))       # (B*T, D)
+    emb = emb.reshape(*hist_ids.shape, cfg.embed_dim) * mask[..., None]
+    return emb, mask
+
+
+def _target(params, item_ids, cfg):
+    return sharded_embedding_bag_2d(params["tables"]["item_id"],
+                                    item_ids["item_id"])
+
+
+def loss_fn(params, batch: dict, cfg: RecsysConfig) -> jax.Array:
+    emb, mask = _hist(params, batch, cfg)
+    I = interests(params, emb, mask, cfg)                     # (B,K,D)
+    tgt = l2_normalize(_target(params, batch["item"], cfg))   # (B,D)
+    # label-aware attention, pow 2
+    att = jax.nn.softmax(jnp.einsum("bkd,bd->bk", I, tgt) ** 2 * 8.0, axis=-1)
+    u = jnp.einsum("bk,bkd->bd", att, I)
+    return sampled_softmax_loss(l2_normalize(u), tgt)
+
+
+def serve_scores(params, batch: dict, cfg: RecsysConfig) -> jax.Array:
+    emb, mask = _hist(params, batch, cfg)
+    I = interests(params, emb, mask, cfg)
+    tgt = l2_normalize(_target(params, batch["item"], cfg))
+    return jnp.max(jnp.einsum("bkd,bd->bk", I, tgt), axis=-1)
+
+
+def retrieve(params, user_batch: dict, cand_ids: dict, cfg: RecsysConfig,
+             top_k: int = 100):
+    emb, mask = _hist(params, {"user": user_batch}, cfg)
+    I = interests(params, emb, mask, cfg)[0]                  # (K,D)
+    from repro.sparse.sharded import sharded_gather_a2a
+    v = sharded_gather_a2a(params["tables"]["item_id"], cand_ids["item_id"])
+    v = l2_normalize(runtime.shard(v, ("data", "model"), None))
+    scores = jnp.max(v @ I.T, axis=-1).astype(jnp.float32)    # (C,)
+    v, i = jax.lax.top_k(scores, top_k)
+    return v, i

@@ -1,0 +1,348 @@
+"""LM transformer assembly: dense (qwen3/smollm/starcoder2) and MoE+MLA
+(deepseek v2-lite / v3), with scan-over-layers, remat, chunked vocab loss,
+KV-cache prefill/decode, and optional MTP head (deepseek-v3).
+
+Params layout (stacked over layers so lax.scan keeps HLO size O(1) in depth):
+  embed.table (V, d)
+  dense_layers.* (n_dense, ...)     -- only for MoE configs' leading dense FFN layers
+  layers.* (n_scan, ...)            -- the homogeneous scanned stack
+  final_norm, lm_head.w (d, V)      -- lm_head absent when tie_embeddings
+  mtp.{proj, norm_h, norm_e, block} -- deepseek-v3 multi-token prediction
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import runtime
+from repro.configs.base import LMConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models.layers import (mlp_apply, mlp_init, norm_apply, norm_init)
+from repro.sparse.sharded import sharded_lookup
+
+
+def _dtype(cfg: LMConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _is_moe_layer_cfg(cfg: LMConfig) -> bool:
+    return cfg.moe is not None
+
+
+def _layer_init(key, cfg: LMConfig, moe_layer: bool) -> dict:
+    dt = _dtype(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"ln1": norm_init(cfg.d_model, cfg.norm, dt),
+         "ln2": norm_init(cfg.d_model, cfg.norm, dt),
+         "attn": attn.attn_init(k1, cfg, dt)}
+    if moe_layer:
+        p["moe"] = moe_lib.moe_expert_init(k2, cfg.d_model, cfg.moe, dt)
+        if cfg.moe.n_shared:
+            p["shared"] = mlp_init(k3, cfg.d_model,
+                                   cfg.moe.n_shared * cfg.moe.d_ff_expert,
+                                   cfg.d_model, cfg.glu, dt)
+    else:
+        d_ff = cfg.d_ff
+        if cfg.moe is not None:
+            d_ff = cfg.moe.dense_d_ff or cfg.d_ff
+        p["mlp"] = mlp_init(k2, cfg.d_model, d_ff, cfg.d_model, cfg.glu, dt)
+    return p
+
+
+def init(key, cfg: LMConfig) -> dict:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    n_dense = cfg.moe.n_dense_layers if cfg.moe else 0
+    n_scan = cfg.n_layers - n_dense
+    params: dict = {
+        "embed": {"table": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model),
+                                              jnp.float32) * 0.02).astype(dt)},
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dt),
+    }
+    if n_dense:
+        dkeys = jax.random.split(ks[1], n_dense)
+        params["dense_layers"] = jax.vmap(
+            lambda k: _layer_init(k, cfg, moe_layer=False))(dkeys)
+    lkeys = jax.random.split(ks[2], n_scan)
+    params["layers"] = jax.vmap(
+        lambda k: _layer_init(k, cfg, moe_layer=cfg.moe is not None))(lkeys)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": (jax.random.normal(ks[3], (cfg.d_model, cfg.vocab),
+                                                     jnp.float32)
+                                   / np.sqrt(cfg.d_model)).astype(dt)}
+    if cfg.mtp:
+        params["mtp"] = {
+            "proj": (jax.random.normal(ks[4], (2 * cfg.d_model, cfg.d_model),
+                                       jnp.float32) / np.sqrt(2 * cfg.d_model)).astype(dt),
+            "norm_h": norm_init(cfg.d_model, cfg.norm, dt),
+            "norm_e": norm_init(cfg.d_model, cfg.norm, dt),
+            "block": _layer_init(ks[5], cfg, moe_layer=cfg.moe is not None),
+        }
+    return params
+
+
+# ----------------------------------------------------------------- blocks
+
+def _block(p, x, positions, cfg: LMConfig, moe_layer: bool):
+    """Pre-norm transformer block. Returns (x, aux_loss)."""
+    if cfg.shard_carry:
+        # pin BOTH ends of the scan carry so the remat-saved layer-input
+        # stack stays model-sharded (d/16 per device)
+        x = runtime.shard(x, runtime.batch_axes(), None, "model")
+    else:
+        x = runtime.shard(x, runtime.batch_axes(), None, None)
+    h, _ = attn.attn_forward(p["attn"], norm_apply(x, p["ln1"], cfg.norm, cfg.norm_eps),
+                             positions, cfg)
+    x = x + h
+    ff_in = norm_apply(x, p["ln2"], cfg.norm, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if moe_layer:
+        ff, aux = moe_lib.moe_apply(p["moe"], ff_in, cfg.moe, cfg.act)
+        if "shared" in p:
+            ff = ff + mlp_apply(p["shared"], ff_in, cfg.act, cfg.glu)
+    else:
+        ff = mlp_apply(p["mlp"], ff_in, cfg.act, cfg.glu)
+    out = x + ff
+    if cfg.shard_carry:
+        # shard the residual stream (and thus the remat-saved layer inputs)
+        # over ``model`` — Megatron-SP-style; layer entry re-gathers
+        out = runtime.shard(out, runtime.batch_axes(), None, "model")
+    return out, aux
+
+
+def _block_decode(p, x, positions, cfg: LMConfig, moe_layer: bool, cache, cache_len):
+    h, new_cache = attn.attn_forward(
+        p["attn"], norm_apply(x, p["ln1"], cfg.norm, cfg.norm_eps),
+        positions, cfg, cache=cache, cache_len=cache_len)
+    x = x + h
+    ff_in = norm_apply(x, p["ln2"], cfg.norm, cfg.norm_eps)
+    if moe_layer:
+        ff, _ = moe_lib.moe_apply(p["moe"], ff_in, cfg.moe, cfg.act)
+        if "shared" in p:
+            ff = ff + mlp_apply(p["shared"], ff_in, cfg.act, cfg.glu)
+    else:
+        ff = mlp_apply(p["mlp"], ff_in, cfg.act, cfg.glu)
+    return x + ff, new_cache
+
+
+def hidden_states(params, tokens, cfg: LMConfig):
+    """Embed + all blocks + final norm. tokens (B,S) → (B,S,d), aux."""
+    B, S = tokens.shape
+    x = sharded_lookup(params["embed"]["table"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if "dense_layers" in params:
+        n_dense = jax.tree.leaves(params["dense_layers"])[0].shape[0]
+        for i in range(n_dense):
+            p_i = jax.tree.map(lambda a: a[i], params["dense_layers"])
+            x, _ = _block(p_i, x, positions, cfg, moe_layer=False)
+
+    moe_layer = cfg.moe is not None
+
+    def body(p, x):
+        return _block(p, x, positions, cfg, moe_layer)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_fn(x, p):
+        new_x, aux = body(p, x)
+        return new_x, aux
+
+    x, auxes = jax.lax.scan(scan_fn, x, params["layers"])
+    aux_total = aux_total + auxes.sum()
+    x = norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    return x, aux_total
+
+
+def _head_w(params, cfg: LMConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["lm_head"]["w"]
+
+
+def chunked_xent(x, head_w, labels, mask, chunk: int = 512):
+    """Cross-entropy without materializing (B,S,V): scan over S chunks.
+    head_w may be vocab-sharded on ``model`` — GSPMD turns the logsumexp
+    into a psum over the vocab shards."""
+    B, S, d = x.shape
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    xc = x.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    V = head_w.shape[-1]
+
+    def body(carry, xs):
+        tot, cnt = carry
+        xi, li, mi = xs
+        logits = (xi @ head_w).astype(jnp.float32)           # (B,c,V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # gold logit via masked sum — take_along_axis over a vocab-sharded
+        # dim would force an all-gather of the full logits chunk; this form
+        # reduces locally and psums only (B,c).
+        onehot = (jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+                  == li[..., None])
+        gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+        nll = (lse - gold) * mi
+        return (tot + nll.sum(), cnt + mi.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)),
+                                 (xc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(params, tokens, cfg: LMConfig, aux_weight: float = 1e-3):
+    """Next-token loss (+MTP loss for deepseek-v3). tokens (B,S)."""
+    x, aux = hidden_states(params, tokens, cfg)
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1] * 0], axis=1)
+    mask = jnp.concatenate([jnp.ones_like(tokens[:, 1:], jnp.float32),
+                            jnp.zeros_like(tokens[:, :1], jnp.float32)], axis=1)
+    head_w = _head_w(params, cfg)
+    loss = chunked_xent(x, head_w, labels, mask)
+    if cfg.mtp and "mtp" in params:
+        # MTP depth 1: combine h_t with embedding of token t+1, one extra
+        # block, predict token t+2 (deepseek-v3 §2.2).
+        mp = params["mtp"]
+        emb_next = sharded_lookup(params["embed"]["table"],
+                                  jnp.roll(tokens, -1, axis=1))
+        h = jnp.concatenate([
+            norm_apply(x, mp["norm_h"], cfg.norm, cfg.norm_eps),
+            norm_apply(emb_next, mp["norm_e"], cfg.norm, cfg.norm_eps)], -1)
+        h = h @ mp["proj"]
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        h, _ = _block(mp["block"], h, positions, cfg, moe_layer=cfg.moe is not None)
+        labels2 = jnp.roll(tokens, -2, axis=1)
+        mask2 = jnp.concatenate([jnp.ones_like(tokens[:, 2:], jnp.float32),
+                                 jnp.zeros_like(tokens[:, :2], jnp.float32)], 1)
+        loss = loss + 0.3 * chunked_xent(h, head_w, labels2, mask2)
+    return loss + aux_weight * aux
+
+
+# ----------------------------------------------------------------- serving
+
+class KVCache(NamedTuple):
+    """Per-layer stacks. GQA: a=(L,B,Smax,Hkv,D) k, b=v. MLA: a=(L,B,Smax,kv_lora)
+    latent, b=(L,B,Smax,d_rope) rope keys. length: valid prefix."""
+    a: jax.Array
+    b: jax.Array
+    length: jax.Array
+
+    @staticmethod
+    def shapes(cfg: LMConfig, batch: int, smax: int):
+        dt = jnp.dtype(cfg.param_dtype)
+        n_scan = cfg.n_layers - (cfg.moe.n_dense_layers if cfg.moe else 0)
+        L = cfg.n_layers
+        if cfg.mla:
+            a = jax.ShapeDtypeStruct((L, batch, smax, cfg.mla.kv_lora), dt)
+            b = jax.ShapeDtypeStruct((L, batch, smax, cfg.mla.d_rope), dt)
+        else:
+            a = jax.ShapeDtypeStruct((L, batch, smax, cfg.n_kv, cfg.d_head), dt)
+            b = jax.ShapeDtypeStruct((L, batch, smax, cfg.n_kv, cfg.d_head), dt)
+        return KVCache(a=a, b=b, length=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def _split_cache(cache: KVCache, cfg: LMConfig):
+    n_dense = cfg.moe.n_dense_layers if cfg.moe else 0
+    dense = (cache.a[:n_dense], cache.b[:n_dense])
+    scanned = (cache.a[n_dense:], cache.b[n_dense:])
+    return dense, scanned, n_dense
+
+
+def decode_step(params, cache: KVCache, tokens, cfg: LMConfig):
+    """One decode step: tokens (B,1) + cache → (logits (B,V), new cache)."""
+    B = tokens.shape[0]
+    x = sharded_lookup(params["embed"]["table"], tokens)
+    positions = jnp.broadcast_to(cache.length, (B, 1))
+    (da, db), (sa, sb), n_dense = _split_cache(cache, cfg)
+
+    new_da, new_db = [], []
+    for i in range(n_dense):
+        p_i = jax.tree.map(lambda a: a[i], params["dense_layers"])
+        x, (ka, kb) = _block_decode(p_i, x, positions, cfg, False,
+                                    (da[i], db[i]), cache.length)
+        new_da.append(ka); new_db.append(kb)
+
+    moe_layer = cfg.moe is not None
+
+    # NOTE: a carried-stack variant (cache stacks in the scan carry, updated
+    # via dynamic_update_index so XLA aliases the donated buffers) MEASURED
+    # WORSE on the dry-run backend (+1 GB/dev: the DUS-in-carry copies
+    # instead of aliasing) — refuted, reverted; see EXPERIMENTS §Perf.
+    def scan_fn(x, xs):
+        p, ca, cb = xs
+        x, (na, nb) = _block_decode(p, x, positions, cfg, moe_layer,
+                                    (ca, cb), cache.length)
+        return x, (na, nb)
+
+    x, (ns_a, ns_b) = jax.lax.scan(scan_fn, x, (params["layers"], sa, sb))
+    x = norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    logits = (x[:, -1] @ _head_w(params, cfg)).astype(jnp.float32)
+    a = jnp.concatenate([jnp.stack(new_da), ns_a]) if n_dense else ns_a
+    b = jnp.concatenate([jnp.stack(new_db), ns_b]) if n_dense else ns_b
+    return logits, KVCache(a=a, b=b, length=cache.length + 1)
+
+
+def prefill(params, tokens, cfg: LMConfig, smax: int):
+    """Prefill: tokens (B,S) → (last-position logits, KVCache padded to smax)."""
+    B, S = tokens.shape
+    x = sharded_lookup(params["embed"]["table"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    n_dense = cfg.moe.n_dense_layers if cfg.moe else 0
+    pad = smax - S
+
+    def pad_kv(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+
+    new_a, new_b = [], []
+    for i in range(n_dense):
+        p_i = jax.tree.map(lambda a: a[i], params["dense_layers"])
+        ff_x = norm_apply(x, p_i["ln1"], cfg.norm, cfg.norm_eps)
+        h, kv = attn.attn_forward(p_i["attn"], ff_x, positions, cfg)
+        x = x + h
+        x = x + mlp_apply(p_i["mlp"], norm_apply(x, p_i["ln2"], cfg.norm, cfg.norm_eps),
+                          cfg.act, cfg.glu)
+        new_a.append(pad_kv(kv[0])); new_b.append(pad_kv(kv[1]))
+
+    moe_layer = cfg.moe is not None
+
+    def body(p, x):
+        h, kv = attn.attn_forward(
+            p["attn"], norm_apply(x, p["ln1"], cfg.norm, cfg.norm_eps),
+            positions, cfg)
+        x = x + h
+        ff_in = norm_apply(x, p["ln2"], cfg.norm, cfg.norm_eps)
+        if moe_layer:
+            ff, _ = moe_lib.moe_apply(p["moe"], ff_in, cfg.moe, cfg.act)
+            if "shared" in p:
+                ff = ff + mlp_apply(p["shared"], ff_in, cfg.act, cfg.glu)
+        else:
+            ff = mlp_apply(p["mlp"], ff_in, cfg.act, cfg.glu)
+        return x + ff, kv
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_fn(x, p):
+        new_x, kv = body(p, x)
+        return new_x, (pad_kv(kv[0]), pad_kv(kv[1]))
+
+    x, (sa, sb) = jax.lax.scan(scan_fn, x, params["layers"])
+    x = norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    logits = (x[:, -1] @ _head_w(params, cfg)).astype(jnp.float32)
+    a = jnp.concatenate([jnp.stack(new_a), sa]) if n_dense else sa
+    b = jnp.concatenate([jnp.stack(new_b), sb]) if n_dense else sb
+    return logits, KVCache(a=a, b=b, length=jnp.asarray(S, jnp.int32))

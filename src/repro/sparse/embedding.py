@@ -1,0 +1,84 @@
+"""EmbeddingBag and friends, in pure JAX.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR/CSC sparse — the lookup
+substrate here (``jnp.take`` + ``jax.ops.segment_sum``) IS part of the system
+(kernel_taxonomy §RecSys). Three layouts are supported:
+
+  * dense ids            — (..., ) int32 → (..., D)             (plain lookup)
+  * padded multi-hot     — (B, K) ids + (B, K) weights/mask     (fixed-width bags)
+  * ragged (segment)     — (N,) ids + (N,) segment_ids, B bags  (true EmbeddingBag)
+
+The Pallas ``embedding_bag`` kernel (repro.kernels.embedding_bag) accelerates
+the padded layout; these jnp paths are its oracle and the general substrate.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TableSpec:
+    name: str
+    vocab: int          # rows (hashed bucket count)
+    dim: int
+    combiner: str = "sum"   # sum | mean
+    init_scale: float = 0.01
+
+    @property
+    def bytes_fp32(self) -> int:
+        return self.vocab * self.dim * 4
+
+
+def init_table(key: jax.Array, spec: TableSpec, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (spec.vocab, spec.dim), dtype=jnp.float32)
+            * spec.init_scale).astype(dtype)
+
+
+def lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """Plain dense lookup: (...,) int → (..., D). mode='clip' keeps XLA
+    gather in-bounds semantics explicit (matches TPU behaviour)."""
+    return jnp.take(table, ids, axis=0, mode="clip")
+
+
+def embedding_bag_padded(table: jax.Array, ids: jax.Array,
+                         weights: Optional[jax.Array] = None,
+                         combiner: str = "sum") -> jax.Array:
+    """Fixed-width bags: ids (B, K) → (B, D). weights (B, K) doubles as the
+    validity mask (0 for padding)."""
+    vecs = lookup(table, ids)                      # (B, K, D)
+    if weights is None:
+        weights = jnp.ones(ids.shape, dtype=vecs.dtype)
+    out = jnp.einsum("bk,bkd->bd", weights.astype(vecs.dtype), vecs)
+    if combiner == "mean":
+        denom = jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+        out = out / denom.astype(out.dtype)
+    return out
+
+
+def embedding_bag_ragged(table: jax.Array, ids: jax.Array, segment_ids: jax.Array,
+                         num_bags: int, weights: Optional[jax.Array] = None,
+                         combiner: str = "sum") -> jax.Array:
+    """True EmbeddingBag: flat ids (N,) with segment_ids (N,) → (num_bags, D)."""
+    vecs = lookup(table, ids)                      # (N, D)
+    if weights is not None:
+        vecs = vecs * weights[:, None].astype(vecs.dtype)
+    out = jax.ops.segment_sum(vecs, segment_ids, num_segments=num_bags)
+    if combiner == "mean":
+        ones = jnp.ones((ids.shape[0],), vecs.dtype)
+        if weights is not None:
+            ones = weights.astype(vecs.dtype)
+        cnt = jax.ops.segment_sum(ones, segment_ids, num_segments=num_bags)
+        out = out / jnp.maximum(cnt, 1e-9)[:, None]
+    return out
+
+
+def offsets_to_segment_ids(offsets: np.ndarray, total: int) -> np.ndarray:
+    """torch-EmbeddingBag style offsets (B,) → segment_ids (N,). Host-side."""
+    seg = np.zeros(total, dtype=np.int32)
+    np.add.at(seg, offsets[1:][offsets[1:] < total], 1)
+    return np.cumsum(seg).astype(np.int32)

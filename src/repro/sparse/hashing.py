@@ -1,0 +1,52 @@
+"""Feature signatures via universal hashing (paper §5.1).
+
+The cube keys every sparse parameter by a *compact feature signature*: a
+universally-unique identifier derived from (feature-group, raw id) via a
+universal hash family (Carter & Wegman). We reproduce that exactly; the same
+signature function is used host-side (ParameterCube) and device-side (hashed
+embedding lookup), so cube contents and TPU-sharded tables agree.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# 64-bit universal multiply-shift family with fixed, documented constants.
+_MUL = np.uint64(0x9E3779B97F4A7C15)  # golden-ratio odd multiplier
+_XOR = np.uint64(0xBF58476D1CE4E5B9)
+
+
+def signature_np(group: np.ndarray | int, raw_id: np.ndarray | int) -> np.ndarray:
+    """uint64 feature signature, numpy (host / cube side)."""
+    g = np.asarray(group, dtype=np.uint64)
+    r = np.asarray(raw_id, dtype=np.uint64)
+    h = (g * np.uint64(0xD1B54A32D192ED03) + r) & np.uint64(0xFFFFFFFFFFFFFFFF)
+    h ^= h >> np.uint64(33)
+    h = (h * _MUL) & np.uint64(0xFFFFFFFFFFFFFFFF)
+    h ^= h >> np.uint64(29)
+    h = (h ^ _XOR) & np.uint64(0xFFFFFFFFFFFFFFFF)
+    return h
+
+
+def hash_bucket_np(group, raw_id, vocab: int) -> np.ndarray:
+    """Row index into a hashed embedding table (host side)."""
+    return (signature_np(group, raw_id) % np.uint64(vocab)).astype(np.int64)
+
+
+def hash_bucket(group: int, raw_ids: jnp.ndarray, vocab: int) -> jnp.ndarray:
+    """Row index into a hashed embedding table (device side, uint32 math).
+
+    jnp lacks uint64 by default; we use a 2x32-bit mix with the same
+    collision properties. Determinism across host/device is not required
+    (tables are keyed consistently per side); tests assert determinism and
+    near-uniform spread.
+    """
+    x = raw_ids.astype(jnp.uint32)
+    g = jnp.uint32((group * 0x9E3779B9 + 0x85EBCA6B) & 0xFFFFFFFF)
+    h = (x ^ g) * jnp.uint32(0xCC9E2D51)
+    h = (h << 13) | (h >> 19)
+    h = h * jnp.uint32(0x1B873593) + jnp.uint32(0xE6546B64)
+    h ^= h >> 16
+    h = h * jnp.uint32(0x85EBCA6B)
+    h ^= h >> 13
+    return (h % jnp.uint32(vocab)).astype(jnp.int32)

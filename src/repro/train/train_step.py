@@ -1,0 +1,56 @@
+"""Generic train-step builders: value_and_grad + (optional) microbatched
+gradient accumulation (lax.scan) + optimizer update.
+
+Gradients accumulate in param dtype — for deepseek-v3 that is bf16 by memory
+necessity (fp32 accumulation of 671B grads is 2.7 TB; documented trade-off in
+DESIGN.md; Adafactor's update clipping absorbs the extra noise).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def build_train_step(loss_fn: Callable, opt, *, n_micro: int = 1,
+                     split_batch: Callable = None, grad_shardings=None):
+    """loss_fn(params, batch) → scalar. split_batch(batch, n_micro) → pytree
+    whose leaves have a leading n_micro dim (default: reshape dim 0).
+    grad_shardings: optional NamedSharding tree — constrains the grad
+    accumulator (ZeRO-2: grads reduce-scatter into shards, optimizer runs
+    sharded, updated params all-gather once per step)."""
+    opt_init, opt_update = opt
+
+    if split_batch is None:
+        def split_batch(batch, n):
+            return jax.tree.map(
+                lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]), batch)
+
+    def constrain(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            grads, grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = constrain(grads)
+        else:
+            mb = split_batch(batch, n_micro)
+
+            def micro(acc, b):
+                l, g = jax.value_and_grad(loss_fn)(params, b)
+                return constrain(jax.tree.map(jnp.add, acc, g)), l
+
+            zeros = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, p.dtype), params))
+            grads, losses = jax.lax.scan(micro, zeros, mb)
+            grads = jax.tree.map(lambda g: (g / n_micro).astype(g.dtype), grads)
+            loss = losses.mean()
+        new_params, new_opt = opt_update(grads, opt_state, params)
+        return new_params, new_opt, loss.astype(jnp.float32)
+
+    return train_step, opt_init

@@ -1,0 +1,14 @@
+import os
+
+# Tests see exactly ONE device (the dry-run sets its own placeholder fleet
+# in a subprocess) — per the dry-run contract, never set
+# xla_force_host_platform_device_count globally.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

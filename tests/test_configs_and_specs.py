@@ -1,0 +1,82 @@
+"""Config/spec invariants: knob roundtrips, ZeRO spec derivation, shapes."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import LM_SHAPES, REC_SHAPES
+from repro.core.service_model import Knobs
+from repro.launch.mesh import make_mesh
+from repro.launch import sharding as shr
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-1000, 1000), min_size=10, max_size=10))
+def test_knobs_vector_roundtrip_clamps_to_bounds(xs):
+    k = Knobs.from_vector(np.array(xs))
+    v = k.to_vector()
+    for (name, lo, hi), val in zip(Knobs.BOUNDS, v):
+        assert lo <= val <= hi, (name, val)
+    # roundtrip is a fixed point once clamped
+    k2 = Knobs.from_vector(v)
+    assert k2 == k
+
+
+def _abstract_mesh(shape, axes):
+    return jax.sharding.AbstractMesh(shape, axes)
+
+
+def test_zero_specs_add_data_axis_to_big_unsharded_leaves():
+    mesh = _abstract_mesh((4, 2), ("data", "model"))
+    shapes = {
+        "big": jax.ShapeDtypeStruct((1024, 2048), np.float32),
+        "small": jax.ShapeDtypeStruct((8, 8), np.float32),
+        "sharded": jax.ShapeDtypeStruct((1024, 2048), np.float32),
+        "odd": jax.ShapeDtypeStruct((1023, 2047), np.float32),
+    }
+    pspecs = {"big": P(None, None), "small": P(None, None),
+              "sharded": P("data", None), "odd": P(None, None)}
+    z = shr.zero_specs(shapes, pspecs, mesh, min_size=1 << 10)
+    assert "data" in tuple(a for s in z["big"] if s for a in
+                           (s if isinstance(s, tuple) else (s,)))
+    assert z["small"] == P(None, None)            # too small
+    assert z["sharded"] == P("data", None)        # already data-sharded
+    assert z["odd"] == P(None, None)              # indivisible
+
+
+def test_kv_cache_specs_shard_sequence():
+    from repro.configs import registry as reg
+    mesh = _abstract_mesh((4, 2), ("data", "model"))
+    cfg = reg.get("qwen3-8b").config
+    a, b, l = shr.kv_cache_specs(cfg, batch=8, mesh=mesh)
+    assert a == P(None, ("data",), ("model",), None, None)
+    # batch-1 long context: sequence over every axis
+    a1, _, _ = shr.kv_cache_specs(cfg, batch=1, mesh=mesh)
+    assert a1 == P(None, None, ("data", "model"), None, None)
+
+
+def test_every_arch_has_every_assigned_shape():
+    want = {"lm": {"train_4k", "prefill_32k", "decode_32k", "long_500k"},
+            "gnn": {"full_graph_sm", "minibatch_lg", "ogb_products", "molecule"},
+            "recsys": {"train_batch", "serve_p99", "serve_bulk",
+                       "retrieval_cand"}}
+    for arch in registry.ARCHS.values():
+        names = {s.name for s in arch.shapes}
+        assert names == want[arch.family], arch.arch_id
+
+
+def test_recsys_tables_shard_evenly_over_both_meshes():
+    for arch in registry.ARCHS.values():
+        if arch.family != "recsys":
+            continue
+        for f in arch.config.user_fields + arch.config.item_fields:
+            assert f.vocab % 512 == 0, (arch.arch_id, f.name)
+
+
+def test_lm_vocab_divisible_by_model_axis():
+    for aid in ("qwen3-8b", "smollm-135m", "starcoder2-7b",
+                "deepseek-v2-lite-16b", "deepseek-v3-671b"):
+        assert registry.get(aid).config.vocab % 16 == 0, aid

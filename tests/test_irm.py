@@ -1,0 +1,88 @@
+"""IRM: constrained CMA-ES, F^R/F^L models, load shedding (paper §6)."""
+import numpy as np
+import pytest
+
+from repro.core.irm.cmaes import cmaes_minimize, one_plus_one_cmaes
+from repro.core.irm.models import RidgeEnsemble
+from repro.core.irm.shedding import (OnlineShedder, features_from,
+                                     oracle_cutoff, train_pruning_dnn)
+
+
+def test_cmaes_sphere():
+    res = cmaes_minimize(lambda x: float(np.sum((x - 3.0) ** 2)),
+                         x0=np.zeros(4), sigma0=0.3,
+                         bounds=[(-10, 10)] * 4, budget=1500, seed=1)
+    assert res.f < 1e-2
+    np.testing.assert_allclose(res.x, 3.0, atol=0.2)
+
+
+def test_cmaes_respects_constraint():
+    # min (x-3)² s.t. x ≤ 1  → optimum at boundary x = 1
+    res = cmaes_minimize(lambda x: float(np.sum((x - 3.0) ** 2)),
+                         x0=np.full(3, -2.0), sigma0=0.3,
+                         bounds=[(-10, 10)] * 3,
+                         constraints=lambda x: x - 1.0,
+                         budget=2000, seed=2)
+    assert res.feasible
+    assert np.all(res.x <= 1.0 + 1e-6)
+    assert res.f < 13.0                       # (3-1)²·3 = 12 + slack
+    feas = res.best_feasible_candidates(5)
+    assert len(feas) >= 1 and all(p.feasible for p in feas)
+
+
+def test_one_plus_one_cmaes_constrained():
+    res = one_plus_one_cmaes(lambda x: float(np.sum((x - 3.0) ** 2)),
+                             x0=np.zeros(3), sigma0=0.2,
+                             bounds=[(-10, 10)] * 3,
+                             constraints=lambda x: x - 1.0,
+                             budget=1500, seed=3)
+    assert res.feasible
+    assert np.all(res.x <= 1.0 + 1e-6)
+    assert res.f < 13.0
+
+
+def test_ridge_ensemble_learns_quadratic(rng):
+    X = rng.uniform(-1, 1, (300, 4))
+    y = 2 + X[:, 0] * 3 + X[:, 1] ** 2 - X[:, 2] * X[:, 3] \
+        + rng.normal(0, 0.01, 300)
+    m = RidgeEnsemble().fit(X, y)
+    pred, std = m.predict(X[:50], with_std=True)
+    assert np.mean((pred - y[:50]) ** 2) < 0.05
+    assert np.all(std >= 0)
+
+
+def test_oracle_cutoff_quota_monotone(rng):
+    scores = rng.random(800)
+    cuts = [oracle_cutoff(scores, q, eps=0.05) for q in (0.05, 0.3, 1.0)]
+    assert cuts[0] >= cuts[1] >= cuts[2]           # tighter quota → more shed
+    assert all(0.0 <= c < 1.0 for c in cuts)
+    # top-k always survives
+    assert (1 - cuts[0]) * len(scores) >= 12
+
+
+def test_pruning_dnn_tracks_oracle():
+    dnn, mse = train_pruning_dnn(n_samples=800, seed=0)
+    assert mse < 0.02, mse
+    rng = np.random.default_rng(5)
+    scores = rng.beta(2, 5, 600)
+    tight = dnn(features_from(scores, 0.05, 0.3, 1)[None])[0]
+    loose = dnn(features_from(scores, 1.0, 0.3, 1)[None])[0]
+    assert tight > loose                           # sheds more under pressure
+
+
+def test_online_shedder_preserves_top_candidates(rng):
+    from repro.core.sedp import Event
+
+    class Ctx:
+        def queue_depth(self, s):
+            return 5000                            # overloaded
+
+    dnn, _ = train_pruning_dnn(n_samples=400, seed=1)
+    shedder = OnlineShedder(dnn, capacity_qps_proxy=100.0, min_keep=12)
+    cands = [(i, float(s)) for i, s in enumerate(rng.random(500))]
+    ev = Event(payload={"candidates": list(cands)})
+    shedder.op([ev], Ctx())
+    kept = ev.payload["candidates"]
+    assert 12 <= len(kept) < 500
+    top12 = sorted(cands, key=lambda c: -c[1])[:12]
+    assert set(c[0] for c in top12) <= set(c[0] for c in kept)

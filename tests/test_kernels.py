@@ -1,0 +1,117 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.augru.ops import augru
+from repro.kernels.augru.ref import augru_ref
+from repro.kernels.din_attention.ops import din_attention
+from repro.kernels.din_attention.ref import din_attention_ref
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.flash_decode.ops import flash_decode
+from repro.kernels.flash_decode.ref import flash_decode_ref
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+@pytest.mark.parametrize("V,D,B,K", [(64, 8, 8, 3), (128, 64, 16, 5),
+                                     (1000, 128, 8, 10), (32, 256, 24, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("combiner", ["sum", "mean"])
+def test_embedding_bag_sweep(V, D, B, K, dtype, combiner, rng):
+    table = jnp.asarray(rng.normal(size=(V, D))).astype(dtype)
+    ids = jnp.asarray(rng.integers(0, V, (B, K)).astype(np.int32))
+    w = jnp.asarray((rng.random((B, K)) > 0.2).astype(np.float32))
+    got = embedding_bag(table, ids, w, combiner=combiner)
+    want = embedding_bag_ref(table, ids, w, combiner=combiner)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("B,T,D,H1,H2", [(8, 8, 8, 8, 4), (16, 100, 18, 80, 40),
+                                         (12, 33, 16, 32, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_din_attention_sweep(B, T, D, H1, H2, dtype, rng):
+    hist = jnp.asarray(rng.normal(size=(B, T, D))).astype(dtype)
+    mask = jnp.asarray((rng.random((B, T)) > 0.2).astype(np.float32))
+    tgt = jnp.asarray(rng.normal(size=(B, D))).astype(dtype)
+    w1 = jnp.asarray(rng.normal(size=(4 * D, H1)) * 0.2).astype(dtype)
+    w2 = jnp.asarray(rng.normal(size=(H1, H2)) * 0.2).astype(dtype)
+    w3 = jnp.asarray(rng.normal(size=(H2, 1)) * 0.2).astype(dtype)
+    b1, b2, b3 = (jnp.zeros(H1, dtype), jnp.zeros(H2, dtype),
+                  jnp.zeros(1, dtype))
+    got = din_attention(hist, mask, tgt, w1, b1, w2, b2, w3, b3)
+    want = din_attention_ref(hist, mask, tgt, w1, b1, w2, b2, w3, b3)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("B,T,Din,H", [(8, 8, 8, 8), (16, 100, 18, 108),
+                                       (4, 25, 12, 20)])
+def test_augru_sweep(B, T, Din, H, rng):
+    x = jnp.asarray(rng.normal(size=(B, T, Din)).astype(np.float32))
+    att = jnp.asarray(rng.random((B, T)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(Din, 3 * H)).astype(np.float32) * 0.3)
+    u = jnp.asarray(rng.normal(size=(H, 3 * H)).astype(np.float32) * 0.3)
+    b = jnp.asarray(rng.normal(size=(3 * H,)).astype(np.float32) * 0.1)
+    got = augru(x, att, w, u, b)
+    want = augru_ref(x, att, w, u, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_augru_zero_attention_freezes_state(rng):
+    """Property: a_t = 0 ⇒ h never moves (AUGRU gate algebra)."""
+    x = jnp.asarray(rng.normal(size=(4, 12, 8)).astype(np.float32))
+    att = jnp.zeros((4, 12), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(8, 24)).astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(8, 24)).astype(np.float32))
+    b = jnp.zeros(24, jnp.float32)
+    out = augru(x, att, w, u, b)
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-7)
+
+
+@pytest.mark.parametrize("B,S,H,G,D,L", [(2, 128, 4, 3, 16, 100),
+                                         (1, 256, 2, 1, 64, 256),
+                                         (4, 64, 8, 4, 32, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(B, S, H, G, D, L, dtype, rng):
+    q = jnp.asarray(rng.normal(size=(B, H, G, D))).astype(dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, H, D))).astype(dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, H, D))).astype(dtype)
+    got = flash_decode(q, k, v, L, block_k=32)
+    want = flash_decode_ref(q, k, v, L)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_flash_decode_matches_model_decode_path(rng):
+    """Kernel ≡ the model's decode_attention (same masking semantics)."""
+    from repro.models.attention import decode_attention
+    B, S, H, G, D, L = 2, 96, 2, 2, 16, 70
+    q4 = jnp.asarray(rng.normal(size=(B, 1, H, G, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, H, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, H, D)).astype(np.float32))
+    want = decode_attention(q4, k, v, jnp.asarray(L))[:, 0]    # (B,H,G,D)
+    got = flash_decode(q4[:, 0], k, v, L, block_k=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("C,D,k,bc", [(4096, 64, 8, 512), (1000, 16, 4, 256),
+                                      (300, 256, 8, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_candidate_scorer_sweep(C, D, k, bc, dtype, rng):
+    from repro.kernels.candidate_scorer.ops import candidate_scorer
+    from repro.kernels.candidate_scorer.ref import candidate_scorer_ref
+    cands = jnp.asarray(rng.normal(size=(C, D))).astype(dtype)
+    q = jnp.asarray(rng.normal(size=(D,))).astype(dtype)
+    v, i = candidate_scorer(cands, q, k=k, block_c=bc)
+    rv, ri = candidate_scorer_ref(cands, q, k)
+    np.testing.assert_allclose(np.asarray(v, np.float32),
+                               np.asarray(rv, np.float32), **TOL[dtype])
+    if dtype == jnp.float32:           # bf16 near-ties may permute indices
+        assert set(np.asarray(i).tolist()) == set(np.asarray(ri).tolist())

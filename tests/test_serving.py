@@ -1,0 +1,68 @@
+"""Serving substrate: batchers + launchers (smoke via subprocess)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.serve.batcher import ContinuousBatcher, MicroBatcher
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_microbatcher_size_trigger():
+    mb = MicroBatcher(max_batch=4, max_wait_s=10.0)
+    assert mb.offer(1, now=0.0) is None
+    assert mb.offer(2, now=0.0) is None
+    assert mb.offer(3, now=0.0) is None
+    out = mb.offer(4, now=0.0)
+    assert out == [1, 2, 3, 4]
+
+
+def test_microbatcher_timeout_trigger():
+    mb = MicroBatcher(max_batch=100, max_wait_s=0.5)
+    mb.offer("a", now=0.0)
+    assert mb.poll(now=0.1) is None
+    assert mb.poll(now=0.6) == ["a"]
+    assert mb.poll(now=0.7) is None
+
+
+def test_continuous_batcher_join_leave():
+    cb = ContinuousBatcher(n_slots=2, s_max=16)
+    for i in range(4):
+        cb.submit(i, prompt_len=4, max_new=2)
+    assert cb.active_mask.sum() == 2 and len(cb.waiting) == 2
+    cb.step_complete(np.array([False, False]))
+    cb.step_complete(np.array([False, False]))   # max_new exhausted
+    assert sorted(cb.completed) == [0, 1]
+    assert cb.active_mask.sum() == 2             # waiters admitted
+    cb.step_complete(np.array([True, True]))     # early EOS
+    assert sorted(cb.completed) == [0, 1, 2, 3]
+    assert cb.utilization == 0.0
+
+
+def _run(cmd, extra_env=None, timeout=600):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("JAX_PLATFORMS", None)
+    env.update(extra_env or {})
+    p = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout,
+                       env=env, cwd=ROOT)
+    assert p.returncode == 0, p.stdout[-1500:] + p.stderr[-1500:]
+    return p.stdout
+
+
+def test_train_launcher_reduced_with_resume(tmp_path):
+    out = _run([sys.executable, "-m", "repro.launch.train", "--reduced",
+                "--steps", "6", "--ckpt-every", "3",
+                "--ckpt-dir", str(tmp_path)])
+    assert "done; latest checkpoint" in out
+    out2 = _run([sys.executable, "-m", "repro.launch.train", "--reduced",
+                 "--steps", "3", "--ckpt-dir", str(tmp_path)])
+    assert "resumed from" in out2
+
+
+def test_serve_launcher_lm_mode():
+    out = _run([sys.executable, "-m", "repro.launch.serve", "--mode", "lm",
+                "--requests", "6"])
+    assert "decoded" in out and "completed" in out

@@ -1,0 +1,100 @@
+"""HHS: parameter cube, two-tier LFU cube cache, query cache (paper §5)."""
+import numpy as np
+import pytest
+
+from repro.core.cube import ParameterCube
+from repro.core.cube_cache import TwoTierLFUCache, capacity_from_ratio
+from repro.core.query_cache import QueryCache
+from repro.data.synthetic import zipf_ids
+
+
+@pytest.fixture()
+def cube(rng):
+    c = ParameterCube(n_servers=4, replication=2, block_rows=64,
+                      mem_block_fraction=0.5)
+    c.load_table(0, rng.normal(size=(500, 8)).astype(np.float32))
+    c.load_table(1, rng.normal(size=(300, 8)).astype(np.float32))
+    return c
+
+
+def test_cube_lookup_roundtrip(cube, rng):
+    table = rng.normal(size=(100, 8)).astype(np.float32)
+    c = ParameterCube(n_servers=3, replication=2, block_rows=32)
+    c.load_table(7, table)
+    ids = rng.integers(0, 100, 50)
+    got = c.lookup(7, ids)
+    np.testing.assert_allclose(got, table[ids], rtol=1e-6)
+
+
+def test_cube_blocks_split_memory_disk(cube):
+    placements = [b.on_disk for srv in cube.servers for b in srv.blocks]
+    assert any(placements) and not all(placements)
+    # disk-resident rows still readable
+    cube.lookup(0, np.arange(0, 500, 7))
+    assert cube.metrics.disk_block_hits > 0
+
+
+def test_cube_failover(cube):
+    ids = np.arange(0, 300, 3)
+    before = cube.lookup(1, ids)
+    cube.kill_server(0)
+    after = cube.lookup(1, ids)                    # replicas serve everything
+    np.testing.assert_allclose(before, after)
+    assert cube.metrics.failovers > 0
+    cube.kill_server(1)
+    # replication=2 cannot survive arbitrary double faults: some keys whose
+    # primary+replica were servers {0,1} are now gone
+    with pytest.raises(KeyError):
+        for start in range(0, 300):
+            cube.lookup(1, np.array([start]))
+
+
+def test_lfu_two_tier_promotion_and_eviction():
+    c = TwoTierLFUCache(mem_capacity=2, disk_capacity=4)
+    for k in "abcdef":
+        c.put(k, k.upper())
+    assert len(c.mem.data) <= 2 and len(c.disk.data) <= 4
+    # hammer 'a' so it becomes most frequent
+    c.put("a", "A")
+    for _ in range(10):
+        c.get("a")
+    for k in "xyzw":
+        c.put(k, k)
+    assert c.get("a") == "A"                       # survived via frequency
+
+
+def test_cube_cache_zipf_hit_ratio_matches_paper():
+    """Fig 5a/§5.2: ~1% cache over heavy-tailed traffic → high hit ratio."""
+    rng = np.random.default_rng(0)
+    vocab = 200_000
+    mem, disk = capacity_from_ratio(vocab, cache_ratio_pct=1.0)
+    c = TwoTierLFUCache(mem, disk)
+    # zipf a=1.25 puts ~80% of mass on the top 1% of keys — Fig 5a's
+    # production concentration
+    for key in zipf_ids(rng, 120_000, vocab, a=1.25):
+        if c.get(int(key)) is None:
+            c.put(int(key), 1)
+    assert c.overall_hit_ratio > 0.72              # paper: 84% in production
+
+
+def test_query_cache_ttl_lru_invalidation():
+    qc = QueryCache(capacity=3, window_s=10.0)
+    qc.put("u1", "i1", 0.9, now=0.0)
+    assert qc.get("u1", "i1", now=5.0) == 0.9
+    assert qc.get("u1", "i1", now=11.0) is None    # expired
+    assert qc.stats.expirations == 1
+    for i in range(5):
+        qc.put("u2", f"i{i}", 0.5, now=20.0)
+    assert len(qc) <= 3                            # LRU capacity
+    qc.put("u3", "ix", 0.7, now=21.0)
+    qc.user_feedback("u3")                         # click → invalidate
+    assert qc.get("u3", "ix", now=21.5) is None
+    assert qc.stats.invalidations == 1
+
+
+def test_query_cache_admission_predicate():
+    qc = QueryCache(window_s=100, admit=lambda s: s > 0.5)
+    qc.put("u", "low", 0.2, now=0.0)
+    qc.put("u", "high", 0.8, now=0.0)
+    assert qc.get("u", "low", now=1.0) is None
+    assert qc.get("u", "high", now=1.0) == 0.8

@@ -1,0 +1,45 @@
+"""End-to-end behaviour: the full JiZHI InferenceService (SEDP + HHS + IRM
+shedding + real jitted DIN model) serving real requests."""
+import numpy as np
+import pytest
+
+from repro.core.service import InferenceService, ServiceConfig
+
+
+@pytest.fixture(scope="module")
+def service():
+    return InferenceService(ServiceConfig(arch_id="din", batch_size=8,
+                                          shed=True, seed=0))
+
+
+def test_service_serves_all_requests(service):
+    report = service.run(n_requests=48)
+    assert len(report.results) == 48
+    scored = [ev for ev in report.results if "score" in ev.payload]
+    assert len(scored) == 48
+    assert all(np.isfinite(ev.payload["score"]) for ev in scored)
+    assert all(0.0 <= ev.payload["score"] <= 1.0 for ev in scored)
+
+
+def test_service_query_cache_effective(service):
+    service.run(n_requests=48)                 # warm
+    before = service.query_cache.stats.hits
+    service.run(n_requests=48)                 # identical traffic (seed=0)
+    assert service.query_cache.stats.hits > before
+
+
+def test_service_shedding_active(service):
+    service.run(n_requests=32)
+    st = service.shedder.state
+    assert st.shed_events + st.kept_events > 0
+
+
+def test_service_hot_load_swaps_generation(service):
+    import jax
+    from repro.serve.hotload import Generation
+    old_stamp = service.buffer.active.stamp
+    new_params = service.mod.init(jax.random.PRNGKey(99), service.model_cfg)
+    assert service.buffer.load(Generation(old_stamp + 1, new_params))
+    report = service.run(n_requests=16)        # serves on the new generation
+    assert len(report.results) == 16
+    assert service.buffer.active.stamp == old_stamp + 1
