@@ -1,0 +1,141 @@
+"""ParameterCube lookup benchmark: batched/vectorized path vs the legacy
+per-row scalar path (DESIGN.md §3).
+
+Measures lookup throughput (rows/s) and per-call p99 latency across
+
+  * batch size        — the scalar path is flat per-row; the batched path
+                        amortizes shard grouping + block gathers
+  * dup ratio         — fraction of the batch drawn from a tiny hot set;
+                        the batched path dedups before touching servers
+  * mem-block fraction— memory- vs disk-(memmap-)resident value blocks
+
+Every cell also asserts the two paths return BIT-IDENTICAL rows (the
+batched rollout gate), including under a killed primary server.
+
+Usage:
+    PYTHONPATH=src python benchmarks/cube_bench.py            # full sweep
+    PYTHONPATH=src python benchmarks/cube_bench.py --quick    # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.cube import ParameterCube
+
+VOCAB = 60_000
+DIM = 16
+GROUP = 0
+
+
+def build_cube(mem_block_fraction: float, rng) -> ParameterCube:
+    cube = ParameterCube(n_servers=4, replication=2, block_rows=4096,
+                         mem_block_fraction=mem_block_fraction)
+    cube.load_table(GROUP, rng.normal(
+        0, 0.01, (VOCAB, DIM)).astype(np.float32))
+    return cube
+
+
+def make_ids(rng, batch: int, dup_ratio: float) -> np.ndarray:
+    """dup_ratio of the batch comes from a 32-id hot set (heavy dup), the
+    rest uniform over the vocab."""
+    n_dup = int(batch * dup_ratio)
+    hot = rng.integers(0, 32, n_dup)
+    cold = rng.integers(0, VOCAB, batch - n_dup)
+    ids = np.concatenate([hot, cold])
+    rng.shuffle(ids)
+    return ids
+
+
+def _time_path(fn, ids_list, reps: int) -> tuple[float, float]:
+    """Returns (rows_per_s, p99_call_latency_s) over reps*len(ids_list) calls."""
+    lat = []
+    n_rows = 0
+    for _ in range(reps):
+        for ids in ids_list:
+            t0 = time.perf_counter()
+            fn(ids)
+            lat.append(time.perf_counter() - t0)
+            n_rows += ids.size
+    total = sum(lat)
+    lat.sort()
+    p99 = lat[min(len(lat) - 1, int(0.99 * len(lat)))]
+    return n_rows / total, p99
+
+
+def bench_cell(batch: int, dup_ratio: float, mem_frac: float,
+               reps: int, n_batches: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    cube = build_cube(mem_frac, rng)
+    ids_list = [make_ids(rng, batch, dup_ratio) for _ in range(n_batches)]
+
+    # rollout gate: bit-identical rows on every scenario, healthy + failover
+    for kill in (None, 0):
+        if kill is not None:
+            cube.kill_server(kill)
+        for ids in ids_list:
+            got = cube.lookup(GROUP, ids)
+            want = cube.lookup_scalar(GROUP, ids)
+            if not np.array_equal(got, want):
+                raise AssertionError(
+                    f"batched != scalar (batch={batch}, dup={dup_ratio}, "
+                    f"mem_frac={mem_frac}, killed={kill})")
+        if kill is not None:
+            cube.revive_server(kill)
+
+    vec_rps, vec_p99 = _time_path(lambda i: cube.lookup(GROUP, i),
+                                  ids_list, reps)
+    sca_rps, sca_p99 = _time_path(lambda i: cube.lookup_scalar(GROUP, i),
+                                  ids_list, max(1, reps // 4))
+    return dict(batch=batch, dup_ratio=dup_ratio, mem_frac=mem_frac,
+                vec_rps=vec_rps, sca_rps=sca_rps,
+                vec_p99=vec_p99, sca_p99=sca_p99,
+                speedup=vec_rps / sca_rps)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep for CI smoke")
+    ap.add_argument("--reps", type=int, default=8)
+    args = ap.parse_args()
+
+    if args.quick:
+        batches, dups, fracs, n_batches = [256, 1024], [0.0], [0.5], 2
+        reps = 2
+    else:
+        batches = [64, 256, 1024, 4096]
+        dups = [0.0, 0.5, 0.9]
+        fracs = [0.25, 0.5, 1.0]
+        n_batches, reps = 4, args.reps
+
+    print(f"{'batch':>6} {'dup':>5} {'memfrac':>7} | "
+          f"{'vec rows/s':>12} {'scalar rows/s':>13} {'speedup':>8} | "
+          f"{'vec p99 ms':>10} {'scalar p99 ms':>13}")
+    worst_big_batch_speedup = None
+    for mem_frac in fracs:
+        for dup in dups:
+            for batch in batches:
+                c = bench_cell(batch, dup, mem_frac, reps, n_batches)
+                print(f"{batch:>6} {dup:>5.2f} {mem_frac:>7.2f} | "
+                      f"{c['vec_rps']:>12.0f} {c['sca_rps']:>13.0f} "
+                      f"{c['speedup']:>7.1f}x | "
+                      f"{c['vec_p99'] * 1e3:>10.3f} "
+                      f"{c['sca_p99'] * 1e3:>13.3f}")
+                if batch >= 1024:
+                    s = c["speedup"]
+                    if (worst_big_batch_speedup is None
+                            or s < worst_big_batch_speedup):
+                        worst_big_batch_speedup = s
+    if worst_big_batch_speedup is not None:
+        print(f"\nworst speedup at batch>=1024: "
+              f"{worst_big_batch_speedup:.1f}x (target >=10x)")
+        if worst_big_batch_speedup < 10.0:
+            raise SystemExit("FAIL: batched path below 10x target")
+    print("OK: batched path bit-identical to scalar and >=10x at batch>=1024")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,17 @@ A READ-ONLY distributed KV store for the sparse sub-network:
     ways → fault tolerant (server failure reroutes to replicas)
   * generation-stamped (model hot-loading swaps whole generations)
 
+Lookups are **batch-native** (DESIGN.md §3): a request's signatures are
+deduplicated once (`np.unique`), grouped by shard with a single argsort,
+probed against each server's *sorted signature index* with one
+`np.searchsorted`, and each touched block is gathered with a single
+fancy-index. Latency is accounted per *block touch* + per *server RPC*,
+not per row — batching is exactly what amortizes those costs.
+
+The legacy per-row scalar path survives behind ``use_scalar_path=True``
+(or ``lookup_scalar``) as a benchmark baseline for one release; see
+DESIGN.md §3.3 for the deprecation schedule.
+
 Host-side numpy implementation: this tier backs the >HBM tail of the model;
 the HBM-resident head is the row-sharded table (repro.sparse.sharded) — see
 DESIGN.md §2 for how the two compose on a pod.
@@ -18,8 +29,7 @@ from __future__ import annotations
 
 import os
 import tempfile
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
@@ -30,8 +40,8 @@ from repro.sparse.hashing import signature_np
 @dataclass
 class CubeMetrics:
     lookups: int = 0
-    mem_block_hits: int = 0
-    disk_block_hits: int = 0
+    mem_block_hits: int = 0      # batched path: distinct mem blocks touched
+    disk_block_hits: int = 0     # batched path: distinct disk blocks touched
     failovers: int = 0
     simulated_latency_s: float = 0.0
 
@@ -50,30 +60,105 @@ class _Block:
             self.values = mm
         else:
             self.values = values
+        # plain-ndarray view for gathers: same mapped pages for disk blocks,
+        # but skips np.memmap's per-__getitem__ subclass machinery
+        self.view = np.asarray(self.values)
 
 
 class CubeServer:
+    """One shard holder. The key index is three parallel arrays sorted by
+    signature — ``_sigs`` (uint64), ``_blk``/``_off`` (block id, row offset) —
+    probed with np.searchsorted; no per-key Python dict."""
+
     def __init__(self, server_id: int, tmpdir: str):
         self.server_id = server_id
         self.tmpdir = tmpdir
-        self.keys: dict[int, tuple[int, int]] = {}     # sig -> (block, offset)
         self.blocks: list[_Block] = []
         self.alive = True
+        self._sigs = np.empty(0, np.uint64)
+        self._blk = np.empty(0, np.int32)
+        self._off = np.empty(0, np.int32)
+        self._pending: list[tuple[np.ndarray, int]] = []   # ingested, unsorted
 
-    def add_block(self, sigs: np.ndarray, values: np.ndarray, on_disk: bool):
+    def add_block(self, sigs: np.ndarray, values: np.ndarray, on_disk: bool) -> int:
         bid = len(self.blocks)
         # filename carries the server id — servers share a tmpdir
         self.blocks.append(_Block(values, on_disk, self.tmpdir,
                                   f"s{self.server_id}_{bid}"))
-        for off, s in enumerate(sigs):
-            self.keys[int(s)] = (bid, off)
+        self._pending.append((np.asarray(sigs, dtype=np.uint64), bid))
+        return bid
 
+    def _ensure_index(self):
+        """Merge pending ingests into the sorted index (lazy: load_table may
+        add many blocks back-to-back; sort once at first probe)."""
+        if not self._pending:
+            return
+        sigs = np.concatenate([self._sigs] + [s for s, _ in self._pending])
+        blk = np.concatenate([self._blk] + [
+            np.full(s.size, b, np.int32) for s, b in self._pending])
+        off = np.concatenate([self._off] + [
+            np.arange(s.size, dtype=np.int32) for s, _ in self._pending])
+        self._pending.clear()
+        order = np.argsort(sigs, kind="stable")
+        sigs, blk, off = sigs[order], blk[order], off[order]
+        if sigs.size > 1:
+            # duplicate signature (re-ingest): last insertion wins, matching
+            # the old dict overwrite semantics
+            last = np.ones(sigs.size, bool)
+            last[:-1] = sigs[1:] != sigs[:-1]
+            sigs, blk, off = sigs[last], blk[last], off[last]
+        self._sigs, self._blk, self._off = sigs, blk, off
+
+    # ------------------------------------------------------------ probing
     def get(self, sig: int) -> Optional[tuple[np.ndarray, bool]]:
-        loc = self.keys.get(int(sig))
-        if loc is None:
+        """Scalar probe (legacy path + debugging)."""
+        self._ensure_index()
+        s = np.uint64(sig)
+        pos = int(np.searchsorted(self._sigs, s))
+        if pos >= self._sigs.size or self._sigs[pos] != s:
             return None
-        blk = self.blocks[loc[0]]
-        return np.asarray(blk.values[loc[1]]), blk.on_disk
+        blk = self.blocks[int(self._blk[pos])]
+        return np.asarray(blk.values[int(self._off[pos])]), blk.on_disk
+
+    def get_batch(self, sigs: np.ndarray
+                  ) -> tuple[Optional[np.ndarray], np.ndarray, int, int]:
+        """Vectorized probe. Returns (rows, found, mem_touches, disk_touches):
+        ``found`` is a boolean mask over ``sigs``; ``rows`` holds the values
+        of the found signatures in order (one fancy-index gather per touched
+        block); touch counts are DISTINCT blocks read, for latency accounting.
+        """
+        self._ensure_index()
+        m = sigs.size
+        if self._sigs.size == 0:
+            return None, np.zeros(m, bool), 0, 0
+        pos = np.searchsorted(self._sigs, sigs)
+        pos = np.minimum(pos, self._sigs.size - 1)
+        found = self._sigs[pos] == sigs
+        if not found.any():
+            return None, found, 0, 0
+        fpos = pos[found]
+        fblk, foff = self._blk[fpos], self._off[fpos]
+        # group rows by block with one argsort, then slice-gather per block
+        order = np.argsort(fblk, kind="stable")
+        sblk, soff = fblk[order], foff[order]
+        starts = np.concatenate(([0], np.flatnonzero(sblk[1:] != sblk[:-1]) + 1,
+                                 [sblk.size]))
+        # one probe batch is always single-group (lookup hashes one group),
+        # so every touched block shares the first one's row shape — blocks[0]
+        # may belong to a DIFFERENT group with another dim/dtype
+        first = self.blocks[int(sblk[0])].view
+        gathered = np.empty((fpos.size, first.shape[1]), first.dtype)
+        mem_t = disk_t = 0
+        for lo, hi in zip(starts[:-1], starts[1:]):
+            block = self.blocks[int(sblk[lo])]
+            gathered[lo:hi] = block.view[soff[lo:hi]]  # one gather per block
+            if block.on_disk:
+                disk_t += 1
+            else:
+                mem_t += 1
+        rows = np.empty_like(gathered)
+        rows[order] = gathered
+        return rows, found, mem_t, disk_t
 
 
 class ParameterCube:
@@ -83,7 +168,7 @@ class ParameterCube:
                  block_rows: int = 65536, mem_block_fraction: float = 0.5,
                  mem_latency_s: float = 2e-6, disk_latency_s: float = 50e-6,
                  net_latency_s: float = 300e-6, generation: int = 0,
-                 tmpdir: Optional[str] = None):
+                 tmpdir: Optional[str] = None, use_scalar_path: bool = False):
         assert replication <= n_servers
         self.n_servers = n_servers
         self.replication = replication
@@ -95,6 +180,21 @@ class ParameterCube:
         self.tmpdir = tmpdir or tempfile.mkdtemp(prefix="cube_")
         self.servers = [CubeServer(i, self.tmpdir) for i in range(n_servers)]
         self.metrics = CubeMetrics()
+        # DEPRECATED escape hatch (one release): route lookup() through the
+        # per-row legacy path so deployments can A/B the rollout.
+        self.use_scalar_path = use_scalar_path
+        self._dim: Optional[int] = None
+        self._dtype = np.float32
+        self._shapes: dict[int, tuple[int, np.dtype]] = {}  # per-group row shape
+        # cube-wide PRIMARY index: every r=0 placement, sorted by signature.
+        # Keys are all-in-memory per the paper, so the router can resolve a
+        # whole batch (sig → primary server, block, offset) with ONE
+        # searchsorted; replicas are only probed for misses/dead primaries.
+        self._psigs = np.empty(0, np.uint64)
+        self._psrv = np.empty(0, np.int32)
+        self._pblk = np.empty(0, np.int32)
+        self._poff = np.empty(0, np.int32)
+        self._p_pending: list[tuple[np.ndarray, int, int]] = []
 
     # ------------------------------------------------------------- build
     def load_table(self, group: int, table: np.ndarray,
@@ -106,6 +206,8 @@ class ParameterCube:
         order = np.argsort(sigs % np.uint64(self.n_servers), kind="stable")
         sigs, rows = sigs[order], table[order]
         shard = (sigs % np.uint64(self.n_servers)).astype(np.int64)
+        self._dim, self._dtype = table.shape[1], table.dtype
+        self._shapes[group] = (table.shape[1], table.dtype)
         for sid in range(self.n_servers):
             sel = shard == sid
             s_sigs, s_rows = sigs[sel], rows[sel]
@@ -116,15 +218,143 @@ class ParameterCube:
                 on_disk = (start // self.block_rows) >= max(
                     1, int(n_blocks * self.mem_block_fraction))
                 for r in range(self.replication):
-                    self.servers[(sid + r) % self.n_servers].add_block(
+                    bid = self.servers[(sid + r) % self.n_servers].add_block(
                         blk_s, blk_v, on_disk)
+                    if r == 0:
+                        self._p_pending.append((blk_s, sid, bid))
 
     # ------------------------------------------------------------ lookup
+    def _ensure_primary_index(self):
+        if not self._p_pending:
+            return
+        sigs = np.concatenate([self._psigs] + [s for s, _, _ in self._p_pending])
+        srv = np.concatenate([self._psrv] + [
+            np.full(s.size, sid, np.int32) for s, sid, _ in self._p_pending])
+        blk = np.concatenate([self._pblk] + [
+            np.full(s.size, b, np.int32) for s, _, b in self._p_pending])
+        off = np.concatenate([self._poff] + [
+            np.arange(s.size, dtype=np.int32) for s, _, _ in self._p_pending])
+        self._p_pending.clear()
+        order = np.argsort(sigs, kind="stable")
+        sigs, srv, blk, off = sigs[order], srv[order], blk[order], off[order]
+        if sigs.size > 1:
+            last = np.ones(sigs.size, bool)     # duplicate sig: last wins
+            last[:-1] = sigs[1:] != sigs[:-1]
+            sigs, srv, blk, off = sigs[last], srv[last], blk[last], off[last]
+        self._psigs, self._psrv, self._pblk, self._poff = sigs, srv, blk, off
+
     def lookup(self, group: int, raw_ids: np.ndarray) -> np.ndarray:
+        """Batched gather: (...,) raw ids → (N, dim) rows (inputs are
+        flattened; callers reshape). Deduplicates repeated ids before any
+        server is touched and re-scatters afterwards, so a dup-heavy batch
+        pays each distinct row once. The whole batch is routed with one
+        probe of the cube-wide primary index; only misses and signatures on
+        dead primaries take the per-server replica path."""
+        if self.use_scalar_path:
+            return self.lookup_scalar(group, raw_ids)
+        raw = np.atleast_1d(np.asarray(raw_ids)).reshape(-1)
+        sigs = signature_np(group, raw)
+        n_req = sigs.size
+        if n_req == 0:
+            dim, dtype = self._shapes.get(group, (self._dim or 0, self._dtype))
+            return np.empty((0, dim), dtype)
+        self._ensure_primary_index()
+        uniq, inverse = np.unique(sigs, return_inverse=True)
+        nu = uniq.size
+        dim, dtype = self._shapes.get(group, (self._dim or 0, self._dtype))
+        rows = np.empty((nu, dim), dtype)
+        primary = (uniq % np.uint64(self.n_servers)).astype(np.int64)
+        t = 0.0
+
+        # ---- fast path: one searchsorted over the primary index
+        alive = np.fromiter((s.alive for s in self.servers), bool,
+                            self.n_servers)
+        pos = np.searchsorted(self._psigs, uniq)
+        np.minimum(pos, max(0, self._psigs.size - 1), out=pos)
+        found = (self._psigs[pos] == uniq) if self._psigs.size else \
+            np.zeros(nu, bool)
+        dead_primary = ~alive[primary]
+        if dead_primary.any():
+            # failover accounted at batch granularity: every distinct
+            # signature rerouted off its dead primary
+            self.metrics.failovers += int(dead_primary.sum())
+        served = found & ~dead_primary
+        sidx = np.flatnonzero(served)
+        if sidx.size:
+            spos = pos[sidx]
+            gsrv, gblk, goff = (self._psrv[spos], self._pblk[spos],
+                                self._poff[spos])
+            # group by (server, block) with one argsort → one fancy-index
+            # gather per touched block, one RPC per touched server
+            comp = (gsrv.astype(np.int64) << 32) | gblk
+            order = np.argsort(comp, kind="stable")
+            scomp, soff = comp[order], goff[order]
+            starts = np.concatenate(
+                ([0], np.flatnonzero(scomp[1:] != scomp[:-1]) + 1,
+                 [scomp.size]))
+            gathered = np.empty((sidx.size, dim), dtype)
+            touched_srv = set()
+            mem_t = disk_t = 0
+            for lo, hi in zip(starts[:-1], starts[1:]):
+                c = int(scomp[lo])
+                srv_id, blk_id = c >> 32, c & 0xFFFFFFFF
+                block = self.servers[srv_id].blocks[blk_id]
+                gathered[lo:hi] = block.view[soff[lo:hi]]
+                touched_srv.add(srv_id)
+                if block.on_disk:
+                    disk_t += 1
+                else:
+                    mem_t += 1
+            rows[sidx[order]] = gathered
+            self.metrics.mem_block_hits += mem_t
+            self.metrics.disk_block_hits += disk_t
+            t += (len(touched_srv) * self.lat["net"]
+                  + mem_t * self.lat["mem"] + disk_t * self.lat["disk"])
+
+        # ---- slow path: replica probing for misses / dead primaries
+        pending = np.flatnonzero(~served)
+        for r in range(1, self.replication):
+            if pending.size == 0:
+                break
+            srv_of = (primary[pending] + r) % self.n_servers
+            order = np.argsort(srv_of, kind="stable")   # group by shard, once
+            sp, so = pending[order], srv_of[order]
+            bounds = np.searchsorted(so, np.arange(self.n_servers + 1))
+            missed: list[np.ndarray] = []
+            for sid in range(self.n_servers):
+                lo, hi = bounds[sid], bounds[sid + 1]
+                if lo == hi:
+                    continue
+                idxs = sp[lo:hi]
+                srv = self.servers[sid]
+                if not srv.alive:
+                    missed.append(idxs)
+                    continue
+                got, fmask, mem_t, disk_t = srv.get_batch(uniq[idxs])
+                t += self.lat["net"]                    # one RPC per server
+                if got is not None:
+                    rows[idxs[fmask]] = got
+                self.metrics.mem_block_hits += mem_t
+                self.metrics.disk_block_hits += disk_t
+                t += mem_t * self.lat["mem"] + disk_t * self.lat["disk"]
+                if not fmask.all():
+                    missed.append(idxs[~fmask])
+            pending = (np.concatenate(missed) if missed
+                       else np.empty(0, np.int64))
+        if pending.size:
+            raise KeyError(
+                f"signature {uniq[pending[0]]} unavailable (group {group})")
+        self.metrics.lookups += n_req
+        self.metrics.simulated_latency_s += t
+        return rows[inverse]
+
+    def lookup_scalar(self, group: int, raw_ids: np.ndarray) -> np.ndarray:
+        """DEPRECATED legacy per-row path (per-row latency accounting, no
+        dedup). Kept one release as the benchmark baseline — see DESIGN.md."""
         sigs = signature_np(group, np.asarray(raw_ids))
         out = []
         t = 0.0
-        for s in np.atleast_1d(sigs):
+        for s in np.atleast_1d(sigs).reshape(-1):
             primary = int(s % np.uint64(self.n_servers))
             row = None
             for r in range(self.replication):

@@ -100,6 +100,53 @@ class TwoTierLFUCache:
         if dem is not None:
             self.disk.put(*dem)
 
+    # ------------------------------------------------------------ batched
+    def get_many(self, keys) -> list:
+        """Multi-get for one batch: single pass with locally-bound tier
+        methods, stats/latency folded in once at the end. Probe order per key
+        is IDENTICAL to sequential get() calls — in particular a duplicate
+        of a disk-resident key hits the memory tier after the first
+        occurrence promotes it, not the disk tier twice. Returns a list
+        aligned with ``keys`` (None per miss)."""
+        mem_get, disk_get = self.mem.get, self.disk.get
+        mem_put, disk_put = self.mem.put, self.disk.put
+        out = []
+        mem_hits = mem_misses = disk_hits = disk_misses = 0
+        lat = 0.0
+        for key in keys:
+            v = mem_get(key)
+            if v is not None:
+                mem_hits += 1
+                lat += self.lat["mem"]
+                out.append(v)
+                continue
+            mem_misses += 1
+            v = disk_get(key)
+            if v is not None:
+                disk_hits += 1
+                lat += self.lat["disk"]
+                dem = mem_put(key, v)               # promote
+                if dem is not None:
+                    disk_put(*dem)
+            else:
+                disk_misses += 1
+            out.append(v)
+        self.stats["mem"].hits += mem_hits
+        self.stats["mem"].misses += mem_misses
+        self.stats["disk"].hits += disk_hits
+        self.stats["disk"].misses += disk_misses
+        self.simulated_latency_s += lat
+        return out
+
+    def put_many(self, keys, values):
+        """Vectorized multi-put: memory-tier inserts with demotions flushed
+        to the disk tier, one pass for the whole batch."""
+        mem_put, disk_put = self.mem.put, self.disk.put
+        for key, value in zip(keys, values):
+            dem = mem_put(key, value)
+            if dem is not None:
+                disk_put(*dem)
+
     @property
     def overall_hit_ratio(self) -> float:
         m, d = self.stats["mem"], self.stats["disk"]

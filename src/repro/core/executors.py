@@ -19,7 +19,7 @@ import heapq
 import queue
 import threading
 import time
-from collections import defaultdict
+from collections import defaultdict, deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
@@ -92,6 +92,7 @@ class AsyncExecutor:
         self._pending = 0
         self._pending_lock = threading.Lock()
         self._threads: list[threading.Thread] = []
+        self._gen = 0          # run() generation; stale workers must not emit
 
     def _now(self):
         return time.monotonic()
@@ -99,9 +100,9 @@ class AsyncExecutor:
     def _depth(self, stage):
         return self.channels[stage].qsize()
 
-    def _worker(self, sp: StageProcessor):
+    def _worker(self, sp: StageProcessor, gen: int):
         ch = self.channels[sp.name]
-        while not self._stop.is_set():
+        while not self._stop.is_set() and self._gen == gen:
             batch = []
             try:
                 batch.append(ch.get(timeout=0.05))
@@ -115,6 +116,8 @@ class AsyncExecutor:
                     break
             t0 = time.monotonic()
             out = sp.op(batch, self.ctx) or []
+            if self._gen != gen:
+                return       # a newer run() started: don't touch its state
             st = self.stats[sp.name]
             st.events += len(batch)
             st.batches += 1
@@ -140,9 +143,19 @@ class AsyncExecutor:
 
     def run(self, events: list[Event], source: Optional[str] = None) -> RunReport:
         source = source or self.plan.sources[0]
+        # fresh lifecycle per run: bump the generation and clear the stop
+        # flag/stats left by a previous run() so the executor is reusable
+        # (no stale-stop hang, no double-counted stats, and any worker that
+        # outlived the join below exits on the generation mismatch instead
+        # of stealing this run's events)
+        self._gen += 1
+        gen = self._gen
+        self._stop.clear()
+        self.stats = defaultdict(StageStats)
         for sp in self.plan.stages.values():
             for _ in range(sp.parallelism):
-                th = threading.Thread(target=self._worker, args=(sp,), daemon=True)
+                th = threading.Thread(target=self._worker, args=(sp, gen),
+                                      daemon=True)
                 th.start()
                 self._threads.append(th)
         t_start = time.monotonic()
@@ -165,6 +178,9 @@ class AsyncExecutor:
                     if self._pending <= 0:
                         break
         self._stop.set()
+        for th in self._threads:        # workers exit within their poll tick
+            th.join(timeout=2.0)
+        self._threads = [th for th in self._threads if th.is_alive()]
         rep = RunReport(
             latencies=[ev.done_at - ev.born_at for ev in done],
             stage_stats=dict(self.stats),
@@ -193,7 +209,9 @@ class SimExecutor:
         self.service_time = service_time or self._default_service_time
         self.stats = defaultdict(StageStats)
         self.ctx = ExecContext(self)
-        self._queues: dict[str, list[Event]] = {n: [] for n in plan.stages}
+        # deques: stage dispatch pops from the head; list.pop(0) would be
+        # O(n) per event and O(n²) in queue depth under heavy traffic
+        self._queues: dict[str, deque[Event]] = {n: deque() for n in plan.stages}
         self._free_at: dict[str, list[float]] = {
             n: [0.0] * sp.parallelism for n, sp in plan.stages.items()}
         self._clock = 0.0
@@ -249,7 +267,7 @@ class SimExecutor:
             si = min(range(len(frees)), key=frees.__getitem__)
             if frees[si] > self._clock:
                 break
-            batch = [q.pop(0) for _ in range(min(sp.batch_size, len(q)))]
+            batch = [q.popleft() for _ in range(min(sp.batch_size, len(q)))]
             t0 = self._clock
             out = sp.op(batch, self.ctx) or []
             dt = self.service_time(sp, batch)

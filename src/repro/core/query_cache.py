@@ -70,6 +70,52 @@ class QueryCache:
             old_key, _ = self._data.popitem(last=False)
             self._by_user.get(old_key[0], set()).discard(old_key[1])
 
+    # ------------------------------------------------------------ batched
+    def get_many(self, users, items, now: float) -> list:
+        """Vectorized multi-get for one event batch: single pass over the
+        store with locally-bound dict methods, stats folded in once. Returns
+        a list of Optional[float] aligned with the inputs."""
+        data = self._data
+        out = []
+        hits = misses = expired = 0
+        for user, item in zip(users, items):
+            key = (user, item)
+            entry = data.get(key)
+            if entry is None:
+                misses += 1
+                out.append(None)
+                continue
+            score, stamp = entry
+            if now - stamp > self.window_s:
+                self._evict(key)
+                expired += 1
+                misses += 1
+                out.append(None)
+                continue
+            data.move_to_end(key)                # LRU touch
+            hits += 1
+            out.append(score)
+        self.stats.hits += hits
+        self.stats.misses += misses
+        self.stats.expirations += expired
+        return out
+
+    def put_many(self, users, items, scores, now: float):
+        """Vectorized multi-put: admission filter + insert for a whole batch,
+        deferring capacity trimming to one pass at the end."""
+        data, by_user, admit = self._data, self._by_user, self.admit
+        for user, item, score in zip(users, items, scores):
+            if not admit(score):
+                continue
+            key = (user, item)
+            if key in data:
+                data.move_to_end(key)
+            data[key] = (score, now)
+            by_user.setdefault(user, set()).add(item)
+        while len(data) > self.capacity:
+            old_key, _ = data.popitem(last=False)
+            by_user.get(old_key[0], set()).discard(old_key[1])
+
     def user_feedback(self, user: Any):
         """Click/unlike/… → the user's cached scores are stale (paper §5.2)."""
         items = self._by_user.pop(user, set())

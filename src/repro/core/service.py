@@ -73,9 +73,10 @@ class InferenceService:
 
         def op_qcache(batch, ctx):
             now = time.monotonic()
-            for ev in batch:
-                s = self.query_cache.get(ev.payload["user_id"],
-                                         ev.payload["item_id"], now)
+            scores = self.query_cache.get_many(
+                [ev.payload["user_id"] for ev in batch],
+                [ev.payload["item_id"] for ev in batch], now)
+            for ev, s in zip(batch, scores):
                 if s is not None:
                     ev.payload["score"] = s
                     ev.route = "respond"
@@ -84,20 +85,21 @@ class InferenceService:
             return batch
 
         def op_features(batch, ctx):
-            for ev in batch:
-                p = ev.payload
-                p["hashed"] = {
-                    "item_id": hash_bucket_np(0, p["item_id"],
-                                              mc.item_fields[0].vocab),
-                }
+            items = np.fromiter((ev.payload["item_id"] for ev in batch),
+                                np.int64, len(batch))
+            hashed = hash_bucket_np(0, items, mc.item_fields[0].vocab)
+            for ev, h in zip(batch, hashed):
+                ev.payload["hashed"] = {"item_id": h}
             return batch
 
         def op_cube(batch, ctx):
-            for ev in batch:
-                key = int(ev.payload["hashed"]["item_id"])
-                if self.cube_cache.get(key) is None:
-                    row = self.cube.lookup(0, np.array([key]))
-                    self.cube_cache.put(key, row)
+            keys = [int(ev.payload["hashed"]["item_id"]) for ev in batch]
+            cached = self.cube_cache.get_many(keys)
+            miss = sorted({k for k, v in zip(keys, cached) if v is None})
+            if miss:
+                rows = self.cube.lookup(0, np.asarray(miss, np.int64))
+                self.cube_cache.put_many(
+                    miss, [rows[i:i + 1] for i in range(len(miss))])
             return batch
 
         def op_dnn(batch, ctx):
@@ -107,8 +109,10 @@ class InferenceService:
             now = time.monotonic()
             for ev, s in zip(batch, scores):
                 ev.payload["score"] = float(s)
-                self.query_cache.put(ev.payload["user_id"],
-                                     ev.payload["item_id"], float(s), now)
+            self.query_cache.put_many(
+                [ev.payload["user_id"] for ev in batch],
+                [ev.payload["item_id"] for ev in batch],
+                [float(s) for s in scores], now)
             return batch
 
         g.add_stage("ingress", sedp_lib.passthrough, batch_size=8, parallelism=2)

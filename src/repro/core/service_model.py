@@ -161,10 +161,11 @@ def build_service(spec: ServiceSpec, knobs: Knobs,
 
     def op_query_cache(batch, ctx):
         now = ctx.now()
-        for ev in batch:
+        scores = rt.query_cache.get_many(
+            [ev.payload["user"] for ev in batch],
+            [ev.payload["item"] for ev in batch], now)
+        for ev, score in zip(batch, scores):
             ev.meta["cost_s"] = 0.03 * ms
-            score = rt.query_cache.get(ev.payload["user"],
-                                       ev.payload["item"], now)
             if score is not None:
                 ev.payload["score"] = score
                 ev.payload["from_cache"] = True
@@ -192,16 +193,33 @@ def build_service(spec: ServiceSpec, knobs: Knobs,
         return batch
 
     def op_cube(batch, ctx):
+        # batched HHS access: the whole event batch's feature keys go through
+        # the cube cache in one deduplicated multi-get/multi-put pass
         amort = 1 + 0.08 * (knobs.cube_batch - 1) ** 0.6
-        for ev in batch:
-            feats = ev.payload["features"]
+        feats_per_ev = [ev.payload["features"] for ev in batch]
+        uniq: list = []
+        index: dict = {}
+        for feats in feats_per_ev:
+            for k in feats:
+                if k not in index:
+                    index[k] = len(uniq)
+                    uniq.append(k)
+        got = rt.cube_cache.get_many(uniq)
+        miss = [k for k, v in zip(uniq, got) if v is None]
+        rt.cube_cache.put_many(miss, [1] * len(miss))
+        # per-event cost keeps the old per-occurrence accounting: the first
+        # occurrence of a missed key pays the remote fetch, every later
+        # occurrence in the batch is a local hit (it was just installed)
+        hit = [v is not None for v in got]
+        seen: set = set()
+        for ev, feats in zip(batch, feats_per_ev):
             t = 0.0
-            for fkey in feats:
-                if rt.cube_cache.get(fkey) is not None:
+            for k in feats:
+                if hit[index[k]] or k in seen:
                     t += spec.cube_us_local * us
                 else:
                     t += spec.cube_us_remote * us
-                    rt.cube_cache.put(fkey, 1)
+                    seen.add(k)
             ev.meta["cost_s"] = t * af / amort
         return batch
 
@@ -215,8 +233,10 @@ def build_service(spec: ServiceSpec, knobs: Knobs,
                 ev.payload["score"] = float(
                     (hash((ev.payload["user"], ev.payload["item"], tenant))
                      % 1000) / 1000.0)
-                rt.query_cache.put(ev.payload["user"], ev.payload["item"],
-                                   ev.payload["score"], now)
+            rt.query_cache.put_many(
+                [ev.payload["user"] for ev in batch],
+                [ev.payload["item"] for ev in batch],
+                [ev.payload["score"] for ev in batch], now)
             return batch
         return op_dnn
 

@@ -5,6 +5,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 if os.environ.get("REPRO_DRYRUN_DEVICES"):
     os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
                                + os.environ["REPRO_DRYRUN_DEVICES"])
+# the placeholder fleet only exists on the CPU platform; with libtpu present
+# but no TPU attached, backend autodetection stalls in metadata probing
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 """Multi-pod dry-run: .lower().compile() every (arch × shape × mesh) cell on
 the production mesh and record memory/cost/collective analyses.
@@ -83,6 +86,8 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
             rec["memory"]["fits_v5e_tpu_est"] = bool(hbm_tpu < V5E["hbm_bytes"])
 
             ca = compiled.cost_analysis() or {}
+            if isinstance(ca, (list, tuple)):     # jax 0.4.x: list per device
+                ca = ca[0] if ca else {}
             rec["xla_cost_analysis"] = {k: float(v) for k, v in ca.items()
                                         if k in ("flops", "bytes accessed")}
             txt = compiled.as_text()

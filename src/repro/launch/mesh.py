@@ -5,19 +5,25 @@ from __future__ import annotations
 import jax
 
 
+def _axis_types_kw(n_axes: int) -> dict:
+    """jax.sharding.AxisType landed after 0.4.x; Auto is the default there,
+    so on older jax we simply omit the kwarg."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types_kw(len(axes)))
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (elastic restarts, tests). shape/axes like above."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         **_axis_types_kw(len(axes)))
 
 
 def single_device_mesh():

@@ -58,6 +58,18 @@ def data_axis_size() -> int:
     return n
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """jax.shard_map moved out of jax.experimental after 0.4.x (and renamed
+    check_rep → check_vma); dispatch to whichever this jax provides."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as legacy_sm
+    return legacy_sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check_vma)
+
+
 def shard(x, *spec):
     """with_sharding_constraint that no-ops without a mesh."""
     mesh = current_mesh()

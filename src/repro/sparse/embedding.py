@@ -77,6 +77,26 @@ def embedding_bag_ragged(table: jax.Array, ids: jax.Array, segment_ids: jax.Arra
     return out
 
 
+def cube_embedding_bag_padded(cube, group: int, ids: np.ndarray,
+                              weights: Optional[np.ndarray] = None,
+                              combiner: str = "sum") -> np.ndarray:
+    """Host-side EmbeddingBag over the ParameterCube tail (DESIGN.md §2):
+    one batched, deduplicated cube lookup for the whole (B, K) id block —
+    never a per-row probe — then the same combine as
+    ``embedding_bag_padded``. Returns (B, D) numpy."""
+    ids = np.asarray(ids)
+    rows = cube.lookup(group, ids.reshape(-1))            # (B*K, D), one gather
+    rows = rows.reshape(ids.shape + (rows.shape[-1],))    # (B, K, D)
+    if weights is None:
+        weights = np.ones(ids.shape, rows.dtype)
+    w = np.asarray(weights, dtype=rows.dtype)
+    out = np.einsum("bk,bkd->bd", w, rows)
+    if combiner == "mean":
+        denom = np.maximum(w.sum(-1, keepdims=True), 1e-9)
+        out = out / denom.astype(out.dtype)
+    return out
+
+
 def offsets_to_segment_ids(offsets: np.ndarray, total: int) -> np.ndarray:
     """torch-EmbeddingBag style offsets (B,) → segment_ids (N,). Host-side."""
     seg = np.zeros(total, dtype=np.int32)

@@ -62,7 +62,7 @@ def sharded_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
     id_spec = P(*(lead + (None,) * (ids.ndim - 1)))
     out_spec = P(*(lead + (None,) * ids.ndim))
 
-    fn = jax.shard_map(
+    fn = runtime.shard_map(
         lambda t, i: _local_lookup(t, i, rows_per_shard),
         mesh=mesh,
         in_specs=(P(SHARD_AXIS, None), id_spec),
@@ -175,7 +175,7 @@ def sharded_gather_a2a(table: jax.Array, ids: jax.Array,
                                n_loc)].add(recv.reshape(-1, D))
         return out[:n_loc]
 
-    fn = jax.shard_map(local, mesh=mesh,
+    fn = runtime.shard_map(local, mesh=mesh,
                        in_specs=(P(BIG_AXES, None), P(BIG_AXES)),
                        out_specs=P(BIG_AXES, None), check_vma=False)
     out = fn(table, ids)
@@ -273,7 +273,7 @@ def sharded_embedding_bag_2d(table: jax.Array, ids: jax.Array,
         weights = jnp.ones(ids.shape, jnp.float32)
     id_spec = P(batch_axes, None) if scatterable else P(None, None)
     out_spec = P(batch_axes, None) if scatterable else P(None, None)
-    fn = jax.shard_map(local, mesh=mesh,
+    fn = runtime.shard_map(local, mesh=mesh,
                        in_specs=(P(BIG_AXES, None), id_spec, id_spec),
                        out_specs=out_spec, check_vma=False)
     return fn(table, ids, weights)

@@ -1,9 +1,17 @@
 import os
+import sys
 
 # Tests see exactly ONE device (the dry-run sets its own placeholder fleet
 # in a subprocess) — per the dry-run contract, never set
 # xla_force_host_platform_device_count globally.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# The container image has no `hypothesis`; fall back to the deterministic
+# shim in tests/_stubs (same strategy domains, seeded sweeps, no shrinking).
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_stubs"))
 
 import numpy as np
 import pytest

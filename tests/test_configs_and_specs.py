@@ -26,7 +26,10 @@ def test_knobs_vector_roundtrip_clamps_to_bounds(xs):
 
 
 def _abstract_mesh(shape, axes):
-    return jax.sharding.AbstractMesh(shape, axes)
+    try:                                  # jax >= 0.5: (axis_sizes, axis_names)
+        return jax.sharding.AbstractMesh(shape, axes)
+    except TypeError:                     # jax 0.4.x: (((name, size), ...),)
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
 
 
 def test_zero_specs_add_data_axis_to_big_unsharded_leaves():

@@ -14,7 +14,10 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def run_sub(code: str, timeout=420):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # pin CPU: libtpu is present in the image but no TPU is attached, and
+    # backend autodetection can stall for minutes probing TPU metadata;
+    # the forced host-platform device count lives on the CPU platform anyway
+    env["JAX_PLATFORMS"] = "cpu"
     p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                        capture_output=True, text=True, timeout=timeout, env=env)
     assert p.returncode == 0, p.stdout[-2000:] + p.stderr[-2000:]
@@ -81,7 +84,10 @@ def test_dryrun_reduced_mesh_cells():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     env["REPRO_DRYRUN_DEVICES"] = "8"
-    env.pop("JAX_PLATFORMS", None)
+    # pin CPU: libtpu is present in the image but no TPU is attached, and
+    # backend autodetection can stall for minutes probing TPU metadata;
+    # the forced host-platform device count lives on the CPU platform anyway
+    env["JAX_PLATFORMS"] = "cpu"
     for arch, shape in [("smollm-135m", "decode_32k"), ("din", "serve_p99")]:
         p = subprocess.run(
             [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,

@@ -1,0 +1,57 @@
+"""AsyncExecutor reuse + SimExecutor queue discipline regressions."""
+import threading
+
+from repro.core.executors import AsyncExecutor, SimExecutor
+from repro.core.sedp import SEDP, Event
+
+
+def _tag(name):
+    def op(batch, ctx):
+        for ev in batch:
+            ev.payload.setdefault("trace", []).append(name)
+        return batch
+    return op
+
+
+def _chain_plan():
+    g = SEDP()
+    for n in ("a", "b", "c"):
+        g.add_stage(n, _tag(n), batch_size=4, parallelism=2,
+                    sim_per_item_s=1e-4)
+    g.chain("a", "b", "c")
+    return g.compile()
+
+
+def test_async_executor_run_twice_no_leak_no_double_count():
+    """A second run() on the same executor must work (the stop flag is
+    cleared), must not leak worker threads, and must not double-count
+    stage stats from the first run."""
+    ex = AsyncExecutor(_chain_plan())
+    before = threading.active_count()
+
+    rep1 = ex.run([Event(payload={}) for _ in range(12)])
+    assert len(rep1.latencies) == 12
+    assert ex.stats["a"].events == 12
+    after_first = threading.active_count()
+    # workers were joined: no thread lingers past run()
+    assert after_first <= before + 1
+
+    rep2 = ex.run([Event(payload={}) for _ in range(7)])
+    assert len(rep2.latencies) == 7
+    # fresh stats — 7, not 12 + 7
+    assert ex.stats["a"].events == 7
+    assert threading.active_count() <= before + 1
+    assert all(ev.payload["trace"] == ["a", "b", "c"] for ev in rep2.results)
+
+
+def test_sim_executor_uses_deques():
+    """Stage queues are deques (O(1) popleft), and dispatch still conserves
+    events in FIFO arrival order."""
+    from collections import deque
+    plan = _chain_plan()
+    ex = SimExecutor(plan)
+    assert all(isinstance(q, deque) for q in ex._queues.values())
+    arrivals = [(i * 1e-3, Event(payload={"i": i})) for i in range(50)]
+    rep = ex.run(arrivals)
+    assert len(rep.latencies) == 50
+    assert [ev.payload["i"] for ev in rep.results] == list(range(50))

@@ -24,8 +24,8 @@ def test_analyzer_multiplies_scan_bodies():
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.launch.hlo_analysis import analyze_hlo
-        mesh = jax.make_mesh((2,4), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2,4), ("data","model"))
         L, M, K, N = 7, 256, 512, 512
         def f(ws, x):
             def body(x, w):
@@ -48,7 +48,10 @@ def test_analyzer_multiplies_scan_bodies():
     """
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ, PYTHONPATH=os.path.join(root, "src"))
-    env.pop("JAX_PLATFORMS", None)
+    # pin CPU: libtpu is present in the image but no TPU is attached, and
+    # backend autodetection can stall for minutes probing TPU metadata;
+    # the forced host-platform device count lives on the CPU platform anyway
+    env["JAX_PLATFORMS"] = "cpu"
     p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                        capture_output=True, text=True, timeout=300, env=env)
     assert p.returncode == 0, p.stdout + p.stderr

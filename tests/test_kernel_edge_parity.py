@@ -1,0 +1,115 @@
+"""Interpret-mode parity on EDGE shapes: every Pallas kernel vs its ref.py.
+
+The sweeps in test_kernels.py cover bulk shapes; these pin the degenerate
+corners that grid/padding logic tends to get wrong — single-element batches
+(B=1), single-key bags (K=1), and padded bags whose weights are entirely
+zero (all-padding rows must combine to exactly 0, and `mean` must not
+divide by zero).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.augru.ops import augru
+from repro.kernels.augru.ref import augru_ref
+from repro.kernels.candidate_scorer.ops import candidate_scorer
+from repro.kernels.candidate_scorer.ref import candidate_scorer_ref
+from repro.kernels.din_attention.ops import din_attention
+from repro.kernels.din_attention.ref import din_attention_ref
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.flash_decode.ops import flash_decode
+from repro.kernels.flash_decode.ref import flash_decode_ref
+
+TOL = dict(rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("B,K", [(1, 1), (1, 5), (8, 1)])
+@pytest.mark.parametrize("combiner", ["sum", "mean"])
+def test_embedding_bag_edge_shapes(B, K, combiner, rng):
+    table = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 32, (B, K)).astype(np.int32))
+    w = jnp.asarray(rng.random((B, K)).astype(np.float32))
+    got = embedding_bag(table, ids, w, combiner=combiner)
+    want = embedding_bag_ref(table, ids, w, combiner=combiner)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("combiner", ["sum", "mean"])
+def test_embedding_bag_all_zero_weight_bags(combiner, rng):
+    """Fully-padded bags (every weight 0) must produce exactly the ref
+    output — 0 for sum, 0/eps for mean — not NaN/garbage rows."""
+    table = jnp.asarray(rng.normal(size=(16, 4)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 16, (3, 4)).astype(np.int32))
+    w = jnp.zeros((3, 4), jnp.float32)
+    got = np.asarray(embedding_bag(table, ids, w, combiner=combiner))
+    want = np.asarray(embedding_bag_ref(table, ids, w, combiner=combiner))
+    np.testing.assert_allclose(got, want, **TOL)
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got, 0.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("B,T", [(1, 1), (1, 9), (5, 1)])
+def test_din_attention_edge_shapes(B, T, rng):
+    D, H1, H2 = 8, 16, 8
+    hist = jnp.asarray(rng.normal(size=(B, T, D)).astype(np.float32))
+    mask = jnp.asarray(np.ones((B, T), np.float32))
+    tgt = jnp.asarray(rng.normal(size=(B, D)).astype(np.float32))
+    w1 = jnp.asarray(rng.normal(size=(4 * D, H1)).astype(np.float32) * 0.2)
+    w2 = jnp.asarray(rng.normal(size=(H1, H2)).astype(np.float32) * 0.2)
+    w3 = jnp.asarray(rng.normal(size=(H2, 1)).astype(np.float32) * 0.2)
+    b1, b2, b3 = (jnp.zeros(H1), jnp.zeros(H2), jnp.zeros(1))
+    got = din_attention(hist, mask, tgt, w1, b1, w2, b2, w3, b3)
+    want = din_attention_ref(hist, mask, tgt, w1, b1, w2, b2, w3, b3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_din_attention_zero_mask(rng):
+    """All-zero history mask: kernel and oracle must agree bit-for-bit on
+    the fully-masked degenerate case."""
+    B, T, D, H1, H2 = 2, 6, 8, 16, 8
+    hist = jnp.asarray(rng.normal(size=(B, T, D)).astype(np.float32))
+    mask = jnp.zeros((B, T), jnp.float32)
+    tgt = jnp.asarray(rng.normal(size=(B, D)).astype(np.float32))
+    w1 = jnp.asarray(rng.normal(size=(4 * D, H1)).astype(np.float32) * 0.2)
+    w2 = jnp.asarray(rng.normal(size=(H1, H2)).astype(np.float32) * 0.2)
+    w3 = jnp.asarray(rng.normal(size=(H2, 1)).astype(np.float32) * 0.2)
+    b1, b2, b3 = (jnp.zeros(H1), jnp.zeros(H2), jnp.zeros(1))
+    got = din_attention(hist, mask, tgt, w1, b1, w2, b2, w3, b3)
+    want = din_attention_ref(hist, mask, tgt, w1, b1, w2, b2, w3, b3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("B,T", [(1, 1), (1, 7), (4, 1)])
+def test_augru_edge_shapes(B, T, rng):
+    Din, H = 6, 10
+    x = jnp.asarray(rng.normal(size=(B, T, Din)).astype(np.float32))
+    att = jnp.asarray(rng.random((B, T)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(Din, 3 * H)).astype(np.float32) * 0.3)
+    u = jnp.asarray(rng.normal(size=(H, 3 * H)).astype(np.float32) * 0.3)
+    b = jnp.asarray(rng.normal(size=(3 * H,)).astype(np.float32) * 0.1)
+    got = augru(x, att, w, u, b)
+    want = augru_ref(x, att, w, u, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("B,S,L", [(1, 64, 1), (1, 32, 32), (3, 64, 1)])
+def test_flash_decode_edge_shapes(B, S, L, rng):
+    H, G, D = 2, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, H, G, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, H, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, H, D)).astype(np.float32))
+    got = flash_decode(q, k, v, L, block_k=32)
+    want = flash_decode_ref(q, k, v, L)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize("C,k", [(64, 1), (17, 4), (128, 128)])
+def test_candidate_scorer_edge_shapes(C, k, rng):
+    D = 16
+    cands = jnp.asarray(rng.normal(size=(C, D)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(D,)).astype(np.float32))
+    v, i = candidate_scorer(cands, q, k=k, block_c=64)
+    rv, ri = candidate_scorer_ref(cands, q, k)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(rv), **TOL)
+    assert set(np.asarray(i).tolist()) == set(np.asarray(ri).tolist())

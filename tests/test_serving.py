@@ -44,7 +44,10 @@ def test_continuous_batcher_join_leave():
 
 def _run(cmd, extra_env=None, timeout=600):
     env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
-    env.pop("JAX_PLATFORMS", None)
+    # pin CPU: libtpu is present in the image but no TPU is attached, and
+    # backend autodetection can stall for minutes probing TPU metadata;
+    # the forced host-platform device count lives on the CPU platform anyway
+    env["JAX_PLATFORMS"] = "cpu"
     env.update(extra_env or {})
     p = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout,
                        env=env, cwd=ROOT)

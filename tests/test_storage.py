@@ -49,6 +49,102 @@ def test_cube_failover(cube):
             cube.lookup(1, np.array([start]))
 
 
+def test_cube_batched_equals_scalar_mixed_tiers_and_dups(cube, rng):
+    """Rollout gate for the vectorized path: bit-identical to the legacy
+    per-row path on mixed mem/disk blocks with heavily duplicated ids."""
+    ids = np.concatenate([rng.integers(0, 500, 300),
+                          np.repeat(rng.integers(0, 500, 10), 20)])
+    rng.shuffle(ids)
+    got = cube.lookup(0, ids)
+    want = cube.lookup_scalar(0, ids)
+    assert got.dtype == want.dtype and np.array_equal(got, want)
+
+
+def test_cube_batched_equals_scalar_under_failover(cube, rng):
+    ids = rng.integers(0, 300, 200)
+    cube.kill_server(2)
+    got = cube.lookup(1, ids)
+    want = cube.lookup_scalar(1, ids)
+    assert np.array_equal(got, want)
+    assert cube.metrics.failovers > 0
+
+
+def test_cube_failover_with_mixed_group_dims(rng):
+    """Replica-path gathers must size rows from the block they touch: with
+    two groups of different dims loaded, a killed primary routes group-1
+    (dim 16) lookups through get_batch, which must not assume group-0's
+    dim-8 shape."""
+    c = ParameterCube(n_servers=4, replication=2, block_rows=32)
+    t8 = rng.normal(size=(200, 8)).astype(np.float32)
+    t16 = rng.normal(size=(200, 16)).astype(np.float32)
+    c.load_table(0, t8)
+    c.load_table(1, t16)
+    ids = rng.integers(0, 200, 100)
+    for sid in range(4):
+        c.kill_server(sid)
+        np.testing.assert_array_equal(c.lookup(1, ids), t16[ids])
+        np.testing.assert_array_equal(c.lookup(0, ids), t8[ids])
+        c.revive_server(sid)
+
+
+def test_cube_scalar_flag_routes_lookup(cube, rng):
+    c = ParameterCube(n_servers=3, replication=2, block_rows=32,
+                      use_scalar_path=True)
+    table = rng.normal(size=(64, 4)).astype(np.float32)
+    c.load_table(0, table)
+    ids = rng.integers(0, 64, 10)
+    np.testing.assert_array_equal(c.lookup(0, ids), table[ids])
+    # scalar path keeps the legacy per-row accounting
+    assert c.metrics.lookups == 10
+
+
+def test_cube_lookup_empty_and_scalar_input(cube):
+    assert cube.lookup(0, np.array([], dtype=np.int64)).shape == (0, 8)
+    assert cube.lookup(0, np.array(3)).shape == (1, 8)
+
+
+def test_cube_cache_get_many_matches_scalar_gets():
+    a = TwoTierLFUCache(mem_capacity=4, disk_capacity=8)
+    b = TwoTierLFUCache(mem_capacity=4, disk_capacity=8)
+    keys = [1, 2, 3, 1, 2, 9]
+    a.put_many(keys, [k * 10 for k in keys])
+    for k in keys:
+        b.put(k, k * 10)
+    probe = [1, 9, 7, 2, 1]
+    got = a.get_many(probe)
+    want = [b.get(k) for k in probe]
+    assert got == want
+    assert a.stats["mem"].hits == b.stats["mem"].hits
+    assert a.stats["mem"].misses == b.stats["mem"].misses
+    assert a.overall_hit_ratio == b.overall_hit_ratio
+    # duplicate of a DISK-resident key in one batch: first occurrence must
+    # promote, second must hit the memory tier — exactly like scalar gets
+    disk_keys = sorted(set(a.disk.data) - set(a.mem.data))
+    if disk_keys:
+        d = disk_keys[0]
+        assert a.get_many([d, d]) == [b.get(d), b.get(d)]
+        assert a.stats["disk"].hits == b.stats["disk"].hits
+        assert a.simulated_latency_s == b.simulated_latency_s
+
+
+def test_query_cache_get_many_put_many_match_scalar():
+    a = QueryCache(capacity=8, window_s=10.0)
+    b = QueryCache(capacity=8, window_s=10.0)
+    users = ["u1", "u2", "u1", "u3"]
+    items = ["i1", "i2", "i3", "i4"]
+    scores = [0.1, 0.2, 0.3, 0.4]
+    a.put_many(users, items, scores, now=0.0)
+    for u, i, s in zip(users, items, scores):
+        b.put(u, i, s, now=0.0)
+    got = a.get_many(users + ["ux"], items + ["ix"], now=5.0)
+    want = [b.get(u, i, now=5.0) for u, i in zip(users + ["ux"], items + ["ix"])]
+    assert got == want
+    assert (a.stats.hits, a.stats.misses) == (b.stats.hits, b.stats.misses)
+    # TTL expiry via the batched path
+    assert a.get_many(["u1"], ["i1"], now=11.0) == [None]
+    assert a.stats.expirations == 1
+
+
 def test_lfu_two_tier_promotion_and_eviction():
     c = TwoTierLFUCache(mem_capacity=2, disk_capacity=4)
     for k in "abcdef":
