@@ -1,9 +1,14 @@
 """The production recommendation funnel on JiZHI (paper §6.2 + §4):
 
   recall (two-tower retrieval over candidates)
-    → online load shedding (pruning DNN, quota-aware)
+    → online load shedding (pruning DNN, live quota from system feedback)
       → re-rank (DIN target attention)
         → multi-tenant A/B (two DIN variants share the pipeline)
+
+The serving loop is CLOSED: stage channels are bounded (overflow events are
+offered back to the shedder), partial batches flush on the per-stage
+micro-batching window, and the pruning quota tracks the re-rank queue
+depth/utilization. Traffic is time-varying (diurnal ramp + bursts).
 
     PYTHONPATH=src python examples/serve_recsys.py
 """
@@ -13,7 +18,8 @@ import jax.numpy as jnp
 
 from repro.configs import registry
 from repro.core.executors import SimExecutor
-from repro.core.irm.shedding import OnlineShedder, train_pruning_dnn
+from repro.core.irm.shedding import (OnlineShedder, QuotaController,
+                                     train_pruning_dnn)
 from repro.core.multitenant import TrafficSplit, make_dispatch_op
 from repro.core.sedp import SEDP, Event
 from repro.data import synthetic
@@ -31,7 +37,10 @@ def main():
     din_a = din.init(jax.random.PRNGKey(1), din_cfg)
     din_b = din.init(jax.random.PRNGKey(2), din_cfg)    # A/B variant
     shed_dnn, _ = train_pruning_dnn(n_samples=600, seed=0)
-    shedder = OnlineShedder(shed_dnn, capacity_qps_proxy=50.0, min_keep=8)
+    # live controller: quota follows the re-rank queues' depth/utilization
+    shedder = OnlineShedder(shed_dnn, min_keep=8, downstream="rerank_a",
+                            controller=QuotaController("rerank_a",
+                                                       depth_capacity=24.0))
 
     n_cand_pool = 512
     cand_pool = {f.name: jnp.asarray(
@@ -77,13 +86,18 @@ def main():
 
     split = TrafficSplit({"rerank_a": 0.7, "rerank_b": 0.3})
     g = SEDP()
-    g.add_stage("recall", op_recall, batch_size=4, sim_per_item_s=2e-3)
-    g.add_stage("shed", shedder.op, batch_size=8, sim_per_item_s=1e-5)
-    g.add_stage("ab_dispatch", make_dispatch_op(split), batch_size=8)
+    # bounded channels + micro-batch windows: a full re-rank queue offers
+    # overflow events back to the shedder instead of growing without bound
+    g.add_stage("recall", op_recall, batch_size=4, sim_per_item_s=2e-3,
+                max_wait_s=2e-3, max_queue=64)
+    g.add_stage("shed", shedder.op, batch_size=8, sim_per_item_s=1e-5,
+                max_wait_s=1e-3, max_queue=64)
+    g.add_stage("ab_dispatch", make_dispatch_op(split), batch_size=8,
+                max_wait_s=1e-3, max_queue=64)
     g.add_stage("rerank_a", make_op_rerank(din_a, "A"), batch_size=4,
-                sim_per_item_s=4e-3)
+                sim_per_item_s=4e-3, max_wait_s=2e-3, max_queue=32)
     g.add_stage("rerank_b", make_op_rerank(din_b, "B"), batch_size=4,
-                sim_per_item_s=4e-3)
+                sim_per_item_s=4e-3, max_wait_s=2e-3, max_queue=32)
     g.add_stage("respond", lambda b, c: b, batch_size=16)
     g.chain("recall", "shed", "ab_dispatch")
     g.add_edge("ab_dispatch", "rerank_a")
@@ -93,12 +107,17 @@ def main():
     plan = g.compile()
 
     # ---------------------------------------------------------- traffic
+    # time-varying arrivals: diurnal ramp compressed to a 2 s "day" plus
+    # Poisson flash-crowd bursts — the load the closed loop must absorb
     n_req = 48
+    times = synthetic.diurnal_burst_arrivals(
+        rng, n_req, base_qps=600.0, peak_mult=2.0, day_s=2.0,
+        burst_rate_per_s=1.0, burst_mult=3.0, burst_dur_s=0.1)
     raw = synthetic.recsys_batch(rng, din_cfg, n_req)
     raw_tt = synthetic.recsys_batch(rng, tt_cfg, n_req)
     events = []
     for i in range(n_req):
-        events.append((i * 1e-3, Event(payload={
+        events.append((float(times[i]), Event(payload={
             "user_fields": {k: raw["user"]["fields"][k][i]
                             for k in raw["user"]["fields"]},
             "tt_user_fields": {k: raw_tt["user"]["fields"][k][i]
@@ -106,7 +125,7 @@ def main():
             "hist": raw["user"]["hist"][i],
             "user": int(raw["user"]["fields"]["user_id"][i]),
         })))
-    report = SimExecutor(plan).run(events)
+    report = SimExecutor(plan, overflow_policy=shedder.on_overflow).run(events)
 
     by_tenant = {}
     for ev in report.results:
@@ -117,7 +136,13 @@ def main():
     print(f"A/B split: {by_tenant}")
     st = shedder.state
     print(f"shedding pruned {st.shed_events} of "
-          f"{st.shed_events + st.kept_events} recall candidates")
+          f"{st.shed_events + st.kept_events} recall candidates "
+          f"({st.overflow_pruned} overflow-pruned, "
+          f"{st.dropped_requests} requests dropped at full channels)")
+    depths = {n: s.max_depth for n, s in report.stage_stats.items()
+              if s.max_depth}
+    print(f"peak queue depths: {depths}; final quota "
+          f"{shedder.controller.value:.2f}")
     top = report.results[0].payload["topk"][:3]
     print(f"sample top-3 recommendations: {top}")
 

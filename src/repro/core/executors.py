@@ -24,6 +24,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 from repro.core.sedp import Event, Plan, StageProcessor
+from repro.serve.batcher import MicroBatcher
 
 
 @dataclass
@@ -32,6 +33,9 @@ class StageStats:
     batches: int = 0
     busy_s: float = 0.0
     queue_wait_s: float = 0.0
+    max_depth: int = 0        # deepest the stage's channel ever got
+    overflows: int = 0        # enqueue attempts that found the channel full
+    dropped: int = 0          # events shed AT this channel (overflow policy)
 
     @property
     def avg_batch(self):
@@ -44,10 +48,21 @@ class RunReport:
     stage_stats: dict = field(default_factory=dict)
     makespan_s: float = 0.0
     results: list = field(default_factory=list)
+    offered: int = 0          # events injected at the source
+    dropped: int = 0          # events shed by overflow policy (never finish)
 
     @property
     def throughput(self):
         return len(self.latencies) / max(1e-9, self.makespan_s)
+
+    @property
+    def goodput(self):
+        """Completed (non-shed) requests per second of makespan."""
+        return self.throughput
+
+    @property
+    def drop_ratio(self):
+        return self.dropped / max(1, self.offered)
 
     def latency_percentile(self, q: float) -> float:
         if not self.latencies:
@@ -61,8 +76,9 @@ class RunReport:
 
 
 class ExecContext:
-    """Passed to every op: executor-wide shared state + system feedback
-    (queue depths → the load-shedder's 'quota' feature, Table 7)."""
+    """Passed to every op: executor-wide shared state + intermediate system
+    feedback — queue depths and per-stage stats feed the load-shedder's
+    'quota' feature (Table 7)."""
 
     def __init__(self, executor):
         self.executor = executor
@@ -74,6 +90,19 @@ class ExecContext:
         except KeyError:
             return 0
 
+    def stage_stats(self, stage: str) -> StageStats:
+        return self.executor.stats[stage]
+
+    def utilization(self, stage: str) -> float:
+        """busy-server-seconds / available-server-seconds since run start;
+        >1 means the offered work exceeds the stage's service capacity."""
+        ex = self.executor
+        sp = ex.plan.stages.get(stage)
+        if sp is None:
+            return 0.0
+        elapsed = max(ex._now() - getattr(ex, "_t_start", 0.0), 1e-9)
+        return ex.stats[stage].busy_s / (sp.parallelism * elapsed)
+
     def now(self) -> float:
         return self.executor._now()
 
@@ -81,10 +110,17 @@ class ExecContext:
 # --------------------------------------------------------------- Async
 
 class AsyncExecutor:
+    """Channels are bounded (``StageProcessor.max_queue``): a full downstream
+    queue BLOCKS the upstream worker's put — real backpressure that
+    propagates toward the source instead of letting queues grow without
+    bound. Batching follows the MicroBatcher discipline: a worker collects
+    up to ``batch_size`` events or ``max_wait_s`` (whichever first)."""
+
     def __init__(self, plan: Plan, batch_timeout_s: float = 0.002):
         self.plan = plan
         self.batch_timeout_s = batch_timeout_s
-        self.channels = {n: queue.Queue() for n in plan.stages}
+        self.channels = {n: queue.Queue(maxsize=sp.max_queue)
+                         for n, sp in plan.stages.items()}
         self.out_q: queue.Queue = queue.Queue()
         self.stats = defaultdict(StageStats)
         self.ctx = ExecContext(self)
@@ -93,6 +129,7 @@ class AsyncExecutor:
         self._pending_lock = threading.Lock()
         self._threads: list[threading.Thread] = []
         self._gen = 0          # run() generation; stale workers must not emit
+        self._t_start = 0.0
 
     def _now(self):
         return time.monotonic()
@@ -102,18 +139,22 @@ class AsyncExecutor:
 
     def _worker(self, sp: StageProcessor, gen: int):
         ch = self.channels[sp.name]
+        wait_s = (sp.max_wait_s if sp.max_wait_s is not None
+                  else self.batch_timeout_s)
+        mb = MicroBatcher(max_batch=sp.batch_size, max_wait_s=wait_s)
         while not self._stop.is_set() and self._gen == gen:
-            batch = []
+            # idle poll tick when empty; otherwise sleep only to the window
+            timeout = 0.05 if not len(mb) else min(0.05, max(
+                1e-4, mb.deadline() - time.monotonic()))
+            batch = None
             try:
-                batch.append(ch.get(timeout=0.05))
+                batch = mb.offer(ch.get(timeout=timeout))
             except queue.Empty:
+                pass
+            if batch is None:
+                batch = mb.poll()
+            if batch is None:
                 continue
-            t_dead = time.monotonic() + self.batch_timeout_s
-            while len(batch) < sp.batch_size:
-                try:
-                    batch.append(ch.get(timeout=max(0, t_dead - time.monotonic())))
-                except queue.Empty:
-                    break
             t0 = time.monotonic()
             out = sp.op(batch, self.ctx) or []
             if self._gen != gen:
@@ -122,9 +163,28 @@ class AsyncExecutor:
             st.events += len(batch)
             st.batches += 1
             st.busy_s += time.monotonic() - t0
-            self._emit(sp.name, out)
+            self._emit(sp.name, out, gen)
+        # a worker only exits once run() saw _pending == 0, so its batcher
+        # buffer is necessarily empty here — nothing to drain
 
-    def _emit(self, stage: str, events):
+    def _put_blocking(self, stage: str, ev: Event, gen: int):
+        """Bounded-channel put: blocks while the downstream queue is full
+        (backpressure), bailing out only on shutdown/generation change."""
+        ch = self.channels[stage]
+        st = self.stats[stage]
+        blocked = False
+        while self._gen == gen:
+            try:
+                ch.put(ev, block=blocked, timeout=0.05)
+                st.max_depth = max(st.max_depth, ch.qsize())
+                return
+            except queue.Full:
+                if not blocked:             # count each backpressure stall once
+                    st.overflows += 1
+                    blocked = True
+                continue
+
+    def _emit(self, stage: str, events, gen: int):
         succs = self.plan.succs[stage]
         for ev in events:
             targets = ([ev.route] if ev.route in succs else succs)
@@ -139,7 +199,7 @@ class AsyncExecutor:
                 with self._pending_lock:
                     self._pending += len(targets) - 1
             for t in targets:
-                self.channels[t].put(ev)
+                self._put_blocking(t, ev, gen)
 
     def run(self, events: list[Event], source: Optional[str] = None) -> RunReport:
         source = source or self.plan.sources[0]
@@ -159,17 +219,16 @@ class AsyncExecutor:
                 th.start()
                 self._threads.append(th)
         t_start = time.monotonic()
+        self._t_start = t_start
         with self._pending_lock:
             self._pending = len(events)
         for ev in events:
             ev.born_at = time.monotonic()
-            self.channels[source].put(ev)
+            # bounded ingress: a full source channel pushes back on the
+            # injector exactly like any other upstream
+            self._put_blocking(source, ev, gen)
         done = []
         while True:
-            with self._pending_lock:
-                if self._pending <= 0 and all(q.empty() for q in self.channels.values()):
-                    if self.out_q.qsize() >= len(done):
-                        pass
             try:
                 ev = self.out_q.get(timeout=0.2)
                 done.append(ev)
@@ -185,7 +244,7 @@ class AsyncExecutor:
             latencies=[ev.done_at - ev.born_at for ev in done],
             stage_stats=dict(self.stats),
             makespan_s=time.monotonic() - t_start,
-            results=done)
+            results=done, offered=len(events))
         return rep
 
 
@@ -202,20 +261,42 @@ class _SimItem:
 class SimExecutor:
     """Discrete-event simulation: each stage = FIFO + ``parallelism`` servers;
     service time = sim_base_s + sim_per_item_s * len(batch) (per batch).
-    Deterministic: same inputs → same report."""
+    Deterministic: same inputs → same report.
 
-    def __init__(self, plan: Plan, service_time: Optional[Callable] = None):
+    Batching follows the MicroBatcher discipline on the virtual clock: a
+    stage with ``max_wait_s`` set holds a partial batch until the window
+    closes (a scheduled "poll" event flushes it); the default window of 0
+    dispatches greedily, matching the pre-closed-loop behaviour the offline
+    calibration was tuned against.
+
+    Channels are bounded by ``max_queue``. On overflow the event is offered
+    to ``overflow_policy(stage, event, ctx)`` — e.g. the online shedder's
+    ``on_overflow``, which prunes the candidate set (admitting a cheaper
+    event) or drops the request outright (returns None). Without a policy
+    the queue keeps growing and only ``overflows`` is counted: exactly the
+    unbounded blow-up the closed loop exists to prevent."""
+
+    def __init__(self, plan: Plan, service_time: Optional[Callable] = None,
+                 overflow_policy: Optional[Callable] = None,
+                 default_max_wait_s: float = 0.0):
         self.plan = plan
         self.service_time = service_time or self._default_service_time
+        self.overflow_policy = overflow_policy
+        self.default_max_wait_s = default_max_wait_s
         self.stats = defaultdict(StageStats)
         self.ctx = ExecContext(self)
-        # deques: stage dispatch pops from the head; list.pop(0) would be
-        # O(n) per event and O(n²) in queue depth under heavy traffic
-        self._queues: dict[str, deque[Event]] = {n: deque() for n in plan.stages}
+        # deques of (enqueue_time, event): stage dispatch pops from the head;
+        # list.pop(0) would be O(n) per event and O(n²) in queue depth under
+        # heavy traffic. The timestamp drives queue-wait accounting and the
+        # micro-batch window.
+        self._queues: dict[str, deque] = {n: deque() for n in plan.stages}
         self._free_at: dict[str, list[float]] = {
             n: [0.0] * sp.parallelism for n, sp in plan.stages.items()}
+        self._poll_at: dict[str, float] = {}    # one outstanding poll/stage
         self._clock = 0.0
+        self._t_start = 0.0
         self._done: list[Event] = []
+        self._dropped = 0
 
     @staticmethod
     def _default_service_time(sp: StageProcessor, batch):
@@ -227,9 +308,25 @@ class SimExecutor:
     def _depth(self, stage):
         return len(self._queues[stage])
 
+    def _wait_window(self, sp: StageProcessor) -> float:
+        return (sp.max_wait_s if sp.max_wait_s is not None
+                else self.default_max_wait_s)
+
     def run(self, arrivals: list[tuple[float, Event]],
             source: Optional[str] = None) -> RunReport:
         source = source or self.plan.sources[0]
+        # fresh lifecycle per run (same contract as AsyncExecutor): no
+        # leftover events, clock, server busy-times or counters from a
+        # previous run() on this instance
+        self.stats = defaultdict(StageStats)
+        self._queues = {n: deque() for n in self.plan.stages}
+        self._free_at = {n: [0.0] * sp.parallelism
+                         for n, sp in self.plan.stages.items()}
+        self._poll_at = {}
+        self._clock = 0.0
+        self._done = []
+        self._dropped = 0
+        self._t_start = arrivals[0][0] if arrivals else 0.0
         pq: list[_SimItem] = []
         seq = 0
         for t, ev in arrivals:
@@ -238,49 +335,92 @@ class SimExecutor:
             seq += 1
         while pq:
             item = heapq.heappop(pq)
+            if item.kind == "poll":             # micro-batch window closed
+                stage = item.data
+                if self._poll_at.get(stage) != item.t:
+                    continue                    # superseded by a later poll
+                self._poll_at.pop(stage)
+                if not self._queues[stage]:
+                    # batch already went out on the size trigger: a stale
+                    # poll must not advance the clock (it would inflate the
+                    # makespan to the unused window deadline)
+                    continue
+                self._clock = max(self._clock, item.t)
+                seq = self._try_dispatch(stage, pq, seq)
+                continue
             self._clock = max(self._clock, item.t)
             if item.kind == "arrive":
                 stage, ev = item.data
-                self._queues[stage].append(ev)
+                self._enqueue(stage, ev)
                 seq = self._try_dispatch(stage, pq, seq)
             else:  # ("finish", stage, server_idx, batch, out_events)
                 stage, si, batch, out = item.data
                 st = self.stats[stage]
                 st.events += len(batch)
                 st.batches += 1
-                self._emit(stage, out, pq)
+                self._emit(stage, out)
                 seq = self._try_dispatch(stage, pq, seq)
                 for other in self.plan.stages:
                     seq = self._try_dispatch(other, pq, seq)
         rep = RunReport(
             latencies=[ev.done_at - ev.born_at for ev in self._done],
             stage_stats=dict(self.stats),
-            makespan_s=self._clock - (arrivals[0][0] if arrivals else 0.0),
-            results=self._done)
+            makespan_s=self._clock - self._t_start,
+            results=self._done, offered=len(arrivals),
+            dropped=self._dropped)
         return rep
 
     def _try_dispatch(self, stage: str, pq, seq: int) -> int:
         sp = self.plan.stages[stage]
+        wait = self._wait_window(sp)
         q = self._queues[stage]
         frees = self._free_at[stage]
         while q:
             si = min(range(len(frees)), key=frees.__getitem__)
             if frees[si] > self._clock:
                 break
-            batch = [q.popleft() for _ in range(min(sp.batch_size, len(q)))]
+            if len(q) < sp.batch_size and wait > 0.0:
+                t_flush = q[0][0] + wait
+                if t_flush > self._clock:
+                    # partial batch inside its window: hold it and schedule
+                    # ONE flush poll at window close
+                    if self._poll_at.get(stage, float("inf")) > t_flush:
+                        self._poll_at[stage] = t_flush
+                        heapq.heappush(pq, _SimItem(t_flush, seq, "poll",
+                                                    stage))
+                        seq += 1
+                    break
+            entries = [q.popleft() for _ in range(min(sp.batch_size, len(q)))]
+            batch = [e for _, e in entries]
+            st = self.stats[stage]
+            st.queue_wait_s += sum(self._clock - t for t, _ in entries)
             t0 = self._clock
             out = sp.op(batch, self.ctx) or []
             dt = self.service_time(sp, batch)
             for e in batch:                     # cost consumed by THIS stage
                 e.meta.pop("cost_s", None)
             frees[si] = t0 + dt
-            self.stats[stage].busy_s += dt
+            st.busy_s += dt
             heapq.heappush(pq, _SimItem(t0 + dt, seq, "finish",
                                         (stage, si, batch, out)))
             seq += 1
         return seq
 
-    def _emit(self, stage: str, events, pq):
+    def _enqueue(self, stage: str, ev: Event):
+        q = self._queues[stage]
+        st = self.stats[stage]
+        if len(q) >= self.plan.stages[stage].max_queue:
+            st.overflows += 1
+            if self.overflow_policy is not None:
+                ev = self.overflow_policy(stage, ev, self.ctx)
+                if ev is None:                  # request shed at the channel
+                    st.dropped += 1
+                    self._dropped += 1
+                    return
+        q.append((self._clock, ev))
+        st.max_depth = max(st.max_depth, len(q))
+
+    def _emit(self, stage: str, events):
         succs = self.plan.succs[stage]
         for ev in events:
             targets = ([ev.route] if ev.route in succs else succs)
@@ -290,7 +430,7 @@ class SimExecutor:
                 self._done.append(ev)
                 continue
             for t in targets:
-                self._queues[t].append(ev)
+                self._enqueue(t, ev)
 
 
 # -------------------------------------------------------------- Legacy
@@ -357,4 +497,5 @@ class LegacyExecutor:
             t_last = max(t_last, t)
         return RunReport(latencies=[e.done_at - e.born_at for e in done],
                          stage_stats=dict(self.stats),
-                         makespan_s=t_last - t_first, results=done)
+                         makespan_s=t_last - t_first, results=done,
+                         offered=len(arrivals))

@@ -16,6 +16,7 @@ constraint |L* − L̂| ≤ ε (Eq. 2).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -100,7 +101,8 @@ class PruningDNN:
 
 
 def train_pruning_dnn(n_samples: int = 4000, eps: float = 0.05,
-                      seed: int = 0) -> tuple[PruningDNN, float]:
+                      seed: int = 0, steps: int = 2000
+                      ) -> tuple[PruningDNN, float]:
     """Generate oracle-labelled synthetic funnel traffic and fit the DNN."""
     rng = np.random.default_rng(seed)
     X, y = [], []
@@ -124,7 +126,7 @@ def train_pruning_dnn(n_samples: int = 4000, eps: float = 0.05,
         y.append(cut)
         prev = cut
     dnn = PruningDNN(seed)
-    mse = dnn.fit(np.stack(X), np.array(y, np.float32))
+    mse = dnn.fit(np.stack(X), np.array(y, np.float32), steps=steps)
     return dnn, mse
 
 
@@ -133,27 +135,108 @@ class ShedderState:
     prev_cutoff: float = 0.0
     shed_events: int = 0
     kept_events: int = 0
+    dropped_requests: int = 0     # whole requests shed at a full channel
+    overflow_pruned: int = 0      # requests hard-pruned at a full channel
+
+
+class QuotaController:
+    """Live quota from intermediate system feedback (paper §6.2: the policy
+    is "fine-tuned over intermediate system feedback").
+
+    Maps the downstream stage's queue depth and server utilization
+    (``ExecContext.queue_depth`` / ``ExecContext.utilization``, i.e.
+    StageStats) to the 'available resource' feature of Table 7, smoothed
+    with an EWMA so a single burst doesn't whipsaw the cutoff. Quota 1.0 ≈
+    free capacity; → 0.02 as the downstream saturates."""
+
+    def __init__(self, downstream: str = "rerank",
+                 depth_capacity: float = 64.0, alpha: float = 0.35):
+        self.downstream = downstream
+        self.depth_capacity = depth_capacity
+        self.alpha = alpha
+        self._q = 1.0
+
+    def observe(self, ctx) -> float:
+        depth = (ctx.queue_depth(self.downstream)
+                 if hasattr(ctx, "queue_depth") else 0)
+        raw = self.depth_capacity / (depth + self.depth_capacity)
+        if hasattr(ctx, "utilization"):
+            util = ctx.utilization(self.downstream)
+            if util > 1.0:      # demand exceeds service capacity: clamp hard
+                raw = min(raw, 1.0 / (util * util))
+        self._q += self.alpha * (raw - self._q)
+        return float(np.clip(self._q, 0.02, 1.2))
+
+    @property
+    def value(self) -> float:
+        return float(np.clip(self._q, 0.02, 1.2))
 
 
 class OnlineShedder:
-    """SEDP-stage wrapper: reads queue depth → quota, prunes candidate lists
-    in event payloads (payload["candidates"] = list of (item, score))."""
+    """SEDP-stage wrapper: reads system feedback → quota, prunes candidate
+    lists in event payloads (payload["candidates"] = list of (item, score)).
+
+    Two hooks into the serving loop:
+      * ``op`` — the in-pipeline stage (quota-aware per-request pruning);
+      * ``on_overflow`` — the bounded-channel overflow policy (SimExecutor):
+        a full downstream queue offers the event here, which hard-prunes it
+        to ``min_keep`` or, when nothing is left to prune, sheds the whole
+        request (returns None).
+    """
 
     def __init__(self, dnn: PruningDNN, capacity_qps_proxy: float = 100.0,
-                 min_keep: int = 12, downstream: str = "rerank"):
+                 min_keep: int = 12, downstream: str = "rerank",
+                 controller: Optional[QuotaController] = None):
         self.dnn = dnn
         self.capacity = capacity_qps_proxy
         self.min_keep = min_keep
         self.downstream = downstream
+        self.controller = controller
         self.state = ShedderState()
 
     def quota(self, queue_depth: int) -> float:
         return float(np.clip(self.capacity / (queue_depth + self.capacity), 0.02, 1.2))
 
-    def op(self, batch, ctx):
+    def current_quota(self, ctx) -> float:
+        if self.controller is not None:
+            return self.controller.observe(ctx)
         depth = (ctx.queue_depth(self.downstream)
                  if hasattr(ctx, "queue_depth") else 0)
-        q = self.quota(depth)
+        return self.quota(depth)
+
+    def on_overflow(self, stage: str, ev, ctx):
+        """Bounded-channel overflow hook. Prune hard; drop when already
+        minimal. Returning None sheds the request at the channel.
+
+        Accounting: candidates the shed stage already tallied (meta marker)
+        MOVE from kept to shed here — counting them afresh would make
+        shed+kept exceed the candidates that ever existed."""
+        cands = (ev.payload.get("candidates")
+                 if isinstance(ev.payload, dict) else None)
+        counted = bool(ev.meta.get("shed_accounted")) if cands else False
+        if cands and len(cands) > self.min_keep:
+            scores = np.array([c[1] for c in cands], np.float32)
+            order = np.argsort(-scores)[:self.min_keep]
+            kept = [cands[i] for i in order]
+            n_shed = len(cands) - len(kept)
+            self.state.shed_events += n_shed
+            if counted:
+                self.state.kept_events -= n_shed
+            else:
+                self.state.kept_events += len(kept)
+                ev.meta["shed_accounted"] = True
+            self.state.overflow_pruned += 1
+            ev.payload["candidates"] = kept
+            ev.meta["overflow_pruned"] = True
+            return ev
+        if counted and cands:            # whole request (and its candidates)
+            self.state.shed_events += len(cands)   # sheds at the channel
+            self.state.kept_events -= len(cands)
+        self.state.dropped_requests += 1
+        return None
+
+    def op(self, batch, ctx):
+        q = self.current_quota(ctx)
         for ev in batch:
             cands = ev.payload.get("candidates", [])
             if not cands:
@@ -170,4 +253,5 @@ class OnlineShedder:
             self.state.prev_cutoff = cut
             ev.payload["candidates"] = kept
             ev.meta["cutoff_ratio"] = cut
+            ev.meta["shed_accounted"] = True
         return batch

@@ -48,13 +48,40 @@ def make_dispatch_op(split: TrafficSplit) -> Callable:
     return op
 
 
-def make_fanout_op(targets: list[str]) -> Callable:
+def make_fanout_op(targets: list[str],
+                   priorities: Optional[dict[str, int]] = None,
+                   quota_fn: Optional[Callable] = None,
+                   min_quota: float = 0.5) -> Callable:
     """Multi-objective: clone each event to every tenant DNN (they share the
-    already-computed features in the payload by reference)."""
+    already-computed features in the payload by reference).
+
+    Closed-loop extension: under overload, secondary objectives are the
+    first thing to shed. ``quota_fn(ctx) -> float`` is the live quota signal
+    (e.g. ``QuotaController.observe``); when it drops below ``min_quota``,
+    only priority-0 tenants (``priorities``, default: first target) receive
+    clones — CTR keeps serving while FR/CMT ride out the spike."""
+    priorities = priorities or {t: (0 if i == 0 else 1)
+                                for i, t in enumerate(targets)}
+
     def op(batch: list[Event], ctx):
+        live = targets
+        if quota_fn is not None:
+            q = quota_fn(ctx)
+            if q < min_quota:
+                live = [t for t in targets if priorities.get(t, 1) == 0]
+                if not live:
+                    # a priorities dict with no 0-rank entry must not shed
+                    # EVERY tenant (events would vanish / Async would hang
+                    # waiting on them): keep the best-ranked tier instead
+                    best = min(priorities.get(t, 1) for t in targets)
+                    live = [t for t in targets
+                            if priorities.get(t, 1) == best]
         out = []
         for ev in batch:
-            for i, t in enumerate(targets):
+            if len(live) < len(targets):
+                ev.meta["tenants_shed"] = [t for t in targets
+                                           if t not in live]
+            for i, t in enumerate(live):
                 e = ev if i == 0 else Event(payload=dict(ev.payload),
                                             req_id=ev.req_id,
                                             born_at=ev.born_at)

@@ -37,16 +37,32 @@ class Event:
 @dataclass
 class StageProcessor:
     """op(batch: list[Event], ctx) -> list[Event]. Tunables (batch size,
-    parallelism) are exactly the paper's per-stage knobs (Table 6)."""
+    parallelism, batching window, channel bound) are exactly the paper's
+    per-stage knobs (Table 6)."""
     name: str
     op: Callable
     batch_size: int = 1
     parallelism: int = 1
+    # bounded channel: when the stage's queue holds max_queue events the
+    # upstream either blocks (AsyncExecutor) or offers the event to the
+    # load-shedding policy (SimExecutor) instead of growing without bound
     max_queue: int = 100_000
+    # micro-batching window: a partial batch is held up to max_wait_s for
+    # more arrivals before it is flushed (None = executor default)
+    max_wait_s: Optional[float] = None
     # offline-tunable service-time model (used by SimExecutor):
     # seconds = base + per_item * n  (amortization is what batch tuning buys)
     sim_base_s: float = 0.0
     sim_per_item_s: float = 0.0
+
+    def __post_init__(self):
+        # a non-positive bound would mean "unbounded" to queue.Queue but
+        # "overflow every event" to SimExecutor — reject it at the shared
+        # knob instead of diverging per executor
+        if self.max_queue <= 0:
+            raise GraphError(
+                f"stage {self.name!r}: max_queue must be positive "
+                f"(got {self.max_queue})")
 
 
 class GraphError(ValueError):

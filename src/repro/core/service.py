@@ -8,7 +8,6 @@ latency); THIS class is the functional end-to-end path.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from typing import Optional
 
@@ -21,7 +20,8 @@ from repro.core import sedp as sedp_lib
 from repro.core.cube import ParameterCube
 from repro.core.cube_cache import TwoTierLFUCache, capacity_from_ratio
 from repro.core.executors import AsyncExecutor, SimExecutor
-from repro.core.irm.shedding import OnlineShedder, train_pruning_dnn
+from repro.core.irm.shedding import (OnlineShedder, QuotaController,
+                                     train_pruning_dnn)
 from repro.core.query_cache import QueryCache
 from repro.core.sedp import SEDP, Event
 from repro.data import synthetic
@@ -37,6 +37,10 @@ class ServiceConfig:
     query_window_s: float = 120.0
     shed: bool = True
     seed: int = 0
+    # closed-loop serving knobs: bounded stage channels (backpressure) and
+    # the per-stage micro-batching window (collect batch_size or wait)
+    max_queue: int = 512
+    batch_wait_s: float = 0.002
 
 
 class InferenceService:
@@ -63,7 +67,10 @@ class InferenceService:
         self.shedder = None
         if cfg.shed:
             dnn, _ = train_pruning_dnn(n_samples=800, seed=cfg.seed)
-            self.shedder = OnlineShedder(dnn)
+            # live controller: re-rank queue depth + utilization → quota
+            self.shedder = OnlineShedder(
+                dnn, downstream="rerank",
+                controller=QuotaController("rerank", depth_capacity=64.0))
         self.graph, self.plan = self._build()
 
     # ------------------------------------------------------------- stages
@@ -72,7 +79,7 @@ class InferenceService:
         mc = self.model_cfg
 
         def op_qcache(batch, ctx):
-            now = time.monotonic()
+            now = ctx.now()        # executor clock: wall (Async) or virtual (Sim)
             scores = self.query_cache.get_many(
                 [ev.payload["user_id"] for ev in batch],
                 [ev.payload["item_id"] for ev in batch], now)
@@ -106,7 +113,7 @@ class InferenceService:
             params = self.buffer.active.payload
             b = self._pack_batch([ev.payload for ev in batch])
             scores = np.asarray(self._serve(params, b))
-            now = time.monotonic()
+            now = ctx.now()
             for ev, s in zip(batch, scores):
                 ev.payload["score"] = float(s)
             self.query_cache.put_many(
@@ -115,15 +122,21 @@ class InferenceService:
                 [float(s) for s in scores], now)
             return batch
 
-        g.add_stage("ingress", sedp_lib.passthrough, batch_size=8, parallelism=2)
-        g.add_stage("query_cache", op_qcache, batch_size=16, parallelism=2)
-        g.add_stage("features", op_features, batch_size=8, parallelism=2)
-        g.add_stage("cube", op_cube, batch_size=8, parallelism=2)
+        kw = dict(max_queue=self.cfg.max_queue,
+                  max_wait_s=self.cfg.batch_wait_s)
+        g.add_stage("ingress", sedp_lib.passthrough, batch_size=8,
+                    parallelism=2, **kw)
+        g.add_stage("query_cache", op_qcache, batch_size=16, parallelism=2,
+                    **kw)
+        g.add_stage("features", op_features, batch_size=8, parallelism=2, **kw)
+        g.add_stage("cube", op_cube, batch_size=8, parallelism=2, **kw)
         if self.shedder:
-            g.add_stage("shed", self.shedder.op, batch_size=8, parallelism=1)
+            g.add_stage("shed", self.shedder.op, batch_size=8, parallelism=1,
+                        **kw)
         g.add_stage("rerank", op_dnn, batch_size=self.cfg.batch_size,
-                    parallelism=1)
-        g.add_stage("respond", sedp_lib.passthrough, batch_size=32, parallelism=1)
+                    parallelism=1, **kw)
+        g.add_stage("respond", sedp_lib.passthrough, batch_size=32,
+                    parallelism=1, **kw)
         g.chain("ingress", "query_cache")
         g.add_edge("query_cache", "respond")
         g.chain("query_cache", "features", "cube")
@@ -172,6 +185,18 @@ class InferenceService:
             evs.append(Event(payload=payload))
         return evs
 
-    def run(self, n_requests: int = 64):
-        ex = AsyncExecutor(self.plan)
-        return ex.run(self.make_requests(n_requests))
+    def run(self, n_requests: int = 64, executor: str = "async",
+            rate_qps: float = 500.0):
+        """Serve n_requests end to end. ``executor="async"`` is the real
+        threaded path (bounded channels block upstream — backpressure);
+        ``executor="sim"`` runs the identical DAG on the virtual clock with
+        the shedder as the bounded-channel overflow policy."""
+        reqs = self.make_requests(n_requests, seed=self.cfg.seed)
+        if executor == "async":
+            return AsyncExecutor(self.plan).run(reqs)
+        if executor != "sim":
+            raise ValueError(f"unknown executor {executor!r}")
+        ex = SimExecutor(
+            self.plan,
+            overflow_policy=self.shedder.on_overflow if self.shedder else None)
+        return ex.run([(i / rate_qps, ev) for i, ev in enumerate(reqs)])

@@ -42,6 +42,52 @@ def recsys_batch(rng: np.random.Generator, cfg: RecsysConfig, batch: int) -> dic
     return b
 
 
+def diurnal_burst_arrivals(rng: np.random.Generator, n_events: int,
+                           base_qps: float, peak_mult: float = 3.0,
+                           day_s: float = 86400.0, start_frac: float = 0.5,
+                           burst_rate_per_s: float = 0.0,
+                           burst_mult: float = 3.0,
+                           burst_dur_s: float = 0.5) -> np.ndarray:
+    """Time-varying arrival process for closed-loop serving benchmarks
+    (paper Fig. 2a: diurnal traffic; §6.2: bursts exceeding capacity).
+
+    A non-homogeneous Poisson process sampled by Lewis thinning:
+
+      * diurnal ramp — cosine day curve between ``base_qps`` (trough) and
+        ``base_qps * peak_mult`` (peak); ``day_s`` compresses a day into the
+        simulated horizon (e.g. day_s=60 sweeps a full diurnal cycle per
+        simulated minute), ``start_frac`` picks where in the day t=0 falls
+        (0.5 = mid-ramp);
+      * Poisson bursts — burst windows open at rate ``burst_rate_per_s``,
+        multiply the instantaneous rate by ``burst_mult`` for
+        ``burst_dur_s`` seconds (flash-crowd spikes).
+
+    Returns sorted arrival times (seconds, t=0 origin), seeded and
+    deterministic per ``rng``.
+    """
+    lam_max = base_qps * max(1.0, peak_mult) * (
+        max(1.0, burst_mult) if burst_rate_per_s > 0 else 1.0)
+    times = np.empty(n_events)
+    t = 0.0
+    next_burst = (rng.exponential(1.0 / burst_rate_per_s)
+                  if burst_rate_per_s > 0 else np.inf)
+    burst_end = -np.inf
+    k = 0
+    while k < n_events:
+        t += rng.exponential(1.0 / lam_max)
+        while t >= next_burst:
+            burst_end = max(burst_end, next_burst + burst_dur_s)
+            next_burst += rng.exponential(1.0 / burst_rate_per_s)
+        phase = np.cos((start_frac + t / day_s) * 2.0 * np.pi)
+        lam = base_qps * (1.0 + (peak_mult - 1.0) * 0.5 * (1.0 + phase))
+        if t < burst_end:
+            lam *= burst_mult
+        if rng.random() < lam / lam_max:
+            times[k] = t
+            k += 1
+    return times
+
+
 def random_graph(rng: np.random.Generator, n_nodes: int, n_edges: int,
                  d_feat: int | None = None) -> dict:
     """Random directed graph as (E,2) [src,dst] with synthetic edge lengths."""

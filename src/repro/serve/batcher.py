@@ -36,7 +36,10 @@ class MicroBatcher:
 
     def poll(self, now: Optional[float] = None) -> Optional[list]:
         now = time.monotonic() if now is None else now
-        if self._buf and now - self._first_at >= self.max_wait_s:
+        # compare against first_at + wait (the same expression deadline()
+        # returns) — the subtraction form disagrees with it in the last ulp
+        # at large clock values, making the boundary poll a no-op
+        if self._buf and now >= self._first_at + self.max_wait_s:
             return self.flush()
         return None
 
@@ -45,6 +48,14 @@ class MicroBatcher:
             return None
         out, self._buf = self._buf, []
         return out
+
+    def deadline(self) -> float:
+        """When the currently-buffered partial batch must flush (undefined
+        when empty — check ``len`` first)."""
+        return self._first_at + self.max_wait_s
+
+    def __len__(self) -> int:
+        return len(self._buf)
 
 
 @dataclass

@@ -1,0 +1,114 @@
+"""Batcher edge cases (ISSUE 2 satellite): MicroBatcher flush ordering and
+ContinuousBatcher slot churn."""
+import numpy as np
+
+from repro.serve.batcher import ContinuousBatcher, MicroBatcher
+
+
+# ------------------------------------------------------------ MicroBatcher
+
+def test_microbatcher_size_flush_wins_before_timeout():
+    """The size trigger fires on the offer that fills the batch, even if the
+    window would not close for a long time — and FIFO order is preserved."""
+    mb = MicroBatcher(max_batch=3, max_wait_s=100.0)
+    assert mb.offer("a", now=0.0) is None
+    assert mb.offer("b", now=1.0) is None
+    assert mb.offer("c", now=2.0) == ["a", "b", "c"]
+    assert len(mb) == 0
+
+
+def test_microbatcher_timeout_flush_wins_before_size():
+    """A partial batch flushes at first_at + max_wait_s; the window restarts
+    from the NEXT first offer, not from the flush."""
+    mb = MicroBatcher(max_batch=100, max_wait_s=1.0)
+    mb.offer("a", now=0.0)
+    mb.offer("b", now=0.5)
+    assert mb.poll(now=0.99) is None               # window still open
+    assert mb.poll(now=1.0) == ["a", "b"]          # boundary is inclusive
+    mb.offer("c", now=5.0)
+    assert mb.poll(now=5.5) is None                # fresh window from 5.0
+    assert mb.poll(now=6.0) == ["c"]
+
+
+def test_microbatcher_empty_poll_and_flush():
+    mb = MicroBatcher(max_batch=4, max_wait_s=0.1)
+    assert mb.poll(now=123.0) is None
+    assert mb.flush() is None
+    assert len(mb) == 0
+    # an offer right after an empty poll starts a new window at that offer
+    mb.offer("x", now=200.0)
+    assert mb.poll(now=200.05) is None
+    deadline = mb.deadline()
+    assert abs(deadline - 200.1) < 1e-9
+    assert mb.poll(now=deadline) == ["x"]
+
+
+def test_microbatcher_size_flush_resets_window():
+    """After a size flush, the next offer opens a new window — stale
+    first_at must not cause an instant timeout flush."""
+    mb = MicroBatcher(max_batch=2, max_wait_s=1.0)
+    mb.offer(1, now=0.0)
+    assert mb.offer(2, now=0.2) == [1, 2]
+    mb.offer(3, now=10.0)
+    assert mb.poll(now=10.5) is None               # NOT flushed via old window
+    assert mb.poll(now=11.0) == [3]
+
+
+# ------------------------------------------------------- ContinuousBatcher
+
+def test_continuous_batcher_join_mid_decode():
+    """A request submitted while others are mid-decode claims a free slot
+    immediately and decodes from its own prefill length."""
+    cb = ContinuousBatcher(n_slots=3, s_max=64)
+    cb.submit(0, prompt_len=4, max_new=8)
+    cb.submit(1, prompt_len=6, max_new=8)
+    cb.step_complete(np.array([False, False, False]))   # 0,1 advance
+    assert cb.lengths().tolist() == [5, 7, 0]
+    cb.submit(2, prompt_len=10, max_new=4)              # joins mid-decode
+    assert cb.active_mask.tolist() == [True, True, True]
+    cb.step_complete(np.array([False, False, False]))
+    assert cb.lengths().tolist() == [6, 8, 11]
+    assert cb.completed == []
+
+
+def test_continuous_batcher_eos_and_max_new_same_step():
+    """EOS on one slot and max_new exhaustion on another in the SAME step:
+    both complete exactly once, both slots free for waiters."""
+    cb = ContinuousBatcher(n_slots=2, s_max=64)
+    cb.submit(7, prompt_len=3, max_new=1)      # exhausts max_new this step
+    cb.submit(8, prompt_len=3, max_new=9)      # EOS this step
+    cb.submit(9, prompt_len=2, max_new=2)      # waiting
+    cb.submit(10, prompt_len=2, max_new=2)     # waiting
+    cb.step_complete(np.array([False, True]))
+    assert sorted(cb.completed) == [7, 8]
+    assert len(cb.completed) == 2              # no double-completion
+    # both freed slots were refilled from the waiting queue in FIFO order
+    assert [s.request_id for s in cb.slots] == [9, 10]
+    assert cb.waiting == []
+
+
+def test_continuous_batcher_admission_order_fifo():
+    cb = ContinuousBatcher(n_slots=1, s_max=64)
+    for req in (100, 101, 102):
+        cb.submit(req, prompt_len=2, max_new=1)
+    served = []
+    while cb.active_mask.any():
+        served.append(cb.slots[0].request_id)
+        cb.step_complete(np.array([False]))
+    assert served == [100, 101, 102]           # strict submission order
+
+
+def test_continuous_batcher_s_max_cap_and_utilization():
+    """A sequence hitting s_max completes even with max_new remaining;
+    utilization tracks the active fraction of slots."""
+    cb = ContinuousBatcher(n_slots=4, s_max=5)
+    cb.submit(0, prompt_len=4, max_new=100)
+    cb.submit(1, prompt_len=1, max_new=100)
+    assert cb.utilization == 0.5
+    cb.step_complete(np.zeros(4, bool))        # req 0 reaches s_max=5
+    assert cb.completed == [0]
+    assert cb.utilization == 0.25
+    for _ in range(3):
+        cb.step_complete(np.zeros(4, bool))    # req 1: 2→5
+    assert cb.completed == [0, 1]
+    assert cb.utilization == 0.0

@@ -1,0 +1,147 @@
+"""Batched cache ops vs the equivalent sequential loop (ISSUE 2 satellite).
+
+`TwoTierLFUCache.get_many/put_many` and `QueryCache.get_many/put_many` must
+be BIT-IDENTICAL to a sequential get/put loop: same returned values, same
+hit/miss/expiration accounting, same internal state (entry order, LFU
+counts, tier residency) — including at eviction boundaries, where a
+bookkeeping divergence would silently change what production keeps hot.
+"""
+import numpy as np
+import pytest
+
+from repro.core.cube_cache import TwoTierLFUCache
+from repro.core.query_cache import QueryCache
+
+
+def _lfu_state(cache: TwoTierLFUCache):
+    # simulated_latency_s is compared separately (to float tolerance):
+    # the batched path legitimately sums a batch locally before one
+    # accumulator add, so the exact float differs in the last ulp
+    return {
+        "mem_data": dict(cache.mem.data),
+        "disk_data": dict(cache.disk.data),
+        "mem_counts": dict(cache.mem.counts),
+        "disk_counts": dict(cache.disk.counts),
+        "stats": {t: (s.hits, s.misses) for t, s in cache.stats.items()},
+    }
+
+
+def _qc_state(qc: QueryCache):
+    return {
+        "data": list(qc._data.items()),        # ordered: LRU order matters
+        "by_user": {u: set(s) for u, s in qc._by_user.items() if s},
+        "stats": (qc.stats.hits, qc.stats.misses, qc.stats.expirations,
+                  qc.stats.invalidations),
+    }
+
+
+def _random_kv_trace(seed: int, n_ops: int, key_space: int):
+    """(op, keys, values) trace with heavy key reuse so hits, promotions and
+    evictions all occur."""
+    rng = np.random.default_rng(seed)
+    trace = []
+    for _ in range(n_ops):
+        n = int(rng.integers(1, 9))
+        keys = [int(k) for k in rng.integers(0, key_space, n)]
+        if rng.random() < 0.5:
+            trace.append(("get", keys, None))
+        else:
+            trace.append(("put", keys, [k * 10 + 1 for k in keys]))
+    return trace
+
+
+@pytest.mark.parametrize("mem_cap,disk_cap", [(2, 3), (1, 1), (4, 8), (3, 0)])
+@pytest.mark.parametrize("seed", [0, 7])
+def test_two_tier_lfu_batched_equals_sequential(mem_cap, disk_cap, seed):
+    """Tiny capacities force constant eviction/demotion/promotion churn —
+    the boundary where batched bookkeeping could diverge."""
+    batched = TwoTierLFUCache(mem_cap, disk_cap)
+    seq = TwoTierLFUCache(mem_cap, disk_cap)
+    for op, keys, values in _random_kv_trace(seed, 60, key_space=10):
+        if op == "get":
+            got_b = batched.get_many(keys)
+            got_s = [seq.get(k) for k in keys]
+            assert got_b == got_s
+        else:
+            batched.put_many(keys, values)
+            for k, v in zip(keys, values):
+                seq.put(k, v)
+        assert _lfu_state(batched) == _lfu_state(seq)
+        assert batched.simulated_latency_s == \
+            pytest.approx(seq.simulated_latency_s, rel=1e-12)
+    assert batched.overall_hit_ratio == seq.overall_hit_ratio
+    # the trace actually exercised both tiers and evictions
+    assert batched.stats["mem"].hits > 0
+    assert len(batched.mem.data) <= mem_cap
+    assert len(batched.disk.data) <= max(disk_cap, 1)
+
+
+def test_two_tier_duplicate_key_in_one_batch_promotes_once():
+    """A duplicate of a disk-resident key must hit memory after the first
+    occurrence promotes it (same as sequential gets) — not disk twice."""
+    c = TwoTierLFUCache(2, 4)
+    s = TwoTierLFUCache(2, 4)
+    for cache in (c, s):
+        cache.put("cold", 1)
+        # push "cold" out of the memory tier
+        cache.put("a", 2)
+        cache.put("b", 3)
+    assert "cold" in c.disk.data
+    got = c.get_many(["cold", "cold"])
+    exp = [s.get("cold"), s.get("cold")]
+    assert got == exp == [1, 1]
+    assert _lfu_state(c) == _lfu_state(s)
+    assert c.simulated_latency_s == pytest.approx(s.simulated_latency_s,
+                                                 rel=1e-12)
+    assert c.stats["disk"].hits == 1 and c.stats["mem"].hits == 1
+
+
+@pytest.mark.parametrize("capacity", [3, 6, 1000])
+@pytest.mark.parametrize("seed", [1, 13])
+def test_query_cache_batched_equals_sequential(capacity, seed):
+    rng = np.random.default_rng(seed)
+    batched = QueryCache(capacity=capacity, window_s=10.0)
+    seq = QueryCache(capacity=capacity, window_s=10.0)
+    now = 0.0
+    for _ in range(50):
+        now += float(rng.exponential(2.0))      # some entries expire
+        n = int(rng.integers(1, 7))
+        users = [int(u) for u in rng.integers(0, 5, n)]
+        items = [int(i) for i in rng.integers(0, 8, n)]
+        if rng.random() < 0.5:
+            got_b = batched.get_many(users, items, now)
+            got_s = [seq.get(u, i, now) for u, i in zip(users, items)]
+            assert got_b == got_s
+        else:
+            scores = [float(s) for s in rng.random(n)]
+            batched.put_many(users, items, scores, now)
+            for u, i, s in zip(users, items, scores):
+                seq.put(u, i, s, now)
+        if rng.random() < 0.1:
+            u = int(rng.integers(0, 5))
+            batched.user_feedback(u)
+            seq.user_feedback(u)
+        assert _qc_state(batched) == _qc_state(seq)
+    st = batched.stats
+    assert st.hits > 0 and st.misses > 0
+    if capacity >= 1000:       # small caps LRU-evict before entries expire
+        assert st.expirations > 0
+    assert len(batched) <= capacity
+
+
+def test_query_cache_put_many_respects_admission_and_capacity():
+    """Admission predicate filters inside put_many; capacity trimming after
+    the batch evicts exactly the LRU entries a sequential loop would."""
+    admit = lambda s: s >= 0.5
+    batched = QueryCache(capacity=3, admit=admit)
+    seq = QueryCache(capacity=3, admit=admit)
+    users = [1, 2, 3, 4, 5, 6]
+    items = [10, 20, 30, 40, 50, 60]
+    scores = [0.9, 0.1, 0.8, 0.2, 0.7, 0.6]     # only 4 admitted, cap 3
+    batched.put_many(users, items, scores, now=0.0)
+    for u, i, s in zip(users, items, scores):
+        seq.put(u, i, s, now=0.0)
+    assert _qc_state(batched) == _qc_state(seq)
+    assert len(batched) == 3
+    assert batched.get_many(users, items, now=1.0) == \
+        [None, None, 0.8, None, 0.7, 0.6]

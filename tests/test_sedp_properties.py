@@ -1,0 +1,150 @@
+"""Property-based SEDP.compile() invariants (ISSUE 2 satellite).
+
+Random DAGs → the topological order respects every edge; malformed graphs
+(cycles, duplicates, unknown stages) raise GraphError; and `route` steering
+never delivers an event to a non-successor of the emitting stage.
+
+Runs under real hypothesis when installed, else the deterministic seeded
+shim in tests/_stubs (same strategy domains).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.executors import AsyncExecutor, SimExecutor
+from repro.core.sedp import SEDP, Event, GraphError, passthrough
+
+
+def _random_dag(seed: int, n_stages: int, p_edge: float = 0.5,
+                op_factory=None):
+    """Connected-ish random DAG: edges only i<j (acyclic by construction)."""
+    rng = np.random.default_rng(seed)
+    g = SEDP()
+    for i in range(n_stages):
+        op = op_factory(f"s{i}") if op_factory else passthrough
+        g.add_stage(f"s{i}", op, batch_size=int(rng.integers(1, 5)))
+    edges = []
+    for j in range(1, n_stages):
+        preds = [i for i in range(j) if rng.random() < p_edge] or [j - 1]
+        for i in preds:
+            g.add_edge(f"s{i}", f"s{j}")
+            edges.append((f"s{i}", f"s{j}"))
+    return g, edges
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 10), st.integers(0, 2**31 - 1))
+def test_topo_order_respects_every_edge(n_stages, seed):
+    g, edges = _random_dag(seed, n_stages)
+    plan = g.compile()
+    assert sorted(plan.order) == sorted(g.stages)     # a permutation
+    pos = {n: i for i, n in enumerate(plan.order)}
+    for a, b in edges:
+        assert pos[a] < pos[b], f"edge {a}->{b} violated by {plan.order}"
+    # sources have no preds, sinks no succs, and both sets are non-empty
+    assert plan.sources and plan.sinks
+    assert all(not plan.preds[s] for s in plan.sources)
+    assert all(not plan.succs[s] for s in plan.sinks)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 2**31 - 1), st.integers(0, 7))
+def test_any_back_edge_creates_cycle(n_stages, seed, back_pick):
+    g, edges = _random_dag(seed, n_stages)
+    # close a cycle along any existing forward edge
+    a, b = edges[back_pick % len(edges)]
+    if (b, a) not in g.edges:
+        g.add_edge(b, a)
+    with pytest.raises(GraphError, match="cycle"):
+        g.compile()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 2**31 - 1))
+def test_duplicates_and_unknown_stages_raise(n_stages, seed):
+    g, edges = _random_dag(seed, n_stages)
+    with pytest.raises(GraphError, match="duplicate stage"):
+        g.add_stage("s0", passthrough)
+    a, b = edges[0]
+    with pytest.raises(GraphError, match="duplicate edge"):
+        g.add_edge(a, b)
+    with pytest.raises(GraphError, match="unknown stage"):
+        g.add_edge("s0", "never_added")
+    with pytest.raises(GraphError, match="unknown stage"):
+        g.add_edge("never_added", "s0")
+    g.compile()      # the failed mutations must not have corrupted the graph
+
+
+def _no_sources_or_sinks():
+    g = SEDP()
+    g.add_stage("a", passthrough)
+    g.add_stage("b", passthrough)
+    g.add_edge("a", "b")
+    g.add_edge("b", "a")
+    return g
+
+
+def test_cycle_without_source_reports_graph_error():
+    with pytest.raises(GraphError):
+        _no_sources_or_sinks().compile()
+
+
+def _steering_ops(n_stages: int, seed: int, succs_ref: dict):
+    """Ops that record (stage, chosen_route) hops. Multi-successor stages
+    steer to a random VALID successor (the exact-steering branch);
+    single-successor stages set an adversarial route — often NOT a
+    successor — which the executor must treat as "all successors" (here:
+    the one real successor). Delivery is therefore always single-target,
+    so an event's hop trace is well-defined even though fan-out copies
+    share one payload object."""
+    rng = np.random.default_rng(seed ^ 0x5ED9)
+
+    def op_factory(name):
+        def op(batch, ctx):
+            succs = succs_ref.get(name, [])
+            for ev in batch:
+                if len(succs) > 1:
+                    route = succs[rng.integers(0, len(succs))]
+                else:
+                    route = f"s{rng.integers(0, n_stages)}"   # adversarial
+                ev.payload.setdefault("trace", []).append((name, route))
+                ev.route = route
+            return batch
+        return op
+    return op_factory
+
+
+def _check_steering(trace, plan):
+    for (a, ra), (b, _rb) in zip(trace, trace[1:]):
+        assert b in plan.succs[a], \
+            f"hop {a}->{b} is not a graph edge (succs={plan.succs[a]})"
+        if ra in plan.succs[a]:           # valid route must steer EXACTLY
+            assert b == ra, f"route {ra!r} set at {a} but delivered to {b}"
+    assert trace[-1][0] in plan.sinks
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 7), st.integers(0, 2**31 - 1), st.integers(1, 24))
+def test_route_never_delivers_to_non_successor_sim(n_stages, seed, n_events):
+    succs_ref: dict = {}
+    g, _ = _random_dag(seed, n_stages,
+                       op_factory=_steering_ops(n_stages, seed, succs_ref))
+    plan = g.compile()
+    succs_ref.update(plan.succs)
+    rep = SimExecutor(plan).run(
+        [(i * 1e-4, Event(payload={})) for i in range(n_events)])
+    assert rep.results
+    for ev in rep.results:
+        _check_steering(ev.payload["trace"], plan)
+
+
+def test_route_never_delivers_to_non_successor_async():
+    """Same steering invariant on the threaded executor."""
+    succs_ref: dict = {}
+    g, _ = _random_dag(3, 5, op_factory=_steering_ops(5, 11, succs_ref))
+    plan = g.compile()
+    succs_ref.update(plan.succs)
+    rep = AsyncExecutor(plan).run([Event(payload={}) for _ in range(32)])
+    assert len(rep.results) == 32
+    for ev in rep.results:
+        _check_steering(ev.payload["trace"], plan)
