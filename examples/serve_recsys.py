@@ -24,6 +24,8 @@ from repro.core.multitenant import TrafficSplit, make_dispatch_op
 from repro.core.sedp import SEDP, Event
 from repro.data import synthetic
 from repro.models.recsys import din, towers
+from repro.serve.bucketing import (ShapeBucketer, bucketed_candidate_rerank,
+                                   pow2_buckets, step_buckets)
 
 
 def main():
@@ -49,7 +51,16 @@ def main():
 
     retrieve_fn = jax.jit(
         lambda p, u, c: towers.retrieve(p, u, c, tt_cfg, top_k=64))
-    score_fn = jax.jit(lambda p, b: din.serve_scores(p, b, din_cfg))
+    # fused one-user-many-candidates path: the shared history is scored once
+    # per request by the kernels/rerank_score scorer (no (C, T, D) broadcast,
+    # no per-candidate history traffic); top_k = C ⇒ a full ranking back
+    rerank_fn = jax.jit(lambda p, u, c: din.score_candidates(
+        p, u, c, din_cfg, top_k=c["item_id"].shape[0]))
+    # shape buckets bound the jit cache: the shedder hands re-rank whatever
+    # candidate count survived pruning and users bring whatever history
+    # length they have — pad both to a fixed menu
+    cand_buckets = ShapeBucketer(pow2_buckets(64, min_size=16))
+    hist_buckets = ShapeBucketer(step_buckets(din_cfg.seq_len, step=8))
 
     # ----------------------------------------------------------- stages
     def op_recall(batch, ctx):
@@ -64,22 +75,11 @@ def main():
     def make_op_rerank(params, tenant):
         def op(batch, ctx):
             for ev in batch:
-                cands = ev.payload["candidates"]
-                ids = jnp.asarray([c[0] for c in cands])
-                C = len(cands)
-                b = {"user": {
-                        "fields": {k: jnp.broadcast_to(
-                            jnp.asarray(v), (C,) + np.asarray(v).shape)
-                            for k, v in ev.payload["user_fields"].items()},
-                        "hist": jnp.broadcast_to(
-                            jnp.asarray(ev.payload["hist"]),
-                            (C, len(ev.payload["hist"])))},
-                     "item": {"item_id": ids,
-                              "item_cat": jnp.zeros((C,), jnp.int32)}}
-                scores = np.asarray(score_fn(params, b))
-                order = np.argsort(-scores)[:12]
-                ev.payload["topk"] = [(int(ids[i]), float(scores[i]))
-                                      for i in order]
+                ev.payload["topk"] = bucketed_candidate_rerank(
+                    rerank_fn, params, ev.payload["hist"],
+                    ev.payload["user_fields"], ev.payload["candidates"],
+                    cand_buckets, hist_buckets,
+                    item_fields=[("item_cat", 1)], keep=12)
                 ev.payload["tenant"] = tenant
             return batch
         return op

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import os
 import tempfile
+import threading
 from dataclasses import dataclass
 from typing import Optional
 
@@ -190,11 +191,14 @@ class ParameterCube:
         # Keys are all-in-memory per the paper, so the router can resolve a
         # whole batch (sig → primary server, block, offset) with ONE
         # searchsorted; replicas are only probed for misses/dead primaries.
-        self._psigs = np.empty(0, np.uint64)
-        self._psrv = np.empty(0, np.int32)
-        self._pblk = np.empty(0, np.int32)
-        self._poff = np.empty(0, np.int32)
+        # Held as ONE (sigs, srv, blk, off) tuple swapped atomically: lookup
+        # runs concurrently from parallel SEDP stage workers, and a reader
+        # must never see sigs from one generation with srv/blk/off from
+        # another (that routes to the wrong block — silent corruption).
+        self._pindex = (np.empty(0, np.uint64), np.empty(0, np.int32),
+                        np.empty(0, np.int32), np.empty(0, np.int32))
         self._p_pending: list[tuple[np.ndarray, int, int]] = []
+        self._p_lock = threading.Lock()
 
     # ------------------------------------------------------------- build
     def load_table(self, group: int, table: np.ndarray,
@@ -221,27 +225,41 @@ class ParameterCube:
                     bid = self.servers[(sid + r) % self.n_servers].add_block(
                         blk_s, blk_v, on_disk)
                     if r == 0:
-                        self._p_pending.append((blk_s, sid, bid))
+                        # under the build lock: a concurrent index fold
+                        # iterates and clears _p_pending — an unlocked
+                        # append could be wiped before ever being folded
+                        with self._p_lock:
+                            self._p_pending.append((blk_s, sid, bid))
 
     # ------------------------------------------------------------ lookup
     def _ensure_primary_index(self):
+        """Fold pending placements into the index and return a consistent
+        (sigs, srv, blk, off) snapshot. Thread-safe: concurrent stage
+        workers serialize on the build lock; the double-check inside keeps
+        the common no-pending call lock-free-ish and cheap."""
         if not self._p_pending:
-            return
-        sigs = np.concatenate([self._psigs] + [s for s, _, _ in self._p_pending])
-        srv = np.concatenate([self._psrv] + [
-            np.full(s.size, sid, np.int32) for s, sid, _ in self._p_pending])
-        blk = np.concatenate([self._pblk] + [
-            np.full(s.size, b, np.int32) for s, _, b in self._p_pending])
-        off = np.concatenate([self._poff] + [
-            np.arange(s.size, dtype=np.int32) for s, _, _ in self._p_pending])
-        self._p_pending.clear()
-        order = np.argsort(sigs, kind="stable")
-        sigs, srv, blk, off = sigs[order], srv[order], blk[order], off[order]
-        if sigs.size > 1:
-            last = np.ones(sigs.size, bool)     # duplicate sig: last wins
-            last[:-1] = sigs[1:] != sigs[:-1]
-            sigs, srv, blk, off = sigs[last], srv[last], blk[last], off[last]
-        self._psigs, self._psrv, self._pblk, self._poff = sigs, srv, blk, off
+            return self._pindex
+        with self._p_lock:
+            if not self._p_pending:
+                return self._pindex
+            psigs, psrv, pblk, poff = self._pindex
+            sigs = np.concatenate([psigs] + [s for s, _, _ in self._p_pending])
+            srv = np.concatenate([psrv] + [
+                np.full(s.size, sid, np.int32) for s, sid, _ in self._p_pending])
+            blk = np.concatenate([pblk] + [
+                np.full(s.size, b, np.int32) for s, _, b in self._p_pending])
+            off = np.concatenate([poff] + [
+                np.arange(s.size, dtype=np.int32) for s, _, _ in self._p_pending])
+            self._p_pending.clear()
+            order = np.argsort(sigs, kind="stable")
+            sigs, srv, blk, off = sigs[order], srv[order], blk[order], off[order]
+            if sigs.size > 1:
+                last = np.ones(sigs.size, bool)     # duplicate sig: last wins
+                last[:-1] = sigs[1:] != sigs[:-1]
+                sigs, srv, blk, off = (sigs[last], srv[last], blk[last],
+                                       off[last])
+            self._pindex = (sigs, srv, blk, off)
+            return self._pindex
 
     def lookup(self, group: int, raw_ids: np.ndarray) -> np.ndarray:
         """Batched gather: (...,) raw ids → (N, dim) rows (inputs are
@@ -258,7 +276,7 @@ class ParameterCube:
         if n_req == 0:
             dim, dtype = self._shapes.get(group, (self._dim or 0, self._dtype))
             return np.empty((0, dim), dtype)
-        self._ensure_primary_index()
+        psigs, psrv, pblk, poff = self._ensure_primary_index()
         uniq, inverse = np.unique(sigs, return_inverse=True)
         nu = uniq.size
         dim, dtype = self._shapes.get(group, (self._dim or 0, self._dtype))
@@ -269,9 +287,9 @@ class ParameterCube:
         # ---- fast path: one searchsorted over the primary index
         alive = np.fromiter((s.alive for s in self.servers), bool,
                             self.n_servers)
-        pos = np.searchsorted(self._psigs, uniq)
-        np.minimum(pos, max(0, self._psigs.size - 1), out=pos)
-        found = (self._psigs[pos] == uniq) if self._psigs.size else \
+        pos = np.searchsorted(psigs, uniq)
+        np.minimum(pos, max(0, psigs.size - 1), out=pos)
+        found = (psigs[pos] == uniq) if psigs.size else \
             np.zeros(nu, bool)
         dead_primary = ~alive[primary]
         if dead_primary.any():
@@ -282,8 +300,7 @@ class ParameterCube:
         sidx = np.flatnonzero(served)
         if sidx.size:
             spos = pos[sidx]
-            gsrv, gblk, goff = (self._psrv[spos], self._pblk[spos],
-                                self._poff[spos])
+            gsrv, gblk, goff = psrv[spos], pblk[spos], poff[spos]
             # group by (server, block) with one argsort → one fancy-index
             # gather per touched block, one RPC per touched server
             comp = (gsrv.astype(np.int64) << 32) | gblk

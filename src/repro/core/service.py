@@ -25,6 +25,9 @@ from repro.core.irm.shedding import (OnlineShedder, QuotaController,
 from repro.core.query_cache import QueryCache
 from repro.core.sedp import SEDP, Event
 from repro.data import synthetic
+from repro.serve.bucketing import (ShapeBucketer, TracedJit,
+                                   bucketed_candidate_rerank, pow2_buckets,
+                                   step_buckets)
 from repro.serve.hotload import DoubleBuffer, Generation
 from repro.sparse.hashing import hash_bucket_np
 
@@ -41,6 +44,12 @@ class ServiceConfig:
     # the per-stage micro-batching window (collect batch_size or wait)
     max_queue: int = 512
     batch_wait_s: float = 0.002
+    # shape buckets for the jitted rerank stage: the micro-batcher hands it
+    # whatever batch it collected and the shedder whatever candidate set
+    # survived, so without padding every distinct (B, C, T_hist) is a fresh
+    # XLA trace. None → powers of two up to the relevant maximum.
+    rerank_buckets: Optional[tuple] = None     # batch dimension B
+    cand_buckets: Optional[tuple] = None       # per-request candidate count C
 
 
 class InferenceService:
@@ -52,8 +61,23 @@ class InferenceService:
         self.mod = REC_MODULES[self.model_cfg.model]
         params = self.mod.init(jax.random.PRNGKey(cfg.seed), self.model_cfg)
         self.buffer = DoubleBuffer(Generation(0, params))
-        self._serve = jax.jit(
+        self.rerank_buckets = ShapeBucketer(
+            cfg.rerank_buckets or pow2_buckets(cfg.batch_size))
+        self.cand_buckets = ShapeBucketer(
+            cfg.cand_buckets or pow2_buckets(64, min_size=16))
+        # step-8 history buckets (DESIGN.md §5.3): padded history rows still
+        # pay the full attention MLP, so tight T buckets beat a small menu
+        self.hist_buckets = (ShapeBucketer(
+            step_buckets(self.model_cfg.seq_len, step=8))
+            if self.model_cfg.seq_len else None)
+        self._serve = TracedJit(
             lambda p, b: self.mod.serve_scores(p, b, self.model_cfg))
+        # fused one-user-many-candidates re-rank (kernels/rerank_score via
+        # score_candidates): full ranking of each request's candidate set
+        self._rerank = (TracedJit(
+            lambda p, u, c: self.mod.score_candidates(
+                p, u, c, self.model_cfg, top_k=c["item_id"].shape[0]))
+            if hasattr(self.mod, "score_candidates") else None)
 
         vocab = self.model_cfg.item_fields[0].vocab
         self.query_cache = QueryCache(window_s=cfg.query_window_s)
@@ -103,19 +127,31 @@ class InferenceService:
             keys = [int(ev.payload["hashed"]["item_id"]) for ev in batch]
             cached = self.cube_cache.get_many(keys)
             miss = sorted({k for k, v in zip(keys, cached) if v is None})
+            fetched = {}
             if miss:
                 rows = self.cube.lookup(0, np.asarray(miss, np.int64))
                 self.cube_cache.put_many(
                     miss, [rows[i:i + 1] for i in range(len(miss))])
+                fetched = {k: rows[i] for i, k in enumerate(miss)}
+            # the gathered rows ride on the event: the rerank stage consumes
+            # cube output from the payload instead of re-touching the cube
+            for ev, k, c in zip(batch, keys, cached):
+                row = fetched[k] if c is None else c[0]
+                ev.payload["cube_rows"] = np.asarray(row, np.float32)
             return batch
 
         def op_dnn(batch, ctx):
             params = self.buffer.active.payload
-            b = self._pack_batch([ev.payload for ev in batch])
-            scores = np.asarray(self._serve(params, b))
+            B = len(batch)
+            payloads = [ev.payload for ev in batch]
+            # pad to the covering batch bucket (bounded jit-trace count);
+            # scores are per-row, so slicing [:B] discards the filler exactly
+            b = self._pack_batch(self.rerank_buckets.pad_rows(payloads))
+            scores = np.asarray(self._serve(params, b))[:B]
             now = ctx.now()
             for ev, s in zip(batch, scores):
                 ev.payload["score"] = float(s)
+                self._rerank_candidates(params, ev.payload)
             self.query_cache.put_many(
                 [ev.payload["user_id"] for ev in batch],
                 [ev.payload["item_id"] for ev in batch],
@@ -149,8 +185,6 @@ class InferenceService:
 
     def _pack_batch(self, payloads: list[dict]) -> dict:
         mc = self.model_cfg
-        B = len(payloads)
-        rng = np.random.default_rng(0)
         user_fields = {f.name: np.stack([p["user_fields"][f.name]
                                          for p in payloads])
                        for f in mc.user_fields}
@@ -158,10 +192,31 @@ class InferenceService:
                 for f in mc.item_fields}
         batch = {"user": {"fields": jax.tree.map(jnp.asarray, user_fields)},
                  "item": jax.tree.map(jnp.asarray, item)}
+        # cube output attached upstream (op_cube) becomes a model input: the
+        # item's host-tier tail features enter the packed batch here rather
+        # than being re-derived by another cube round-trip
+        if all("cube_rows" in p for p in payloads):
+            batch["item"]["cube_tail"] = jnp.asarray(
+                np.stack([p["cube_rows"] for p in payloads]))
         if mc.seq_len:
             batch["user"]["hist"] = jnp.asarray(
                 np.stack([p["hist"] for p in payloads]))
         return batch
+
+    def _rerank_candidates(self, params, payload: dict, keep: int = 12):
+        """Full re-rank of the request's surviving candidate set through the
+        fused shared-history scorer. C and the history length are padded to
+        buckets so the jit cache stays at |cand_buckets| × |hist_buckets|."""
+        mc = self.model_cfg
+        cands = payload.get("candidates")
+        if not cands or self._rerank is None or not mc.seq_len:
+            return
+        payload["topk"] = bucketed_candidate_rerank(
+            self._rerank, params, payload["hist"],
+            {f.name: payload["user_fields"][f.name] for f in mc.user_fields},
+            cands, self.cand_buckets, self.hist_buckets,
+            item_fields=[(f.name, f.bag) for f in mc.item_fields
+                         if f.name != "item_id"], keep=keep)
 
     # --------------------------------------------------------------- run
     def make_requests(self, n: int, seed: int = 0) -> list[Event]:

@@ -1,3 +1,54 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Shared kernel-dispatch policy.
+
+Every ``ops.py`` wrapper takes ``interpret: bool | None = None`` and resolves
+``None`` through :func:`default_interpret` at trace time — the Pallas
+interpreter only when no TPU backend is attached (CPU containers, CI), the
+compiled kernel on real hardware. ``REPRO_PALLAS_INTERPRET=0/1`` overrides
+both ways (e.g. force-interpret on TPU while debugging a kernel).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+_TRUTHY = ("1", "true", "True", "yes")
+
+
+def tpu_present() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:
+        return False
+
+
+def pad_axis(x, mult: int, axis: int):
+    """Zero-pad one axis up to the next multiple of ``mult`` (shared by the
+    kernel wrappers — padded rows are masked or sliced off by each op)."""
+    import jax.numpy as jnp
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+def default_interpret() -> bool:
+    """True ⇒ run Pallas kernels in interpreter mode.
+
+    Resolution happens when an op is traced; the decision is baked into that
+    trace (it is a static argument), so flipping the env var mid-process only
+    affects shapes not yet compiled.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env in _TRUTHY
+    return not tpu_present()
+
+
+def resolve_interpret(interpret) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)

@@ -6,13 +6,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.augru.kernel import augru_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_b"))
-def augru(x, att, w, u, b, interpret: bool = True, block_b: int = 8):
+def augru(x, att, w, u, b, interpret: bool | None = None, block_b: int = 8):
     """x (B,T,Din), att (B,T), GRU weights w (Din,3H) u (H,3H) b (3H,) →
-    final hidden (B,H). Pads B to block_b (padded rows: h stays 0)."""
+    final hidden (B,H). Pads B to block_b (padded rows: h stays 0).
+    ``interpret=None`` → interpreter off-TPU, compiled kernel on TPU."""
+    interpret = resolve_interpret(interpret)
     B = x.shape[0]
     pad_b = (-B) % block_b
     if pad_b:

@@ -6,14 +6,17 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.candidate_scorer.kernel import candidate_scorer_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_c", "interpret"))
 def candidate_scorer(cands, query, k: int = 8, block_c: int = 1024,
-                     interpret: bool = True):
+                     interpret: bool | None = None):
     """cands (C, D), query (D,) → exact global (top-k values, indices).
-    Exact because every block keeps its own top-k ≥ any global top-k member."""
+    Exact because every block keeps its own top-k ≥ any global top-k member.
+    ``interpret=None`` → interpreter off-TPU, compiled kernel on TPU."""
+    interpret = resolve_interpret(interpret)
     C, D = cands.shape
     pad = (-C) % block_c
     if pad:

@@ -6,26 +6,20 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import pad_axis, resolve_interpret
 from repro.kernels.din_attention.kernel import din_attention_pallas
-
-
-def _pad_to(x, mult, axis):
-    pad = (-x.shape[axis]) % mult
-    if pad == 0:
-        return x
-    cfg = [(0, 0)] * x.ndim
-    cfg[axis] = (0, pad)
-    return jnp.pad(x, cfg)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_b"))
 def din_attention(hist, mask, target, w1, b1, w2, b2, w3, b3,
-                  interpret: bool = True, block_b: int = 8):
+                  interpret: bool | None = None, block_b: int = 8):
     """Fused DIN local activation unit. Zero-pads T to 8 and B to block_b;
-    padded history rows have mask 0 → zero contribution (exact)."""
+    padded history rows have mask 0 → zero contribution (exact).
+    ``interpret=None`` → interpreter off-TPU, compiled kernel on TPU."""
+    interpret = resolve_interpret(interpret)
     B, T, D = hist.shape
-    hist_p = _pad_to(hist, 8, 1)
-    mask_p = _pad_to(mask, 8, 1)
+    hist_p = pad_axis(hist, 8, 1)
+    mask_p = pad_axis(mask, 8, 1)
     pad_b = (-B) % block_b
     if pad_b:
         hist_p = jnp.pad(hist_p, ((0, pad_b), (0, 0), (0, 0)))

@@ -6,15 +6,17 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 
 
 @functools.partial(jax.jit, static_argnames=("combiner", "interpret"))
 def embedding_bag(table, ids, weights=None, combiner: str = "sum",
-                  interpret: bool = True):
-    """Drop-in EmbeddingBag. interpret=True on CPU (container); on TPU pass
-    interpret=False for the compiled kernel."""
+                  interpret: bool | None = None):
+    """Drop-in EmbeddingBag. ``interpret=None`` → interpreter off-TPU
+    (CPU containers), compiled kernel on TPU."""
+    interpret = resolve_interpret(interpret)
     if weights is None:
         weights = jnp.ones(ids.shape, jnp.float32)
     ids = jnp.clip(ids, 0, table.shape[0] - 1).astype(jnp.int32)

@@ -6,14 +6,17 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.flash_decode.kernel import flash_decode_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_k"))
-def flash_decode(q, k_cache, v_cache, cache_len, interpret: bool = True,
+def flash_decode(q, k_cache, v_cache, cache_len, interpret: bool | None = None,
                  block_k: int = 512):
     """q (B,H,G,D) one new token per sequence; caches (B,S,H,D);
-    cache_len: valid prefix. Pads S to block_k (masked)."""
+    cache_len: valid prefix. Pads S to block_k (masked).
+    ``interpret=None`` → interpreter off-TPU, compiled kernel on TPU."""
+    interpret = resolve_interpret(interpret)
     B, S, H, D = k_cache.shape
     pad = (-S) % block_k
     if pad:

@@ -1,0 +1,1 @@
+from repro.kernels.rerank_score.ops import rerank_score  # noqa: F401

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused re-rank scorer — the broadcast-everything
+math of the pre-fusion serving path (din.attention_pool + score MLP), kept
+as the parity contract for every fused impl."""
+import jax
+import jax.numpy as jnp
+
+
+def rerank_score_ref(hist, mask, target, user_other, item_other,
+                     a1, ab1, a2, ab2, a3, ab3,
+                     m1, mb1, m2, mb2, m3, mb3):
+    """hist (T,D), mask (T,), target (C,D), user_other (d_u,),
+    item_other (C,d_i) → scores (C,). Materializes the (C,T,4D) feature
+    block exactly like the jnp serving path it replaces."""
+    C = target.shape[0]
+    T, D = hist.shape
+    h = jnp.broadcast_to(hist[None], (C, T, D))
+    t = jnp.broadcast_to(target[:, None], (C, T, D))
+    feat = jnp.concatenate([h, t, h - t, h * t], axis=-1)       # (C,T,4D)
+    x = jax.nn.silu(feat.reshape(C * T, 4 * D) @ a1 + ab1)
+    x = jax.nn.silu(x @ a2 + ab2)
+    w = (x @ a3 + ab3).reshape(C, T) * mask[None]
+    pooled = jnp.einsum("ct,td->cd", w, hist)                   # (C,D)
+    xx = jnp.concatenate(
+        [pooled, target, jnp.broadcast_to(user_other[None],
+                                          (C, user_other.shape[0])),
+         item_other], axis=-1)
+    s = jax.nn.silu(xx @ m1 + mb1)
+    s = jax.nn.silu(s @ m2 + mb2)
+    return (s @ m3 + mb3)[:, 0]

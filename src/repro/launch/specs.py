@@ -312,6 +312,12 @@ def build_rec_cell(arch, shape: ShapeSpec, mesh: Mesh) -> Cell:
     ubspec = {"fields": uspec, "hist": P(None, None)}
     if cfg.model == "mind":
         fn = lambda p, u, c: mind.retrieve(p, u, c, cfg)
+    elif cfg.model == "din":
+        # launch cells measure the MESH-SHARDED computation: pin the jnp
+        # path, which carries the ("data","model") sharding constraints —
+        # the fused Pallas path is the single-host serving fast path and
+        # has no partitioning rule
+        fn = lambda p, u, c: din.score_candidates(p, u, c, cfg, path="jnp")
     else:
         fn = lambda p, u, c: mod.score_candidates(p, u, c, cfg)
     return Cell(arch.arch_id, shape.name, fn, (params, ub, cand),

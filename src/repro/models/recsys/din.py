@@ -68,27 +68,56 @@ def serve_scores(params, batch: dict, cfg: RecsysConfig) -> jax.Array:
 
 
 def score_candidates(params, user_batch: dict, cand_ids: dict,
-                     cfg: RecsysConfig, top_k: int = 100):
+                     cfg: RecsysConfig, top_k: int = 100,
+                     path: str = "fused"):
     """Re-rank phase vs C candidates: hist computed once, attention per
-    candidate (C as batch)."""
+    candidate (C as batch).
+
+    ``path="fused"`` (the serving default) routes through the
+    ``kernels/rerank_score`` fused scorer: the shared history is NEVER
+    broadcast to (C, T, D) and the attention + score MLPs run in one pass.
+    ``path="jnp"`` is the original broadcast-everything math, kept verbatim
+    as the parity oracle (benchmarks/rerank_bench.py gates max-abs-diff
+    ≤ 1e-5 between the two) and as the path that carries the mesh sharding
+    constraints (the launch cells pin it explicitly). Callers should hand
+    ``user_batch["hist"]`` compacted/bucketed
+    (serve/bucketing.compact_history) so the fused pass scores only the
+    valid history rows. Candidate-gather dedup happens where it actually
+    saves traffic — host-side in ``ParameterCube.lookup`` (dynamic
+    ``np.unique``); under jit a static-size unique still gathers C rows,
+    so the device path gathers directly."""
     from repro import runtime
+    from repro.sparse.sharded import sharded_gather_a2a
     C = cand_ids["item_id"].shape[0]
     hist, mask = _hist_emb(params, user_batch["hist"], cfg)   # (1,T,D)
-    hist = runtime.shard(jnp.broadcast_to(hist, (C, *hist.shape[1:])),
-                         ("data", "model"), None, None)
-    mask = jnp.broadcast_to(mask, (C, mask.shape[1]))
-    from repro.sparse.sharded import sharded_gather_a2a
-    target = sharded_gather_a2a(params["tables"]["item_id"],
-                                cand_ids["item_id"])           # (C,D)
-    target = runtime.shard(target, ("data", "model"), None)
-    pooled = attention_pool(params, hist, mask, target)
-    other_u = embed_fields(params["tables"], cfg.user_fields,
-                           user_batch["fields"])               # (1, ...)
-    other_u = jnp.broadcast_to(other_u, (C, other_u.shape[-1]))
-    other_i = embed_fields(params["tables"],
-                           tuple(f for f in cfg.item_fields if f.name != "item_id"),
-                           cand_ids)
-    x = jnp.concatenate([pooled, target, other_u, other_i], axis=-1)
-    scores = mlp_tower_apply(params["mlp"], x, act="silu")[..., 0]
+    if path == "fused" and len(cfg.attn_mlp) == 2 and len(cfg.mlp) == 2:
+        target = sharded_gather_a2a(params["tables"]["item_id"],
+                                    cand_ids["item_id"])       # (C,D)
+        other_u = embed_fields(params["tables"], cfg.user_fields,
+                               user_batch["fields"])[0]        # (d_u,)
+        other_i = embed_fields(
+            params["tables"],
+            tuple(f for f in cfg.item_fields if f.name != "item_id"),
+            cand_ids)                                          # (C, d_i)
+        from repro.kernels.rerank_score import rerank_score
+        scores = rerank_score(hist[0], mask[0], target, other_u, other_i,
+                              params["attn_mlp"], params["mlp"])
+    else:
+        hist = runtime.shard(jnp.broadcast_to(hist, (C, *hist.shape[1:])),
+                             ("data", "model"), None, None)
+        mask = jnp.broadcast_to(mask, (C, mask.shape[1]))
+        target = sharded_gather_a2a(params["tables"]["item_id"],
+                                    cand_ids["item_id"])       # (C,D)
+        target = runtime.shard(target, ("data", "model"), None)
+        pooled = attention_pool(params, hist, mask, target)
+        other_u = embed_fields(params["tables"], cfg.user_fields,
+                               user_batch["fields"])           # (1, ...)
+        other_u = jnp.broadcast_to(other_u, (C, other_u.shape[-1]))
+        other_i = embed_fields(
+            params["tables"],
+            tuple(f for f in cfg.item_fields if f.name != "item_id"),
+            cand_ids)
+        x = jnp.concatenate([pooled, target, other_u, other_i], axis=-1)
+        scores = mlp_tower_apply(params["mlp"], x, act="silu")[..., 0]
     v, i = jax.lax.top_k(scores.astype(jnp.float32), top_k)
     return v, i

@@ -43,3 +43,54 @@ def test_service_hot_load_swaps_generation(service):
     report = service.run(n_requests=16)        # serves on the new generation
     assert len(report.results) == 16
     assert service.buffer.active.stamp == old_stamp + 1
+
+
+def test_cube_rows_reach_dnn_inputs(service):
+    """op_cube's gathered rows ride the event into the rerank stage: the
+    packed model batch carries the exact rows the cube (or its cache)
+    returned, and changing them changes the op_dnn inputs — the stage
+    consumes cube output instead of re-deriving it."""
+    import numpy as np
+    from repro.core.executors import AsyncExecutor
+    reqs = service.make_requests(24, seed=321)     # unseen → no qcache hits
+    report = AsyncExecutor(service.plan).run(reqs)
+    scored = [ev for ev in report.results
+              if "cube_rows" in ev.payload and "hashed" in ev.payload]
+    assert scored, "no event passed through the cube stage"
+    for ev in scored:
+        want = service.cube.lookup(
+            0, np.asarray([ev.payload["hashed"]["item_id"]], np.int64))[0]
+        np.testing.assert_array_equal(ev.payload["cube_rows"], want)
+    # the rows are part of the packed DNN input...
+    payloads = [ev.payload for ev in scored[:4]]
+    batch = service._pack_batch(payloads)
+    assert "cube_tail" in batch["item"]
+    np.testing.assert_array_equal(
+        np.asarray(batch["item"]["cube_tail"]),
+        np.stack([p["cube_rows"] for p in payloads]))
+    # ...and a different cube result produces a different op_dnn input
+    bumped = [dict(p, cube_rows=p["cube_rows"] + 1.0) for p in payloads]
+    batch2 = service._pack_batch(bumped)
+    assert not np.array_equal(np.asarray(batch2["item"]["cube_tail"]),
+                              np.asarray(batch["item"]["cube_tail"]))
+
+
+def test_service_reranks_candidates(service):
+    """The rerank stage fully re-ranks each request's surviving candidate
+    set through the fused shared-history scorer."""
+    import numpy as np
+    from repro.core.executors import AsyncExecutor
+    # fresh traffic (unseen seed): identical requests would hit the query
+    # cache warmed by earlier tests and short-circuit past the rerank stage
+    reqs = service.make_requests(24, seed=123)
+    report = AsyncExecutor(service.plan).run(reqs)
+    with_topk = [ev for ev in report.results if "topk" in ev.payload]
+    assert with_topk, "no event carried a fused re-rank result"
+    for ev in with_topk:
+        cand_ids = {c[0] for c in ev.payload["candidates"]}
+        ids = [i for i, _ in ev.payload["topk"]]
+        assert 0 < len(ids) <= 12
+        assert all(i in cand_ids for i in ids)
+        scores = [s for _, s in ev.payload["topk"]]
+        assert scores == sorted(scores, reverse=True)
+        assert all(np.isfinite(s) for s in scores)
