@@ -62,6 +62,20 @@ def main() -> None:
            derived="saving={:.1f}% (paper 73.7%)".format(
                t5["instance_saving_pct"]))
 
+    from benchmarks import update_bench
+
+    t0 = time.time()
+    g1 = update_bench.run_bit_identical(
+        vocab=8_000, rounds=4 if quick else 8, round_upserts=512,
+        round_deletes=48, compact_every=3)
+    g2 = update_bench.run_closed_loop(
+        n_events=400 if quick else 800, vocab=30_000, pairs=1 if quick else 2)
+    record("update_stream", {"gate1_bit_identical": g1,
+                             "gate2_closed_loop": g2},
+           us=(time.time() - t0) * 1e6,
+           derived="bit_identical={} p99_ratio={:.2f} (target <=1.5)".format(
+               g1["ok"], g2["p99_ratio"]))
+
     for name, us, derived in kernel_bench.bench_all():
         record(name, {"us_per_call": us}, us=us, derived=derived)
 

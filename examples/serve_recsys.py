@@ -10,8 +10,18 @@ offered back to the shedder), partial batches flush on the per-stage
 micro-batching window, and the pruning quota tracks the re-rank queue
 depth/utilization. Traffic is time-varying (diurnal ramp + bursts).
 
+A second act demonstrates the LIVE-UPDATE stage (DESIGN.md §6): a
+training-side emitter streams versioned parameter deltas into a log
+directory while the full InferenceService keeps serving — each batch is
+applied to the cube behind an atomic version bump, resident HBM-head rows
+are scattered in place, and exactly the touched cache entries drop.
+
     PYTHONPATH=src python examples/serve_recsys.py
 """
+import tempfile
+import threading
+import time
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -147,5 +157,57 @@ def main():
     print(f"sample top-3 recommendations: {top}")
 
 
+def live_update_demo():
+    """Uninterrupted serving under a continuous delta stream: the emitter
+    thread plays the training cluster, publishing a delta batch every few
+    milliseconds; the service's watcher thread applies each version while
+    AsyncExecutor workers serve traffic against the same cube."""
+    from repro.core.service import InferenceService, ServiceConfig
+    from repro.update import DeltaEmitter, GroupDelta
+
+    with tempfile.TemporaryDirectory() as td:
+        svc = InferenceService(ServiceConfig(
+            arch_id="din", batch_size=8, shed=False, live_updates=True,
+            update_dir=td, update_poll_s=0.02, head_slots=64,
+            compact_after_blocks=48))
+        vocab = svc.model_cfg.item_fields[0].vocab
+        emitter = DeltaEmitter(td)
+        rng = np.random.default_rng(3)
+        stop = threading.Event()
+
+        def emit_loop():
+            while not stop.is_set():
+                n = 32
+                emitter.emit([GroupDelta(
+                    group=0, ids=rng.integers(0, vocab, n),
+                    rows=rng.normal(0, 0.01, (n, 4)).astype(np.float32))])
+                time.sleep(0.02)
+
+        trainer = threading.Thread(target=emit_loop, daemon=True)
+        trainer.start()
+        svc.start_updates()
+        report = svc.run(n_requests=48)
+        stop.set()
+        trainer.join()
+        svc.stop_updates()
+
+        st = svc.updates.stats
+        versions = sorted({ev.payload.get("cube_version")
+                           for ev in report.results
+                           if "cube_version" in ev.payload})
+        print(f"live updates: served {len(report.results)} requests while "
+              f"{st.deltas_applied} delta batches "
+              f"({st.rows_upserted} row upserts) streamed in")
+        print(f"  cube now at version {svc.cube.version} "
+              f"({svc.cube.metrics.compactions} compactions, "
+              f"{svc.cube.metrics.blocks_freed} blocks freed); responses "
+              f"pinned versions {versions[0]}..{versions[-1]}")
+        print(f"  coherence: {st.cube_keys_invalidated} cube-cache keys + "
+              f"{st.query_entries_invalidated} query-cache entries "
+              f"invalidated, {st.head_rows_updated} HBM-head rows updated "
+              f"in place, {st.promotions} promoted")
+
+
 if __name__ == "__main__":
     main()
+    live_update_demo()

@@ -1,6 +1,6 @@
-"""The Distributed Sparse Parameter Cube (paper §5.1).
+"""The Distributed Sparse Parameter Cube (paper §5.1 + §7).
 
-A READ-ONLY distributed KV store for the sparse sub-network:
+A distributed KV store for the sparse sub-network:
   * key    — compact feature signature (universal hash; repro.sparse.hashing)
   * value  — model weights (+ feedback statistics) for that sparse feature
   * keys live purely in memory (to hide hash-probe latency); values are
@@ -17,16 +17,19 @@ probed against each server's *sorted signature index* with one
 fancy-index. Latency is accounted per *block touch* + per *server RPC*,
 not per row — batching is exactly what amortizes those costs.
 
-The legacy per-row scalar path survives behind ``use_scalar_path=True``
-(or ``lookup_scalar``) as a benchmark baseline for one release; see
-DESIGN.md §3.3 for the deprecation schedule.
-
-Host-side numpy implementation: this tier backs the >HBM tail of the model;
-the HBM-resident head is the row-sharded table (repro.sparse.sharded) — see
-DESIGN.md §2 for how the two compose on a pod.
+Streaming updates (DESIGN.md §6): the cube is MVCC-versioned. A delta
+batch (``apply_delta``) lands its upserts in fresh in-memory *overlay
+blocks* (plus tombstone index entries for deletes) and is published by an
+atomic swap of the ONE ``(version, sigs, srv, blk, off)`` snapshot tuple;
+blocks are append-only, so a reader that grabbed the snapshot at entry —
+or pinned a version with ``pin()`` — keeps reading exactly the state it
+started on while new versions publish underneath it. ``compact()`` folds
+accumulated overlays back into consolidated base blocks off the hot path;
+superseded blocks are freed only once no pinned reader can still see them.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 import tempfile
 import threading
@@ -38,6 +41,23 @@ import numpy as np
 from repro.sparse.hashing import signature_np
 
 
+def _merge_last_wins(sigs: np.ndarray, *arrays: np.ndarray):
+    """Sort parallel index arrays by signature, resolving duplicate
+    signatures to the LAST insertion — THE dedup rule for every cube index
+    (primary snapshot, per-server indexes, within-delta dedup). One
+    implementation: which copy of a duplicate wins is correctness-critical
+    and must never diverge between the folds."""
+    order = np.argsort(sigs, kind="stable")
+    sigs = sigs[order]
+    arrays = tuple(a[order] for a in arrays)
+    if sigs.size > 1:
+        last = np.ones(sigs.size, bool)
+        last[:-1] = sigs[1:] != sigs[:-1]
+        sigs = sigs[last]
+        arrays = tuple(a[last] for a in arrays)
+    return (sigs,) + arrays
+
+
 @dataclass
 class CubeMetrics:
     lookups: int = 0
@@ -45,6 +65,12 @@ class CubeMetrics:
     disk_block_hits: int = 0     # batched path: distinct disk blocks touched
     failovers: int = 0
     simulated_latency_s: float = 0.0
+    # streaming-update subsystem
+    deltas_applied: int = 0
+    rows_upserted: int = 0
+    rows_deleted: int = 0
+    compactions: int = 0
+    blocks_freed: int = 0
 
 
 class _Block:
@@ -52,9 +78,10 @@ class _Block:
 
     def __init__(self, values: np.ndarray, on_disk: bool, tmpdir: str, bid: str):
         self.on_disk = on_disk
+        self.path: Optional[str] = None
         if on_disk:
-            path = os.path.join(tmpdir, f"block_{bid}.npy")
-            mm = np.lib.format.open_memmap(path, mode="w+",
+            self.path = os.path.join(tmpdir, f"block_{bid}.npy")
+            mm = np.lib.format.open_memmap(self.path, mode="w+",
                                            dtype=values.dtype, shape=values.shape)
             mm[:] = values
             mm.flush()
@@ -66,60 +93,107 @@ class _Block:
         self.view = np.asarray(self.values)
 
 
+class _FreedBlock:
+    """Sentinel left where a compacted-away block used to be: any access is
+    a routing bug (an index referenced a block past its retire version)."""
+
+    on_disk = False
+
+    @property
+    def view(self):
+        raise RuntimeError("touched a freed (compacted) cube block — "
+                           "a reader escaped its version pin")
+
+    values = view
+
+
 class CubeServer:
     """One shard holder. The key index is three parallel arrays sorted by
-    signature — ``_sigs`` (uint64), ``_blk``/``_off`` (block id, row offset) —
-    probed with np.searchsorted; no per-key Python dict."""
+    signature — ``sigs`` (uint64), ``blk``/``off`` (block id, row offset) —
+    probed with np.searchsorted; no per-key Python dict. The index is held
+    as ONE tuple swapped atomically (readers run concurrently with delta
+    ingestion from the update thread), with a fold lock serializing merges."""
 
     def __init__(self, server_id: int, tmpdir: str):
         self.server_id = server_id
         self.tmpdir = tmpdir
-        self.blocks: list[_Block] = []
+        self.blocks: list = []       # _Block | _FreedBlock, append-only slots
         self.alive = True
-        self._sigs = np.empty(0, np.uint64)
-        self._blk = np.empty(0, np.int32)
-        self._off = np.empty(0, np.int32)
+        self._index = (np.empty(0, np.uint64), np.empty(0, np.int32),
+                       np.empty(0, np.int32))
         self._pending: list[tuple[np.ndarray, int]] = []   # ingested, unsorted
+        self._idx_lock = threading.Lock()
+        # slot ids whose blocks were reclaimed: reused by the next ingest
+        # so a perpetual delta stream + compaction cadence doesn't grow the
+        # block list (and its _FreedBlock sentinels) without bound. Safe:
+        # a slot only reaches this list once no pinned snapshot can route
+        # to it, and writers (the only add_block/reclaim callers) serialize
+        # on the cube's writer lock.
+        self.free_slots: list[int] = []
+        self._slot_seq = 0          # unique suffix for memmap filenames
 
-    def add_block(self, sigs: np.ndarray, values: np.ndarray, on_disk: bool) -> int:
-        bid = len(self.blocks)
-        # filename carries the server id — servers share a tmpdir
-        self.blocks.append(_Block(values, on_disk, self.tmpdir,
-                                  f"s{self.server_id}_{bid}"))
-        self._pending.append((np.asarray(sigs, dtype=np.uint64), bid))
+    def add_block(self, sigs: np.ndarray, values: np.ndarray, on_disk: bool,
+                  index: bool = True) -> int:
+        # filename carries the server id — servers share a tmpdir; the
+        # sequence number keeps reused slots from colliding on disk
+        self._slot_seq += 1
+        block = _Block(values, on_disk, self.tmpdir,
+                       f"s{self.server_id}_{self._slot_seq}")
+        if self.free_slots:
+            bid = self.free_slots.pop()
+            self.blocks[bid] = block
+        else:
+            bid = len(self.blocks)
+            self.blocks.append(block)
+        if index:
+            with self._idx_lock:
+                self._pending.append((np.asarray(sigs, dtype=np.uint64), bid))
         return bid
+
+    def install_index(self, sigs: np.ndarray, blk: np.ndarray,
+                      off: np.ndarray):
+        """Replace the whole index (compactor): entries must be dup-free;
+        sorts by signature and swaps atomically, dropping any pending."""
+        order = np.argsort(sigs, kind="stable")
+        with self._idx_lock:
+            self._index = (sigs[order], blk[order].astype(np.int32),
+                           off[order].astype(np.int32))
+            self._pending.clear()
 
     def _ensure_index(self):
         """Merge pending ingests into the sorted index (lazy: load_table may
-        add many blocks back-to-back; sort once at first probe)."""
+        add many blocks back-to-back; sort once at first probe). Returns one
+        consistent (sigs, blk, off) tuple."""
         if not self._pending:
-            return
-        sigs = np.concatenate([self._sigs] + [s for s, _ in self._pending])
-        blk = np.concatenate([self._blk] + [
-            np.full(s.size, b, np.int32) for s, b in self._pending])
-        off = np.concatenate([self._off] + [
-            np.arange(s.size, dtype=np.int32) for s, _ in self._pending])
-        self._pending.clear()
-        order = np.argsort(sigs, kind="stable")
-        sigs, blk, off = sigs[order], blk[order], off[order]
-        if sigs.size > 1:
-            # duplicate signature (re-ingest): last insertion wins, matching
-            # the old dict overwrite semantics
-            last = np.ones(sigs.size, bool)
-            last[:-1] = sigs[1:] != sigs[:-1]
-            sigs, blk, off = sigs[last], blk[last], off[last]
-        self._sigs, self._blk, self._off = sigs, blk, off
+            return self._index
+        with self._idx_lock:
+            if not self._pending:
+                return self._index
+            isigs, iblk, ioff = self._index
+            sigs = np.concatenate([isigs] + [s for s, _ in self._pending])
+            blk = np.concatenate([iblk] + [
+                np.full(s.size, b, np.int32) for s, b in self._pending])
+            off = np.concatenate([ioff] + [
+                np.arange(s.size, dtype=np.int32) for s, _ in self._pending])
+            # last insertion wins on duplicate signatures, so overlay rows
+            # shadow the base rows they supersede.
+            # swap BEFORE clearing: a concurrent reader's lock-free fast
+            # path is "pending empty → use _index" — clearing first would
+            # let it read the PRE-fold index for already-cleared ingests
+            self._index = _merge_last_wins(sigs, blk, off)
+            self._pending.clear()
+            return self._index
 
     # ------------------------------------------------------------ probing
     def get(self, sig: int) -> Optional[tuple[np.ndarray, bool]]:
-        """Scalar probe (legacy path + debugging)."""
-        self._ensure_index()
+        """Scalar probe (debugging)."""
+        sigs, blk_a, off_a = self._ensure_index()
         s = np.uint64(sig)
-        pos = int(np.searchsorted(self._sigs, s))
-        if pos >= self._sigs.size or self._sigs[pos] != s:
+        pos = int(np.searchsorted(sigs, s))
+        if pos >= sigs.size or sigs[pos] != s:
             return None
-        blk = self.blocks[int(self._blk[pos])]
-        return np.asarray(blk.values[int(self._off[pos])]), blk.on_disk
+        blk = self.blocks[int(blk_a[pos])]
+        return np.asarray(blk.values[int(off_a[pos])]), blk.on_disk
 
     def get_batch(self, sigs: np.ndarray
                   ) -> tuple[Optional[np.ndarray], np.ndarray, int, int]:
@@ -128,17 +202,17 @@ class CubeServer:
         of the found signatures in order (one fancy-index gather per touched
         block); touch counts are DISTINCT blocks read, for latency accounting.
         """
-        self._ensure_index()
+        isigs, iblk, ioff = self._ensure_index()
         m = sigs.size
-        if self._sigs.size == 0:
+        if isigs.size == 0:
             return None, np.zeros(m, bool), 0, 0
-        pos = np.searchsorted(self._sigs, sigs)
-        pos = np.minimum(pos, self._sigs.size - 1)
-        found = self._sigs[pos] == sigs
+        pos = np.searchsorted(isigs, sigs)
+        pos = np.minimum(pos, isigs.size - 1)
+        found = isigs[pos] == sigs
         if not found.any():
             return None, found, 0, 0
         fpos = pos[found]
-        fblk, foff = self._blk[fpos], self._off[fpos]
+        fblk, foff = iblk[fpos], ioff[fpos]
         # group rows by block with one argsort, then slice-gather per block
         order = np.argsort(fblk, kind="stable")
         sblk, soff = fblk[order], foff[order]
@@ -162,14 +236,30 @@ class CubeServer:
         return rows, found, mem_t, disk_t
 
 
+class PinnedVersion:
+    """Handle returned by ``ParameterCube.pin()``: every lookup made with it
+    sees exactly the cube state published as ``version``, regardless of
+    deltas/compactions landing concurrently."""
+
+    __slots__ = ("snap",)
+
+    def __init__(self, snap):
+        self.snap = snap
+
+    @property
+    def version(self) -> int:
+        return self.snap[0]
+
+
 class ParameterCube:
-    """Build from feature-group embedding tables; serve batched lookups."""
+    """Build from feature-group embedding tables; serve batched lookups;
+    ingest streaming delta updates with version-consistent reads."""
 
     def __init__(self, n_servers: int = 4, replication: int = 2,
                  block_rows: int = 65536, mem_block_fraction: float = 0.5,
                  mem_latency_s: float = 2e-6, disk_latency_s: float = 50e-6,
                  net_latency_s: float = 300e-6, generation: int = 0,
-                 tmpdir: Optional[str] = None, use_scalar_path: bool = False):
+                 tmpdir: Optional[str] = None):
         assert replication <= n_servers
         self.n_servers = n_servers
         self.replication = replication
@@ -181,9 +271,6 @@ class ParameterCube:
         self.tmpdir = tmpdir or tempfile.mkdtemp(prefix="cube_")
         self.servers = [CubeServer(i, self.tmpdir) for i in range(n_servers)]
         self.metrics = CubeMetrics()
-        # DEPRECATED escape hatch (one release): route lookup() through the
-        # per-row legacy path so deployments can A/B the rollout.
-        self.use_scalar_path = use_scalar_path
         self._dim: Optional[int] = None
         self._dtype = np.float32
         self._shapes: dict[int, tuple[int, np.dtype]] = {}  # per-group row shape
@@ -191,16 +278,66 @@ class ParameterCube:
         # Keys are all-in-memory per the paper, so the router can resolve a
         # whole batch (sig → primary server, block, offset) with ONE
         # searchsorted; replicas are only probed for misses/dead primaries.
-        # Held as ONE (sigs, srv, blk, off) tuple swapped atomically: lookup
-        # runs concurrently from parallel SEDP stage workers, and a reader
-        # must never see sigs from one generation with srv/blk/off from
-        # another (that routes to the wrong block — silent corruption).
-        self._pindex = (np.empty(0, np.uint64), np.empty(0, np.int32),
-                        np.empty(0, np.int32), np.empty(0, np.int32))
+        # MVCC: the index is published as ONE (version, sigs, srv, blk, off)
+        # tuple swapped atomically — a reader must never see sigs from one
+        # version with srv/blk/off from another (that routes to the wrong
+        # block — silent corruption), and a version-pinned reader must keep
+        # resolving against exactly the tuple it pinned. srv == -1 marks a
+        # TOMBSTONE (the signature was deleted by a delta).
+        self._snap = (0, np.empty(0, np.uint64), np.empty(0, np.int32),
+                      np.empty(0, np.int32), np.empty(0, np.int32))
         self._p_pending: list[tuple[np.ndarray, int, int]] = []
-        self._p_lock = threading.Lock()
+        # RLock: writers (load_table / apply_delta / compact) fold the
+        # pending list while already holding the lock
+        self._p_lock = threading.RLock()
+        # version pinning: version → count of readers inside that version.
+        # Compaction retires blocks at a version; a retired block is freed
+        # only once min(pinned) reaches its retire version.
+        self._pins: dict[int, int] = {}
+        self._pin_lock = threading.Lock()
+        self._garbage: list[tuple[int, int, int]] = []  # (retire_ver, sid, bid)
+        self.overlay_blocks = 0       # blocks added by deltas since compact()
 
     # ------------------------------------------------------------- build
+    @property
+    def version(self) -> int:
+        return self._snap[0]
+
+    def row_shape(self, group: int) -> Optional[tuple]:
+        """(dim, dtype) of a group's rows, or None if the group is unknown
+        — the update manager's pre-apply validation hook."""
+        return self._shapes.get(group)
+
+    def _place_shard(self, sid: int, s_sigs: np.ndarray, s_rows: np.ndarray,
+                     fresh_index: bool):
+        """THE single block-placement implementation (load_table and the
+        compactor must never diverge — a floor-vs-ceil mismatch here once
+        sent tail blocks to disk at mem_block_fraction=1.0): split one
+        primary shard's rows into block_rows-sized blocks, place the first
+        mem_block_fraction of them in memory and the rest on disk, and add
+        every block to the shard's ``replication`` servers. Returns
+        (primary, per_server): ``primary`` = [(blk_sigs, bid)] for the r=0
+        copies; ``per_server`` = [(server_id, blk_sigs, bid)] for EVERY
+        copy when ``fresh_index`` (the compactor builds indexes from
+        scratch; otherwise copies register in each server's pending
+        index)."""
+        n_blocks = max(1, -(-len(s_sigs) // self.block_rows))   # ceil
+        primary, per_server = [], []
+        for start in range(0, len(s_sigs), self.block_rows):
+            blk_s = s_sigs[start:start + self.block_rows]
+            blk_v = s_rows[start:start + self.block_rows]
+            on_disk = (start // self.block_rows) >= max(
+                1, int(n_blocks * self.mem_block_fraction))
+            for r in range(self.replication):
+                hsid = (sid + r) % self.n_servers
+                bid = self.servers[hsid].add_block(
+                    blk_s, blk_v, on_disk, index=not fresh_index)
+                if fresh_index:
+                    per_server.append((hsid, blk_s, bid))
+                if r == 0:
+                    primary.append((blk_s, bid))
+        return primary, per_server
+
     def load_table(self, group: int, table: np.ndarray,
                    raw_ids: Optional[np.ndarray] = None):
         """Ingest rows of one feature group. Values are the rows; keys are
@@ -212,37 +349,35 @@ class ParameterCube:
         shard = (sigs % np.uint64(self.n_servers)).astype(np.int64)
         self._dim, self._dtype = table.shape[1], table.dtype
         self._shapes[group] = (table.shape[1], table.dtype)
-        for sid in range(self.n_servers):
-            sel = shard == sid
-            s_sigs, s_rows = sigs[sel], rows[sel]
-            for start in range(0, len(s_sigs), self.block_rows):
-                blk_s = s_sigs[start:start + self.block_rows]
-                blk_v = s_rows[start:start + self.block_rows]
-                n_blocks = max(1, len(s_sigs) // self.block_rows)
-                on_disk = (start // self.block_rows) >= max(
-                    1, int(n_blocks * self.mem_block_fraction))
-                for r in range(self.replication):
-                    bid = self.servers[(sid + r) % self.n_servers].add_block(
-                        blk_s, blk_v, on_disk)
-                    if r == 0:
-                        # under the build lock: a concurrent index fold
-                        # iterates and clears _p_pending — an unlocked
-                        # append could be wiped before ever being folded
-                        with self._p_lock:
-                            self._p_pending.append((blk_s, sid, bid))
+        # the WHOLE placement runs under the writer lock: a compact()
+        # concurrent with an unlocked load would enumerate the half-placed
+        # blocks into its retire list and wipe their replica-index
+        # registrations — the folded primary index would then route to
+        # blocks the next reclaim frees. (Also: a concurrent index fold
+        # iterates and clears _p_pending — an unlocked append could be
+        # wiped before ever being folded.)
+        with self._p_lock:
+            for sid in range(self.n_servers):
+                sel = shard == sid
+                primary, _ = self._place_shard(sid, sigs[sel], rows[sel],
+                                               fresh_index=False)
+                for blk_s, bid in primary:
+                    self._p_pending.append((blk_s, sid, bid))
 
     # ------------------------------------------------------------ lookup
     def _ensure_primary_index(self):
         """Fold pending placements into the index and return a consistent
-        (sigs, srv, blk, off) snapshot. Thread-safe: concurrent stage
-        workers serialize on the build lock; the double-check inside keeps
-        the common no-pending call lock-free-ish and cheap."""
+        (version, sigs, srv, blk, off) snapshot. Thread-safe: concurrent
+        stage workers serialize on the build lock; the double-check inside
+        keeps the common no-pending call lock-free-ish and cheap. Folding
+        bumps the version: newly ingested rows become visible only at the
+        bumped snapshot, never half-way."""
         if not self._p_pending:
-            return self._pindex
+            return self._snap
         with self._p_lock:
             if not self._p_pending:
-                return self._pindex
-            psigs, psrv, pblk, poff = self._pindex
+                return self._snap
+            ver, psigs, psrv, pblk, poff = self._snap
             sigs = np.concatenate([psigs] + [s for s, _, _ in self._p_pending])
             srv = np.concatenate([psrv] + [
                 np.full(s.size, sid, np.int32) for s, sid, _ in self._p_pending])
@@ -250,33 +385,80 @@ class ParameterCube:
                 np.full(s.size, b, np.int32) for s, _, b in self._p_pending])
             off = np.concatenate([poff] + [
                 np.arange(s.size, dtype=np.int32) for s, _, _ in self._p_pending])
+            # publish BEFORE clearing pending: a concurrent reader's
+            # lock-free fast path is "pending empty → use _snap"; clearing
+            # first opens a window where it reads the PRE-fold snapshot
+            self._snap = (ver + 1,) + _merge_last_wins(sigs, srv, blk, off)
             self._p_pending.clear()
-            order = np.argsort(sigs, kind="stable")
-            sigs, srv, blk, off = sigs[order], srv[order], blk[order], off[order]
-            if sigs.size > 1:
-                last = np.ones(sigs.size, bool)     # duplicate sig: last wins
-                last[:-1] = sigs[1:] != sigs[:-1]
-                sigs, srv, blk, off = (sigs[last], srv[last], blk[last],
-                                       off[last])
-            self._pindex = (sigs, srv, blk, off)
-            return self._pindex
+            return self._snap
 
-    def lookup(self, group: int, raw_ids: np.ndarray) -> np.ndarray:
+    # ------------------------------------------------------------ pinning
+    def _pin_current(self):
+        """Atomically (snapshot read + pin registration under ONE _pin_lock
+        hold) pin the published version. Reading _snap outside the lock and
+        pinning after would race the compactor's garbage collection: it
+        could free the snapshot's blocks in the unpinned window."""
+        self._ensure_primary_index()          # fold pending placements first
+        with self._pin_lock:
+            snap = self._snap                 # publishers swap the whole tuple
+            self._pins[snap[0]] = self._pins.get(snap[0], 0) + 1
+        return snap
+
+    def _pin_release(self, ver: int):
+        # NOTE: no garbage collection here — this runs on READER threads
+        # (every lookup unpins), and freeing blocks means os.remove plus
+        # dirty-memmap flushes: filesystem latency injected straight into
+        # the serving path. Writers reclaim instead (apply_delta/compact
+        # entry), so deferred garbage is freed within one stream tick.
+        with self._pin_lock:
+            n = self._pins.get(ver, 0) - 1
+            if n <= 0:
+                self._pins.pop(ver, None)
+            else:
+                self._pins[ver] = n
+
+    @contextlib.contextmanager
+    def pin(self):
+        """Pin the currently published version for a sequence of lookups:
+        ``with cube.pin() as v: cube.lookup(g, ids, version=v)`` — every
+        lookup inside the block reads the same snapshot even while deltas
+        publish and the compactor folds overlays concurrently."""
+        snap = self._pin_current()
+        try:
+            yield PinnedVersion(snap)
+        finally:
+            self._pin_release(snap[0])
+
+    def lookup(self, group: int, raw_ids: np.ndarray,
+               version: Optional[PinnedVersion] = None) -> np.ndarray:
         """Batched gather: (...,) raw ids → (N, dim) rows (inputs are
         flattened; callers reshape). Deduplicates repeated ids before any
         server is touched and re-scatters afterwards, so a dup-heavy batch
         pays each distinct row once. The whole batch is routed with one
         probe of the cube-wide primary index; only misses and signatures on
-        dead primaries take the per-server replica path."""
-        if self.use_scalar_path:
-            return self.lookup_scalar(group, raw_ids)
+        dead primaries take the per-server replica path.
+
+        ``version``: a ``pin()`` handle — the lookup resolves against that
+        snapshot. Without one, the call pins the current version for its own
+        duration (an in-flight lookup never sees a half-published delta or
+        loses a block to the compactor mid-gather)."""
         raw = np.atleast_1d(np.asarray(raw_ids)).reshape(-1)
         sigs = signature_np(group, raw)
         n_req = sigs.size
         if n_req == 0:
             dim, dtype = self._shapes.get(group, (self._dim or 0, self._dtype))
             return np.empty((0, dim), dtype)
-        psigs, psrv, pblk, poff = self._ensure_primary_index()
+        if version is not None:
+            return self._lookup_pinned(group, sigs, version.snap)
+        snap = self._pin_current()
+        try:
+            return self._lookup_pinned(group, sigs, snap)
+        finally:
+            self._pin_release(snap[0])
+
+    def _lookup_pinned(self, group: int, sigs: np.ndarray, snap) -> np.ndarray:
+        _, psigs, psrv, pblk, poff = snap
+        n_req = sigs.size
         uniq, inverse = np.unique(sigs, return_inverse=True)
         nu = uniq.size
         dim, dtype = self._shapes.get(group, (self._dim or 0, self._dtype))
@@ -291,12 +473,16 @@ class ParameterCube:
         np.minimum(pos, max(0, psigs.size - 1), out=pos)
         found = (psigs[pos] == uniq) if psigs.size else \
             np.zeros(nu, bool)
+        # tombstones: deleted signatures are KNOWN-missing at this version —
+        # they must not fall through to the replica path (replica indexes
+        # still hold the pre-delete row)
+        tomb = found & (psrv[pos] == -1) if psigs.size else found
         dead_primary = ~alive[primary]
         if dead_primary.any():
             # failover accounted at batch granularity: every distinct
             # signature rerouted off its dead primary
             self.metrics.failovers += int(dead_primary.sum())
-        served = found & ~dead_primary
+        served = found & ~tomb & ~dead_primary
         sidx = np.flatnonzero(served)
         if sidx.size:
             spos = pos[sidx]
@@ -328,8 +514,12 @@ class ParameterCube:
             t += (len(touched_srv) * self.lat["net"]
                   + mem_t * self.lat["mem"] + disk_t * self.lat["disk"])
 
-        # ---- slow path: replica probing for misses / dead primaries
-        pending = np.flatnonzero(~served)
+        # ---- slow path: replica probing for misses / dead primaries.
+        # NOTE (DESIGN.md §6.2): per-server indexes are NOT versioned — a
+        # pinned reader that fails over reads the replica's LATEST row for
+        # the signature (freshness relaxation under faults), never a torn or
+        # freed one (blocks are append-only until unpinned).
+        pending = np.flatnonzero(~served & ~tomb)
         for r in range(1, self.replication):
             if pending.size == 0:
                 break
@@ -361,41 +551,270 @@ class ParameterCube:
         if pending.size:
             raise KeyError(
                 f"signature {uniq[pending[0]]} unavailable (group {group})")
+        if tomb.any():
+            raise KeyError(
+                f"signature {uniq[np.flatnonzero(tomb)[0]]} deleted "
+                f"(group {group})")
         self.metrics.lookups += n_req
         self.metrics.simulated_latency_s += t
         return rows[inverse]
 
-    def lookup_scalar(self, group: int, raw_ids: np.ndarray) -> np.ndarray:
-        """DEPRECATED legacy per-row path (per-row latency accounting, no
-        dedup). Kept one release as the benchmark baseline — see DESIGN.md."""
-        sigs = signature_np(group, np.asarray(raw_ids))
-        out = []
-        t = 0.0
-        for s in np.atleast_1d(sigs).reshape(-1):
-            primary = int(s % np.uint64(self.n_servers))
-            row = None
-            for r in range(self.replication):
-                srv = self.servers[(primary + r) % self.n_servers]
-                if not srv.alive:
-                    if r == 0:
-                        self.metrics.failovers += 1
-                    continue
-                got = srv.get(int(s))
-                if got is not None:
-                    row, on_disk = got
-                    t += self.lat["net"] / 64 + (
-                        self.lat["disk"] if on_disk else self.lat["mem"])
-                    if on_disk:
-                        self.metrics.disk_block_hits += 1
-                    else:
-                        self.metrics.mem_block_hits += 1
-                    break
-            if row is None:
-                raise KeyError(f"signature {s} unavailable (group {group})")
-            out.append(row)
-        self.metrics.lookups += len(out)
-        self.metrics.simulated_latency_s += t
-        return np.stack(out)
+    def contains(self, group: int, raw_ids: np.ndarray,
+                 version: Optional[PinnedVersion] = None) -> np.ndarray:
+        """Vectorized membership against the primary index (tombstones count
+        as absent). Used by update tooling to split upserts from inserts."""
+        raw = np.atleast_1d(np.asarray(raw_ids)).reshape(-1)
+        sigs = signature_np(group, raw)
+        snap = version.snap if version is not None \
+            else self._ensure_primary_index()
+        _, psigs, psrv, _, _ = snap
+        if psigs.size == 0:
+            return np.zeros(sigs.size, bool)
+        pos = np.searchsorted(psigs, sigs)
+        np.minimum(pos, psigs.size - 1, out=pos)
+        return (psigs[pos] == sigs) & (psrv[pos] != -1)
+
+    # ---------------------------------------------------- streaming deltas
+    def apply_delta(self, group: int, raw_ids: Optional[np.ndarray] = None,
+                    rows: Optional[np.ndarray] = None,
+                    delete_ids: Optional[np.ndarray] = None) -> int:
+        """Apply one delta batch for one feature group and publish it with an
+        atomic version bump. Upserts land in fresh in-memory overlay blocks
+        (replicated like base blocks); deletes become tombstone entries in
+        the primary index. Within one batch, deletes apply AFTER upserts.
+        Returns the newly published version. In-flight/pinned readers keep
+        the snapshot they started on — nothing is mutated in place."""
+        with self._p_lock:
+            self.reclaim()          # writer-side: free drained-pin garbage
+            snap = self._ensure_primary_index()
+            ver, psigs, psrv, pblk, poff = snap
+            add_sigs: list[np.ndarray] = []
+            add_srv: list[np.ndarray] = []
+            add_blk: list[np.ndarray] = []
+            add_off: list[np.ndarray] = []
+            n_up = n_del = 0
+            if raw_ids is not None and np.asarray(raw_ids).size:
+                ids = np.atleast_1d(np.asarray(raw_ids)).reshape(-1)
+                vals = np.asarray(rows)
+                if vals.ndim != 2 or vals.shape[0] != ids.size:
+                    raise ValueError(
+                        f"rows shape {vals.shape} does not match "
+                        f"{ids.size} upsert ids")
+                dim, dtype = self._shapes.get(
+                    group, (vals.shape[1], vals.dtype))
+                if vals.shape[1] != dim:
+                    raise ValueError(
+                        f"group {group} rows are dim {dim}, delta has "
+                        f"{vals.shape[1]}")
+                self._shapes[group] = (dim, dtype)
+                if self._dim is None:
+                    self._dim, self._dtype = dim, dtype
+                vals = vals.astype(dtype, copy=False)
+                sigs = signature_np(group, ids)
+                shard = (sigs % np.uint64(self.n_servers)).astype(np.int64)
+                order = np.argsort(shard, kind="stable")
+                sigs, vals, shard = sigs[order], vals[order], shard[order]
+                bounds = np.searchsorted(shard, np.arange(self.n_servers + 1))
+                for sid in range(self.n_servers):
+                    lo, hi = bounds[sid], bounds[sid + 1]
+                    if lo == hi:
+                        continue
+                    s_sigs, s_rows = sigs[lo:hi], vals[lo:hi]
+                    # overlay blocks are memory-resident: fresh rows are hot
+                    for r in range(self.replication):
+                        bid = self.servers[(sid + r) % self.n_servers] \
+                            .add_block(s_sigs, s_rows, on_disk=False)
+                        if r == 0:
+                            add_sigs.append(s_sigs)
+                            add_srv.append(np.full(s_sigs.size, sid, np.int32))
+                            add_blk.append(np.full(s_sigs.size, bid, np.int32))
+                            add_off.append(
+                                np.arange(s_sigs.size, dtype=np.int32))
+                    self.overlay_blocks += self.replication
+                n_up = ids.size
+            if delete_ids is not None and np.asarray(delete_ids).size:
+                dels = np.atleast_1d(np.asarray(delete_ids)).reshape(-1)
+                d_sigs = signature_np(group, dels)
+                add_sigs.append(d_sigs)
+                add_srv.append(np.full(d_sigs.size, -1, np.int32))
+                add_blk.append(np.full(d_sigs.size, -1, np.int32))
+                add_off.append(np.full(d_sigs.size, -1, np.int32))
+                n_del = dels.size
+            if not add_sigs:                       # empty delta: still a bump
+                self._snap = (ver + 1, psigs, psrv, pblk, poff)
+                self.metrics.deltas_applied += 1
+                return ver + 1
+            dsigs = np.concatenate(add_sigs)
+            dsrv = np.concatenate(add_srv)
+            dblk = np.concatenate(add_blk)
+            doff = np.concatenate(add_off)
+            # last-wins dedup WITHIN the delta (upserts precede tombstones)
+            dsigs, dsrv, dblk, doff = _merge_last_wins(
+                dsigs, dsrv, dblk, doff)
+            # STREAMING merge into the sorted base: a delta touches a tiny
+            # slice of a huge index, so never re-sort the whole thing —
+            # copy the base (readers share the old arrays; MVCC forbids
+            # in-place), overwrite matched positions, np.insert the rest:
+            # O(base memcpy + delta log delta) vs O(base log base)
+            if psigs.size:
+                pos = np.searchsorted(psigs, dsigs)
+                posc = np.minimum(pos, psigs.size - 1)
+                match = psigs[posc] == dsigs
+                nsigs, nsrv = psigs.copy(), psrv.copy()
+                nblk, noff = pblk.copy(), poff.copy()
+                if match.any():
+                    mp = posc[match]
+                    nsrv[mp], nblk[mp], noff[mp] = \
+                        dsrv[match], dblk[match], doff[match]
+                if not match.all():
+                    ins, m = pos[~match], ~match
+                    nsigs = np.insert(nsigs, ins, dsigs[m])
+                    nsrv = np.insert(nsrv, ins, dsrv[m])
+                    nblk = np.insert(nblk, ins, dblk[m])
+                    noff = np.insert(noff, ins, doff[m])
+            else:
+                nsigs, nsrv, nblk, noff = dsigs, dsrv, dblk, doff
+            self._snap = (ver + 1, nsigs, nsrv, nblk, noff)
+            self.metrics.deltas_applied += 1
+            self.metrics.rows_upserted += n_up
+            self.metrics.rows_deleted += n_del
+            return ver + 1
+
+    # ---------------------------------------------------------- compaction
+    def compact(self) -> int:
+        """Fold overlay blocks (and tombstones) back into consolidated base
+        blocks, off the hot path: gather every live row from the current
+        snapshot, redistribute into fresh block_rows-sized blocks with the
+        same placement policy as load_table, install fresh per-server
+        indexes, and publish with a version bump. Every pre-compaction block
+        is retired; its storage is freed once no reader pins an older
+        version. Returns the published version."""
+        with self._p_lock:
+            snap = self._ensure_primary_index()
+            ver, psigs, psrv, pblk, poff = snap
+            new_ver = ver + 1
+            live = psrv >= 0
+            lsigs, lsrv = psigs[live], psrv[live]
+            lblk, loff = pblk[live], poff[live]
+            # group live entries by source block, gather once per block, and
+            # bucket rows into (dim, dtype) families — block shapes differ
+            # across feature groups and a consolidated block is single-family
+            families: dict[tuple, list] = {}
+            comp = (lsrv.astype(np.int64) << 32) | lblk
+            order = np.argsort(comp, kind="stable")
+            scomp, soff, ssigs = comp[order], loff[order], lsigs[order]
+            # zero live entries (fresh cube / everything tombstoned):
+            # starts collapses to a single bound so the gather loop runs
+            # zero times and the cube compacts to empty instead of
+            # indexing into an empty array
+            starts = np.concatenate(
+                ([0], np.flatnonzero(scomp[1:] != scomp[:-1]) + 1,
+                 [scomp.size])) if scomp.size else np.array([0])
+            for lo, hi in zip(starts[:-1], starts[1:]):
+                c = int(scomp[lo])
+                block = self.servers[c >> 32].blocks[c & 0xFFFFFFFF]
+                fam = (block.view.shape[1], block.view.dtype)
+                families.setdefault(fam, []).append(
+                    (ssigs[lo:hi], block.view[soff[lo:hi]]))
+            # retire EVERY current block slot (old base + overlays) — except
+            # slots a previous compact already queued while a pin held them:
+            # re-adding those would double-free and double-count blocks_freed
+            with self._pin_lock:
+                already = {(s, b) for _, s, b in self._garbage}
+            retired = [(sid, bid)
+                       for sid, srv_ in enumerate(self.servers)
+                       for bid, b in enumerate(srv_.blocks)
+                       if isinstance(b, _Block) and (sid, bid) not in already]
+            new_entries: list[tuple[np.ndarray, int, int]] = []
+            per_server: dict[int, list] = {s: [] for s in range(self.n_servers)}
+            for (dim, dtype), parts in families.items():
+                fsigs = np.concatenate([p[0] for p in parts])
+                frows = np.concatenate([p[1] for p in parts])
+                shard = (fsigs % np.uint64(self.n_servers)).astype(np.int64)
+                order = np.argsort(shard, kind="stable")
+                fsigs, frows, shard = fsigs[order], frows[order], shard[order]
+                bounds = np.searchsorted(shard,
+                                         np.arange(self.n_servers + 1))
+                for sid in range(self.n_servers):
+                    lo, hi = bounds[sid], bounds[sid + 1]
+                    if lo == hi:
+                        continue
+                    primary, per_srv = self._place_shard(
+                        sid, fsigs[lo:hi], frows[lo:hi], fresh_index=True)
+                    for blk_s, bid in primary:
+                        new_entries.append((blk_s, sid, bid))
+                    for hsid, blk_s, bid in per_srv:
+                        per_server[hsid].append(
+                            (blk_s, np.full(blk_s.size, bid, np.int32),
+                             np.arange(blk_s.size, dtype=np.int32)))
+            # install fresh per-server indexes referencing ONLY new blocks —
+            # no stale entry can ever route a replica probe to a freed block
+            for sid, parts in per_server.items():
+                if parts:
+                    self.servers[sid].install_index(
+                        np.concatenate([p[0] for p in parts]),
+                        np.concatenate([p[1] for p in parts]),
+                        np.concatenate([p[2] for p in parts]))
+                else:
+                    self.servers[sid].install_index(
+                        np.empty(0, np.uint64), np.empty(0, np.int32),
+                        np.empty(0, np.int32))
+            if new_entries:
+                nsigs = np.concatenate([s for s, _, _ in new_entries])
+                nsrv = np.concatenate([
+                    np.full(s.size, sid, np.int32)
+                    for s, sid, _ in new_entries])
+                nblk = np.concatenate([
+                    np.full(s.size, b, np.int32) for s, _, b in new_entries])
+                noff = np.concatenate([
+                    np.arange(s.size, dtype=np.int32)
+                    for s, _, _ in new_entries])
+                self._snap = (new_ver,) + _merge_last_wins(
+                    nsigs, nsrv, nblk, noff)
+            else:
+                self._snap = (new_ver, np.empty(0, np.uint64),
+                              np.empty(0, np.int32), np.empty(0, np.int32),
+                              np.empty(0, np.int32))
+            with self._pin_lock:
+                self._garbage.extend(
+                    (new_ver, sid, bid) for sid, bid in retired)
+            self.overlay_blocks = 0
+            self.metrics.compactions += 1
+            # reclaim under the writer lock (RLock): slot reuse must not
+            # race a concurrent writer's add_block
+            self.reclaim()
+        return new_ver
+
+    def reclaim(self):
+        """Free retired blocks no pinned reader can still reference: a block
+        retired at version v is reachable only through snapshots < v, so it
+        frees once every active pin is ≥ v. Called from writer paths (and
+        available to maintenance loops) — never from readers, whose unpin
+        must stay free of filesystem work."""
+        freed = []
+        with self._pin_lock:
+            if not self._garbage:
+                return
+            min_pinned = min(self._pins) if self._pins else self._snap[0]
+            keep = []
+            for retire_ver, sid, bid in self._garbage:
+                if min_pinned >= retire_ver:
+                    freed.append((sid, bid))
+                else:
+                    keep.append((retire_ver, sid, bid))
+            self._garbage = keep
+        for sid, bid in freed:
+            block = self.servers[sid].blocks[bid]
+            if not isinstance(block, _Block):
+                continue                      # defensively skip double-frees
+            self.servers[sid].blocks[bid] = _FreedBlock()
+            self.servers[sid].free_slots.append(bid)
+            if getattr(block, "path", None):
+                try:
+                    os.remove(block.path)
+                except OSError:
+                    pass
+            self.metrics.blocks_freed += 1
 
     # ----------------------------------------------------- fault injection
     def kill_server(self, sid: int):

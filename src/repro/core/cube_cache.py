@@ -8,6 +8,13 @@
 The paper reports ~84% hit ratio, avoiding up to 90% of remote accesses →
 ~10% average latency reduction. benchmarks/fig8 reproduces this on Zipf
 traffic.
+
+Cache coherence with the streaming-update subsystem (DESIGN.md §6): every
+entry is stamped with the cache ``version`` current at insert. A delta that
+touches a set of signatures calls ``invalidate_keys`` (targeted — exactly
+the touched keys drop, LFU statistics persist); a whole-generation hot swap
+calls ``bump_generation`` (lazy — the floor rises and stale entries fall
+out on their next probe, no O(capacity) sweep).
 """
 from __future__ import annotations
 
@@ -67,7 +74,10 @@ class _LFU:
 
 class TwoTierLFUCache:
     """get() probes memory → disk (promoting on disk hit); put() inserts to
-    memory, demoting memory evictions to the disk tier."""
+    memory, demoting memory evictions to the disk tier. Values are stored
+    internally as ``(version, value)`` — the version stamp is how a model
+    generation swap invalidates the whole cache lazily while a delta batch
+    invalidates exactly the keys it touched."""
 
     def __init__(self, mem_capacity: int, disk_capacity: int,
                  mem_latency_s: float = 1e-6, disk_latency_s: float = 40e-6):
@@ -76,27 +86,68 @@ class TwoTierLFUCache:
         self.stats = {"mem": TierStats(), "disk": TierStats()}
         self.lat = {"mem": mem_latency_s, "disk": disk_latency_s}
         self.simulated_latency_s = 0.0
+        self.version = 0           # stamp applied to inserts
+        self._min_valid = 0        # entries stamped below this are stale
+        self.invalidations = 0     # entries dropped by coherence events
+        # bumped by every coherence event: the disk→mem promote checks it
+        # so a hit that RACED an invalidation is not re-inserted (the
+        # transient read is fine — equivalent to reading just before the
+        # delta — but a resurrected entry would serve stale rows forever)
+        self._inval_epoch = 0
 
+    # ------------------------------------------------------- invalidation
+    def invalidate_keys(self, keys) -> int:
+        """Targeted coherence: drop exactly these keys from both tiers (a
+        delta just rewrote their cube rows). LFU counts persist — the key's
+        popularity did not change, only its value did. Returns drops."""
+        self._inval_epoch += 1
+        n = 0
+        for key in keys:
+            if self.mem.data.pop(key, None) is not None:
+                n += 1
+            if self.disk.data.pop(key, None) is not None:
+                n += 1
+        self.invalidations += n
+        return n
+
+    def bump_generation(self):
+        """Whole-generation coherence (hot swap): raise the validity floor;
+        every pre-bump entry becomes a miss on its next probe and is dropped
+        then — O(1) now, no sweep over capacity."""
+        self._inval_epoch += 1
+        self.version += 1
+        self._min_valid = self.version
+
+    def _fresh(self, tier: _LFU, key, entry) -> bool:
+        if entry[0] >= self._min_valid:
+            return True
+        tier.data.pop(key, None)          # lazily drop the stale entry
+        self.invalidations += 1
+        return False
+
+    # ------------------------------------------------------------- access
     def get(self, key) -> Optional[Any]:
         v = self.mem.get(key)
-        if v is not None:
+        if v is not None and self._fresh(self.mem, key, v):
             self.stats["mem"].hits += 1
             self.simulated_latency_s += self.lat["mem"]
-            return v
+            return v[1]
         self.stats["mem"].misses += 1
+        epoch = self._inval_epoch
         v = self.disk.get(key)
-        if v is not None:
+        if v is not None and self._fresh(self.disk, key, v):
             self.stats["disk"].hits += 1
             self.simulated_latency_s += self.lat["disk"]
-            dem = self.mem.put(key, v)          # promote
-            if dem is not None:
-                self.disk.put(*dem)
-            return v
+            if self._inval_epoch == epoch:      # no invalidation raced us
+                dem = self.mem.put(key, v)      # promote (stamp rides along)
+                if dem is not None:
+                    self.disk.put(*dem)
+            return v[1]
         self.stats["disk"].misses += 1
         return None
 
     def put(self, key, value):
-        dem = self.mem.put(key, value)
+        dem = self.mem.put(key, (self.version, value))
         if dem is not None:
             self.disk.put(*dem)
 
@@ -110,27 +161,31 @@ class TwoTierLFUCache:
         aligned with ``keys`` (None per miss)."""
         mem_get, disk_get = self.mem.get, self.disk.get
         mem_put, disk_put = self.mem.put, self.disk.put
+        fresh = self._fresh
         out = []
         mem_hits = mem_misses = disk_hits = disk_misses = 0
         lat = 0.0
         for key in keys:
             v = mem_get(key)
-            if v is not None:
+            if v is not None and fresh(self.mem, key, v):
                 mem_hits += 1
                 lat += self.lat["mem"]
-                out.append(v)
+                out.append(v[1])
                 continue
             mem_misses += 1
+            epoch = self._inval_epoch
             v = disk_get(key)
-            if v is not None:
+            if v is not None and fresh(self.disk, key, v):
                 disk_hits += 1
                 lat += self.lat["disk"]
-                dem = mem_put(key, v)               # promote
-                if dem is not None:
-                    disk_put(*dem)
+                if self._inval_epoch == epoch:      # no raced invalidation
+                    dem = mem_put(key, v)           # promote
+                    if dem is not None:
+                        disk_put(*dem)
+                out.append(v[1])
             else:
                 disk_misses += 1
-            out.append(v)
+                out.append(None)
         self.stats["mem"].hits += mem_hits
         self.stats["mem"].misses += mem_misses
         self.stats["disk"].hits += disk_hits
@@ -142,8 +197,9 @@ class TwoTierLFUCache:
         """Vectorized multi-put: memory-tier inserts with demotions flushed
         to the disk tier, one pass for the whole batch."""
         mem_put, disk_put = self.mem.put, self.disk.put
+        ver = self.version
         for key, value in zip(keys, values):
-            dem = mem_put(key, value)
+            dem = mem_put(key, (ver, value))
             if dem is not None:
                 disk_put(*dem)
 

@@ -30,6 +30,8 @@ from repro.serve.bucketing import (ShapeBucketer, TracedJit,
                                    step_buckets)
 from repro.serve.hotload import DoubleBuffer, Generation
 from repro.sparse.hashing import hash_bucket_np
+from repro.update import (DeltaWatcher, HBMHead, PromoteDemotePolicy,
+                          UpdateManager)
 
 
 @dataclass
@@ -50,6 +52,34 @@ class ServiceConfig:
     # XLA trace. None → powers of two up to the relevant maximum.
     rerank_buckets: Optional[tuple] = None     # batch dimension B
     cand_buckets: Optional[tuple] = None       # per-request candidate count C
+    # live-update stage (DESIGN.md §6): tail a delta log and apply versioned
+    # parameter deltas to the cube/caches/head while traffic flows
+    live_updates: bool = False
+    update_dir: Optional[str] = None
+    update_poll_s: float = 0.1
+    compact_after_blocks: int = 64
+    head_slots: int = 0            # >0 → HBM head tier for promoted hot rows
+
+
+class _ServiceDeltaWatcher(DeltaWatcher):
+    """The service's live-update stage: tail the delta log, apply through
+    the UpdateManager, then run the off-hot-path maintenance a fresh batch
+    warrants — overlay compaction and the promote/demote pass."""
+
+    def __init__(self, svc: "InferenceService", **kw):
+        # the service is its delta log's only consumer → prune applied
+        # deltas so the log directory (and each poll's scan) stays bounded
+        kw.setdefault("prune_applied", True)
+        super().__init__(svc.cfg.update_dir, svc.updates.apply, **kw)
+        self._svc = svc
+
+    def check_once(self) -> bool:
+        applied = super().check_once()
+        if applied:
+            self._svc.updates.maybe_compact()
+            if self._svc.updates.head is not None:
+                self._svc.updates.rebalance(0)
+        return applied
 
 
 class InferenceService:
@@ -88,6 +118,29 @@ class InferenceService:
         for g, field in enumerate(self.model_cfg.item_fields):
             self.cube.load_table(g, rng.normal(
                 0, 0.01, (field.vocab, 4)).astype(np.float32))
+        # streaming-update subsystem: one manager keeps the cube, both
+        # caches and the optional HBM head coherent per delta batch, and a
+        # generation swap bumps the caches' model version — previously a
+        # hot swap kept serving the OLD generation's scores out of the
+        # query cache for up to its TTL window (DESIGN.md §6.4)
+        head = (HBMHead(cfg.head_slots, dim=4) if cfg.head_slots else None)
+        # the cube is keyed by HASHED item ids while the query cache scores
+        # RAW item ids — op_features records the bucket → raw-items reverse
+        # map so a delta invalidates exactly the raw items whose rows it
+        # touched (a hash collision over-invalidates a sibling: safe)
+        self._bucket_items: dict[int, set] = {}
+        self.updates = UpdateManager(
+            self.cube, cube_cache=self.cube_cache,
+            query_cache=self.query_cache, head=head,
+            policy=(PromoteDemotePolicy(capacity=cfg.head_slots)
+                    if head else None),
+            qcache_items_fn=self._items_for_buckets,
+            compact_after_blocks=cfg.compact_after_blocks)
+        self.buffer.on_swap.append(self.updates.on_generation_swap)
+        self.update_watcher = None
+        if cfg.live_updates and cfg.update_dir:
+            self.update_watcher = _ServiceDeltaWatcher(
+                self, poll_s=cfg.update_poll_s)
         self.shedder = None
         if cfg.shed:
             dnn, _ = train_pruning_dnn(n_samples=800, seed=cfg.seed)
@@ -119,29 +172,86 @@ class InferenceService:
             items = np.fromiter((ev.payload["item_id"] for ev in batch),
                                 np.int64, len(batch))
             hashed = hash_bucket_np(0, items, mc.item_fields[0].vocab)
-            for ev, h in zip(batch, hashed):
+            bucket_items = self._bucket_items
+            for ev, h, item in zip(batch, hashed, items):
                 ev.payload["hashed"] = {"item_id": h}
+                # reverse map for targeted query-cache invalidation (GIL-
+                # atomic set/dict ops; bounded by vocab × items-per-bucket)
+                bucket_items.setdefault(int(h), set()).add(int(item))
             return batch
 
         def op_cube(batch, ctx):
             keys = [int(ev.payload["hashed"]["item_id"]) for ev in batch]
-            cached = self.cube_cache.get_many(keys)
-            miss = sorted({k for k, v in zip(keys, cached) if v is None})
             fetched = {}
-            if miss:
-                rows = self.cube.lookup(0, np.asarray(miss, np.int64))
-                self.cube_cache.put_many(
-                    miss, [rows[i:i + 1] for i in range(len(miss))])
-                fetched = {k: rows[i] for i, k in enumerate(miss)}
-            # the gathered rows ride on the event: the rerank stage consumes
-            # cube output from the payload instead of re-touching the cube
-            for ev, k, c in zip(batch, keys, cached):
-                row = fetched[k] if c is None else c[0]
-                ev.payload["cube_rows"] = np.asarray(row, np.float32)
+            # version-pinned resolve: cache probe AND misses happen under
+            # ONE pinned cube version, stamped on each event — probing the
+            # cache before pinning would let a pre-delta cached row ride
+            # out stamped with the post-delta version, sneaking past both
+            # cache-aside guards
+            with self.cube.pin() as pv:
+                cached = self.cube_cache.get_many(keys)
+                miss = sorted({k for k, v in zip(keys, cached) if v is None})
+                if miss:
+                    pending = np.asarray(miss, np.int64)
+                    head = self.updates.head
+                    if head is not None and head.resident_count:
+                        # HBM head tier first: promoted hot rows skip the
+                        # host cube entirely (freshness: the head is
+                        # updated in place at delta-apply, DESIGN.md §6.3)
+                        hrows, hfound = head.lookup(0, pending)
+                        for k, r, f in zip(pending.tolist(), hrows, hfound):
+                            if f:
+                                fetched[int(k)] = r
+                        pending = pending[~hfound]
+                    if pending.size:
+                        # delta deletes leave tombstones: a deleted row is
+                        # a legitimate serving state (the feature fell out
+                        # of the model), served as the zero/default row —
+                        # NOT a KeyError that would kill the stage worker
+                        live = self.cube.contains(0, pending, version=pv)
+                        if not live.all():
+                            dim = (self.cube.row_shape(0) or (4,))[0]
+                            zero = np.zeros(dim, np.float32)
+                            for k in pending[~live].tolist():
+                                fetched[int(k)] = zero
+                            pending = pending[live]
+                    if pending.size:
+                        rows = self.cube.lookup(0, pending, version=pv)
+                        for i, k in enumerate(pending.tolist()):
+                            fetched[int(k)] = rows[i]
+                    self.cube_cache.put_many(
+                        list(fetched), [fetched[k][None] for k in fetched])
+                    # close the cache-aside race: a delta may have published
+                    # (and run its targeted invalidation) between our pinned
+                    # fetch and the insert above, which would resurrect
+                    # pre-delta rows as fresh entries. Drop our own inserts
+                    # for exactly the keys deltas touched since the pin
+                    # (batch-wide dropping would fire on nearly every batch
+                    # under a continuous stream); the touched-key log going
+                    # cold forces the conservative full drop.
+                    if self.cube.version != pv.version:
+                        touched = self.updates.touched_since(pv.version)
+                        drop = (list(fetched) if touched is None else
+                                [k for k in fetched if k in touched[0]])
+                        if drop:
+                            self.cube_cache.invalidate_keys(drop)
+                # the gathered rows ride on the event: the rerank stage
+                # consumes cube output from the payload instead of
+                # re-touching the cube
+                for ev, k, c in zip(batch, keys, cached):
+                    row = fetched[k] if c is None else c[0]
+                    ev.payload["cube_rows"] = np.asarray(row, np.float32)
+                    ev.payload["cube_version"] = pv.version
             return batch
 
         def op_dnn(batch, ctx):
-            params = self.buffer.active.payload
+            # capture the query-cache model version BEFORE binding the
+            # generation: scores are stamped with qv at insert, so a hot
+            # swap racing this batch can only over-invalidate (fresh scores
+            # stamped pre-bump), never mark old-generation scores as fresh
+            qv = self.query_cache.model_version
+            gen = self.buffer.active       # ONE generation for the batch
+            params = gen.payload
             B = len(batch)
             payloads = [ev.payload for ev in batch]
             # pad to the covering batch bucket (bounded jit-trace count);
@@ -151,11 +261,30 @@ class InferenceService:
             now = ctx.now()
             for ev, s in zip(batch, scores):
                 ev.payload["score"] = float(s)
+                ev.payload["generation"] = gen.stamp
                 self._rerank_candidates(params, ev.payload)
             self.query_cache.put_many(
                 [ev.payload["user_id"] for ev in batch],
                 [ev.payload["item_id"] for ev in batch],
-                [float(s) for s in scores], now)
+                [float(s) for s in scores], now, version=qv)
+            # close the delta-side cache-aside race (the query-cache twin of
+            # op_cube's guard): these scores embed cube rows fetched at the
+            # events' pinned versions — if a delta published since, its
+            # invalidate_items may have run BEFORE our insert, resurrecting
+            # a stale score. Drop exactly the batch items deltas actually
+            # touched since the earliest pin (the pipeline latency between
+            # cube fetch and score insert usually spans a delta interval
+            # under a continuous stream, so a batch-wide drop would gut the
+            # cache); a cold touched-key log forces the conservative drop.
+            vmin = min((ev.payload.get("cube_version", 0) for ev in batch),
+                       default=0)
+            if self.cube.version != vmin:
+                items = {ev.payload["item_id"] for ev in batch}
+                touched = self.updates.touched_since(vmin)
+                if touched is not None:
+                    items &= touched[1]
+                if items:
+                    self.query_cache.invalidate_items(items)
             return batch
 
         kw = dict(max_queue=self.cfg.max_queue,
@@ -217,6 +346,30 @@ class InferenceService:
             cands, self.cand_buckets, self.hist_buckets,
             item_fields=[(f.name, f.bag) for f in mc.item_fields
                          if f.name != "item_id"], keep=keep)
+
+    # ------------------------------------------------------- live updates
+    def _items_for_buckets(self, group: int, hashed_ids) -> list:
+        """Raw item ids whose scores embed the given cube (hashed) rows —
+        the UpdateManager's query-cache invalidation key set."""
+        if group != 0:
+            return []
+        out: list = []
+        for h in hashed_ids:
+            out.extend(self._bucket_items.get(int(h), ()))
+        return out
+
+    def start_updates(self):
+        """Start the live-update stage (requires cfg.live_updates +
+        cfg.update_dir): a watcher thread tails the delta log and applies
+        each published version while traffic keeps flowing."""
+        if self.update_watcher is None:
+            raise RuntimeError("live updates not configured "
+                               "(set live_updates=True and update_dir)")
+        self.update_watcher.start()
+
+    def stop_updates(self):
+        if self.update_watcher is not None:
+            self.update_watcher.stop()
 
     # --------------------------------------------------------------- run
     def make_requests(self, n: int, seed: int = 0) -> list[Event]:

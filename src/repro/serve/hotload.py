@@ -3,14 +3,28 @@ interrupting the service — a monitor tracks the training cluster's output;
 when a new generation appears (identified by generation timestamp), it is
 pulled and swapped in via DOUBLE BUFFERING: in-flight requests finish on the
 old buffer, new requests bind the new one.
+
+Two watcher flavours share one polling skeleton (``PollWatcher``):
+
+  * ``ModelMonitor`` — whole-generation swaps into a ``DoubleBuffer``
+    (the §7 path: a full snapshot replaces the previous one).
+  * ``repro.update.delta.DeltaWatcher`` — the streaming delta path
+    (DESIGN.md §6): versioned delta batches applied into the live cube.
+
+A failing loader/apply no longer stalls updates silently: the poll loop
+catches the exception, LOGS it, and retries with exponential backoff
+(reset on the next success), keeping the serving path alive while the
+training side republishes a bad artifact.
 """
 from __future__ import annotations
 
+import logging
 import os
 import threading
-import time
 from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from typing import Any, Callable, List, Optional
+
+log = logging.getLogger(__name__)
 
 
 @dataclass
@@ -20,13 +34,19 @@ class Generation:
 
 
 class DoubleBuffer:
-    """Lock-free reads (python ref assignment is atomic); writers swap."""
+    """Lock-free reads (python ref assignment is atomic); writers swap.
+
+    ``on_swap`` callbacks fire after each successful publish — the cache-
+    coherence hook: the query cache's scores were computed by the OLD
+    generation, so `InferenceService` registers its
+    ``QueryCache.bump_model_version`` here (DESIGN.md §6.4)."""
 
     def __init__(self, initial: Generation):
         self._active = initial
         self._standby: Optional[Generation] = None
         self._lock = threading.Lock()
         self.swaps = 0
+        self.on_swap: List[Callable[[Generation], None]] = []
 
     @property
     def active(self) -> Generation:
@@ -42,21 +62,79 @@ class DoubleBuffer:
             self._active = gen
             self._standby = None
             self.swaps += 1
-            return True
+        for cb in self.on_swap:
+            cb(gen)
+        return True
 
 
-class ModelMonitor:
+class PollWatcher:
+    """Thread that polls ``check_once()`` every ``poll_s`` seconds, with
+    logged exponential backoff on failure.
+
+    A loader exception used to be swallowed with a bare ``pass`` — the
+    monitor would silently hammer the same broken artifact every tick with
+    no operator signal. Now each consecutive failure doubles the wait (up
+    to ``max_backoff_s``), the exception is logged, and ``failures`` /
+    ``last_error`` expose the state to health checks; the first success
+    resets the backoff."""
+
+    def __init__(self, poll_s: float = 1.0, max_backoff_s: float = 30.0):
+        self.poll_s = poll_s
+        self.max_backoff_s = max_backoff_s
+        self.failures = 0               # consecutive failures (resets on ok)
+        self.total_failures = 0
+        self.last_error: Optional[BaseException] = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def check_once(self) -> bool:       # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def _backoff_s(self) -> float:
+        if not self.failures:
+            return self.poll_s
+        # cap the exponent: 2.0**1024 raises OverflowError, which would
+        # escape loop() (the wait runs outside the try) and silently kill
+        # the watcher thread after ~1k consecutive failures
+        return min(self.poll_s * (2.0 ** min(self.failures, 30)),
+                   self.max_backoff_s)
+
+    def start(self):
+        def loop():
+            while not self._stop.is_set():
+                try:
+                    self.check_once()
+                    self.failures = 0
+                    self.last_error = None
+                except Exception as e:  # noqa: BLE001 — keep serving
+                    self.failures += 1
+                    self.total_failures += 1
+                    self.last_error = e
+                    log.warning(
+                        "%s poll failed (attempt %d, retry in %.1fs): %s",
+                        type(self).__name__, self.failures,
+                        self._backoff_s(), e)
+                self._stop.wait(self._backoff_s())
+        self._thread = threading.Thread(target=loop, daemon=True)
+        self._thread.start()
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2)
+
+
+class ModelMonitor(PollWatcher):
     """Polls a 'remote address' (directory) for new generation stamps and
     hot-loads them. Thread-based; ``check_once`` is used by tests."""
 
     def __init__(self, watch_dir: str, buffer: DoubleBuffer,
-                 loader: Callable[[str], Any], poll_s: float = 1.0):
+                 loader: Callable[[str], Any], poll_s: float = 1.0,
+                 max_backoff_s: float = 30.0):
+        super().__init__(poll_s=poll_s, max_backoff_s=max_backoff_s)
         self.watch_dir = watch_dir
         self.buffer = buffer
         self.loader = loader
-        self.poll_s = poll_s
-        self._stop = threading.Event()
-        self._thread: Optional[threading.Thread] = None
 
     def latest_stamp(self) -> Optional[int]:
         if not os.path.isdir(self.watch_dir):
@@ -73,19 +151,3 @@ class ModelMonitor:
         path = os.path.join(self.watch_dir, f"gen_{stamp}")
         payload = self.loader(path)
         return self.buffer.load(Generation(stamp, payload))
-
-    def start(self):
-        def loop():
-            while not self._stop.is_set():
-                try:
-                    self.check_once()
-                except Exception:      # noqa: BLE001 — keep serving
-                    pass
-                self._stop.wait(self.poll_s)
-        self._thread = threading.Thread(target=loop, daemon=True)
-        self._thread.start()
-
-    def stop(self):
-        self._stop.set()
-        if self._thread:
-            self._thread.join(timeout=2)

@@ -13,6 +13,7 @@ broadcast), i.e. exactly the sparse gradient a parameter server would apply.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -70,6 +71,61 @@ def sharded_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
         check_vma=False,
     )
     return fn(table, ids)
+
+
+def _donate_argnums() -> tuple:
+    """Donate the table buffer where the backend can actually alias it (TPU/
+    GPU); CPU donation is unimplemented in XLA and would only warn-spam."""
+    return (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+
+
+@functools.lru_cache(maxsize=None)
+def _row_update_fn(mesh, rows_per_shard: int):
+    if mesh is None:
+        return jax.jit(lambda t, i, r: t.at[i].set(r, mode="drop"),
+                       donate_argnums=_donate_argnums())
+
+    def local(t, i, r):
+        shard_idx = jax.lax.axis_index(SHARD_AXIS)
+        local_ids = i - shard_idx * rows_per_shard
+        # mode="drop" alone is NOT the ownership mask: drop applies AFTER
+        # negative-index normalization, so a row owned by an EARLIER shard
+        # (negative local id) would wrap into this shard's tail and
+        # silently overwrite another key's parameters. Push non-owned ids
+        # past the end instead — those genuinely drop.
+        ok = (local_ids >= 0) & (local_ids < rows_per_shard)
+        safe = jnp.where(ok, local_ids, rows_per_shard)
+        return t.at[safe].set(r, mode="drop")
+
+    fn = runtime.shard_map(local, mesh=mesh,
+                           in_specs=(P(SHARD_AXIS, None), P(None),
+                                     P(None, None)),
+                           out_specs=P(SHARD_AXIS, None), check_vma=False)
+    return jax.jit(fn, donate_argnums=_donate_argnums())
+
+
+def sharded_row_update(table: jax.Array, ids: jax.Array,
+                       rows: jax.Array) -> jax.Array:
+    """In-place row updates of the HBM head: scatter ``rows`` into ``table``
+    at ``ids`` with the table buffer DONATED, so XLA writes the touched rows
+    into the existing allocation — the streaming-update path (DESIGN.md §6)
+    migrates hot rows from the cube tail into a live multi-GB head without
+    a table rebuild or a second table's worth of HBM. Under a >1 ``model``
+    mesh axis the scatter runs per shard inside shard_map (each device
+    updates only the rows it owns; ids are replicated — they're int32 and
+    tiny). Returns the updated table; the input reference is consumed where
+    donation is in effect. Duplicate ids within one call are the caller's
+    to resolve (the update policy dedups, last-wins, before calling)."""
+    ids = jnp.asarray(ids, jnp.int32)
+    rows = jnp.asarray(rows, table.dtype)
+    if ids.size == 0:
+        return table
+    mesh = runtime.current_mesh()
+    n_shards = 1 if mesh is None else mesh.shape.get(SHARD_AXIS, 1)
+    vocab = table.shape[0]
+    if mesh is None or n_shards == 1 or vocab % n_shards != 0:
+        return _row_update_fn(None, 0)(table, ids, rows)
+    return _row_update_fn(mesh, vocab // n_shards)(table, ids, rows)
 
 
 def sharded_embedding_bag(table: jax.Array, ids: jax.Array,

@@ -1,0 +1,175 @@
+"""The delta log: versioned parameter-update batches between training and
+serving (DESIGN.md §6.1).
+
+A continuously-retrained sparse model touches a tiny slice of rows per
+pass — shipping whole generations (serve/hotload.py) for that is the
+full-snapshot anti-pattern. The delta log is the streaming alternative:
+
+  * ``GroupDelta`` — per-feature-group arrays of ``(id, row)`` upserts plus
+    optional deletes; ids are raw ids in the group's key space (the same
+    ids ``ParameterCube.lookup`` takes — signatures are derived at apply
+    time so host and cube agree). ``item_ids`` optionally carries the raw
+    item ids a serving-side query cache keys scores by, when that space
+    differs from the cube's (hashed) id space.
+  * ``DeltaBatch`` — one atomic publish unit: a monotonically increasing
+    ``version`` plus one GroupDelta per touched group. Within a batch,
+    deletes apply after upserts.
+
+On-disk layout (the training-side emitter writes, the serving-side watcher
+tails): ``<dir>/delta_<version>/group_<g>.npz`` + an empty ``DONE`` marker
+written LAST — the marker is the publish point, exactly like hot-load
+generations, so a half-written delta is never consumed.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.serve.hotload import PollWatcher
+
+_PREFIX = "delta_"
+
+
+@dataclass
+class GroupDelta:
+    group: int
+    ids: np.ndarray = field(default_factory=lambda: np.empty(0, np.int64))
+    rows: np.ndarray = field(default_factory=lambda: np.empty((0, 0),
+                                                              np.float32))
+    delete_ids: np.ndarray = field(
+        default_factory=lambda: np.empty(0, np.int64))
+    # raw item ids for targeted query-cache invalidation; None → the cube
+    # ids double as the item keys (single-hash deployments)
+    item_ids: Optional[np.ndarray] = None
+
+    def touched_item_ids(self) -> np.ndarray:
+        if self.item_ids is not None:
+            return np.atleast_1d(np.asarray(self.item_ids))
+        return np.concatenate([np.atleast_1d(np.asarray(self.ids)),
+                               np.atleast_1d(np.asarray(self.delete_ids))])
+
+
+@dataclass
+class DeltaBatch:
+    version: int
+    groups: List[GroupDelta]
+
+    @property
+    def n_upserts(self) -> int:
+        return sum(np.asarray(g.ids).size for g in self.groups)
+
+    @property
+    def n_deletes(self) -> int:
+        return sum(np.asarray(g.delete_ids).size for g in self.groups)
+
+
+# ----------------------------------------------------------------- log I/O
+
+def delta_path(log_dir: str, version: int) -> str:
+    return os.path.join(log_dir, f"{_PREFIX}{version:012d}")
+
+
+def write_delta(log_dir: str, batch: DeltaBatch) -> str:
+    """Training-side emit: per-group npz files first, DONE marker last (the
+    atomic publish point). Returns the delta directory."""
+    path = delta_path(log_dir, batch.version)
+    os.makedirs(path, exist_ok=True)
+    for g in batch.groups:
+        kw = {"ids": np.atleast_1d(np.asarray(g.ids)),
+              "rows": np.asarray(g.rows),
+              "delete_ids": np.atleast_1d(np.asarray(g.delete_ids))}
+        if g.item_ids is not None:
+            kw["item_ids"] = np.atleast_1d(np.asarray(g.item_ids))
+        np.savez(os.path.join(path, f"group_{g.group}.npz"), **kw)
+    with open(os.path.join(path, "DONE"), "w"):
+        pass
+    return path
+
+
+def read_delta(path: str) -> DeltaBatch:
+    version = int(os.path.basename(path).split("_")[-1])
+    groups = []
+    for fn in sorted(os.listdir(path)):
+        if not (fn.startswith("group_") and fn.endswith(".npz")):
+            continue
+        with np.load(os.path.join(path, fn)) as z:
+            groups.append(GroupDelta(
+                group=int(fn[len("group_"):-len(".npz")]),
+                ids=z["ids"], rows=z["rows"], delete_ids=z["delete_ids"],
+                item_ids=z["item_ids"] if "item_ids" in z else None))
+    return DeltaBatch(version=version, groups=groups)
+
+
+def list_deltas(log_dir: str, after_version: int = -1
+                ) -> List[tuple[int, str]]:
+    """Published (DONE-marked) deltas newer than ``after_version``, in
+    version order — the watcher's tailing primitive."""
+    if not os.path.isdir(log_dir):
+        return []
+    out = []
+    for d in os.listdir(log_dir):
+        if not d.startswith(_PREFIX):
+            continue
+        try:
+            ver = int(d.split("_")[-1])
+        except ValueError:
+            continue
+        full = os.path.join(log_dir, d)
+        if ver > after_version and os.path.exists(os.path.join(full, "DONE")):
+            out.append((ver, full))
+    out.sort()
+    return out
+
+
+class DeltaEmitter:
+    """Training-side convenience: stamps monotonically increasing versions
+    onto batches and writes them to the log directory."""
+
+    def __init__(self, log_dir: str, start_version: int = 0):
+        self.log_dir = log_dir
+        self.next_version = start_version
+        os.makedirs(log_dir, exist_ok=True)
+
+    def emit(self, groups: List[GroupDelta]) -> DeltaBatch:
+        batch = DeltaBatch(version=self.next_version, groups=groups)
+        write_delta(self.log_dir, batch)
+        self.next_version += 1
+        return batch
+
+
+class DeltaWatcher(PollWatcher):
+    """Serving-side tail of the delta log — the streaming generalization of
+    ``ModelMonitor`` (which it shares the PollWatcher skeleton with): where
+    the monitor loads only the LATEST whole generation, the watcher applies
+    EVERY pending delta strictly in version order (deltas compose; skipping
+    one would corrupt the cube state). A failed apply stops at that delta
+    and retries it after backoff, preserving the order.
+
+    ``prune_applied``: remove each delta directory once applied. Without
+    it, the log directory grows one directory per delta forever and every
+    poll's os.listdir scans the full history — enable when this watcher is
+    the log's only consumer (the serving wiring); leave off for shared
+    logs, where retention belongs to the training side."""
+
+    def __init__(self, watch_dir: str, apply_fn: Callable[[DeltaBatch], int],
+                 poll_s: float = 0.25, max_backoff_s: float = 10.0,
+                 start_after_version: int = -1, prune_applied: bool = False):
+        super().__init__(poll_s=poll_s, max_backoff_s=max_backoff_s)
+        self.watch_dir = watch_dir
+        self.apply_fn = apply_fn
+        self.applied_version = start_after_version
+        self.prune_applied = prune_applied
+
+    def check_once(self) -> bool:
+        applied = False
+        for ver, path in list_deltas(self.watch_dir, self.applied_version):
+            self.apply_fn(read_delta(path))
+            self.applied_version = ver
+            applied = True
+            if self.prune_applied:
+                shutil.rmtree(path, ignore_errors=True)
+        return applied

@@ -1,0 +1,248 @@
+"""UpdateManager: one delta batch in, every storage/cache layer coherent
+out (DESIGN.md §6).
+
+Apply order per batch — chosen so no reader can observe a NEW cache entry
+over OLD cube rows:
+
+  1. cube        — ``ParameterCube.apply_delta`` publishes the rows with an
+                   atomic version bump (pinned/in-flight readers keep their
+                   snapshot);
+  2. HBM head    — in-place donated-buffer scatter for the touched
+                   signatures currently resident; deletes demote;
+  3. cube cache  — targeted ``invalidate_keys`` of exactly the touched
+                   keys (LFU counts persist);
+  4. query cache — targeted ``invalidate_items`` of the touched items
+                   (scores embedding the old rows must not be reused).
+
+Invalidate-after-publish means a request racing the apply either reads the
+old rows coherently (old cache + old cube version) or misses and refetches
+the new ones; it can never cache-hit its way to a torn mix.
+
+The manager is also the DoubleBuffer ``on_swap`` subscriber: a whole-
+generation hot swap bumps the caches' model version — the fix for the
+latent staleness bug where a swap kept serving the previous generation's
+scores out of the query cache for up to its TTL window.
+
+``rebalance`` runs the frequency-driven tier migration: cube-cache LFU
+counts → ``PromoteDemotePolicy`` → head promote/demote, rows sourced from
+the cube tail. ``maybe_compact`` folds cube overlay blocks back into base
+blocks once they pile past a threshold. Both belong OFF the request path
+(the serving loop calls them from the update thread).
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.update.delta import DeltaBatch
+from repro.update.policy import PromoteDemotePolicy, merged_lfu_counts
+
+
+@dataclass
+class UpdateStats:
+    deltas_applied: int = 0
+    deltas_skipped: int = 0        # stale/duplicate versions (replay)
+    rows_upserted: int = 0
+    rows_deleted: int = 0
+    head_rows_updated: int = 0
+    cube_keys_invalidated: int = 0
+    query_entries_invalidated: int = 0
+    promotions: int = 0
+    demotions: int = 0
+    compactions: int = 0
+    generation_swaps: int = 0
+    last_version: int = -1
+
+
+def _default_cache_key_fn(group: int, ids: np.ndarray):
+    """Cube-cache keys for a group's raw ids. The serving stack keys its
+    cube cache by the bare (hashed) id for the primary group and by
+    (group, id) otherwise — override per deployment."""
+    if group == 0:
+        return [int(i) for i in ids]
+    return [(group, int(i)) for i in ids]
+
+
+class UpdateManager:
+    def __init__(self, cube, cube_cache=None, query_cache=None, head=None,
+                 policy: Optional[PromoteDemotePolicy] = None,
+                 cache_key_fn: Callable = _default_cache_key_fn,
+                 qcache_items_fn: Optional[Callable] = None,
+                 compact_after_blocks: int = 256,
+                 swap_invalidates_cube_cache: bool = False):
+        self.cube = cube
+        self.cube_cache = cube_cache
+        self.query_cache = query_cache
+        self.head = head
+        self.policy = policy
+        self.cache_key_fn = cache_key_fn
+        # (group, touched cube ids) → the RAW item keys the query cache is
+        # scored under. When the cube id space is a hash of the item space
+        # (the serving stack), the deployment must supply the reverse
+        # mapping — falling back to GroupDelta.item_ids / the cube ids
+        # themselves is only correct when the two spaces coincide.
+        self.qcache_items_fn = qcache_items_fn
+        self.compact_after_blocks = compact_after_blocks
+        # a dense-generation hot swap does NOT change cube rows (those only
+        # move via apply_delta, already invalidated key-by-key) — wiping
+        # the warm ~84%-hit cube cache on every swap buys no coherence and
+        # costs a remote-refetch burst. Opt in only for deployments whose
+        # generation payload swaps the sparse tier too.
+        self.swap_invalidates_cube_cache = swap_invalidates_cube_cache
+        self.stats = UpdateStats()
+        self._lock = threading.Lock()      # appliers serialize
+        # per-group raw ids currently holding head slots (rebalance assumes
+        # the cube cache is keyed by the group's raw ids — the serving
+        # convention for the primary group)
+        self._resident_ids: dict[int, set] = {}
+        # per-version touched-key log: the serving ops' cache-aside guards
+        # consult it to drop ONLY the entries a racing delta actually
+        # touched — a batch-wide drop would fire on nearly every batch
+        # under a continuous stream and collapse the query-cache hit ratio
+        self._touched_log: deque = deque()
+        self._touched_floor = -1       # log is complete for versions > floor
+        self._touched_cap = 512
+
+    # ------------------------------------------------------------- deltas
+    def apply(self, batch: DeltaBatch) -> int:
+        """Apply one versioned delta batch across all layers. Idempotent
+        under replay: versions at or below the last applied one are
+        skipped (the watcher may re-offer a delta after a crash)."""
+        with self._lock:
+            if batch.version <= self.stats.last_version:
+                self.stats.deltas_skipped += 1
+                return self.stats.last_version
+            # validate EVERY group before applying ANY: last_version only
+            # advances after the whole batch lands, so a malformed group
+            # failing mid-batch would otherwise leave the earlier groups
+            # applied — and every watcher retry would re-apply them
+            # (duplicate overlay blocks, double-counted stats)
+            for g in batch.groups:
+                ids = np.atleast_1d(np.asarray(g.ids)).reshape(-1)
+                if ids.size:
+                    rows = np.asarray(g.rows)
+                    if rows.ndim != 2 or rows.shape[0] != ids.size:
+                        raise ValueError(
+                            f"delta v{batch.version} group {g.group}: rows "
+                            f"{rows.shape} vs {ids.size} ids")
+                    shape = self.cube.row_shape(g.group)
+                    if shape is not None and rows.shape[1] != shape[0]:
+                        raise ValueError(
+                            f"delta v{batch.version} group {g.group}: dim "
+                            f"{rows.shape[1]} != cube dim {shape[0]}")
+            for g in batch.groups:
+                ids = np.atleast_1d(np.asarray(g.ids)).reshape(-1)
+                dels = np.atleast_1d(np.asarray(g.delete_ids)).reshape(-1)
+                v_after = self.cube.apply_delta(
+                    g.group, ids if ids.size else None,
+                    np.asarray(g.rows) if ids.size else None,
+                    delete_ids=dels if dels.size else None)
+                touched = np.concatenate([ids, dels]) if dels.size else ids
+                keys = (self.cache_key_fn(g.group, touched)
+                        if touched.size else [])
+                if self.qcache_items_fn is not None:
+                    items = list(self.qcache_items_fn(g.group, touched))
+                else:
+                    items = [int(i) for i in g.touched_item_ids()]
+                # log BEFORE any invalidation: the serving-side guards read
+                # this concurrently — appended after, a guard checking in
+                # the window between invalidate and append would see an
+                # empty span and keep a just-resurrected stale entry.
+                # Appended first, it can only over-report (harmless drop).
+                self._touched_log.append(
+                    (v_after, frozenset(keys), frozenset(items)))
+                while len(self._touched_log) > self._touched_cap:
+                    self._touched_floor = self._touched_log.popleft()[0]
+                if self.head is not None:
+                    if ids.size:
+                        self.stats.head_rows_updated += self.head.update_rows(
+                            g.group, ids, np.asarray(g.rows))
+                    if dels.size:
+                        self.head.demote(g.group, dels)
+                        # keep the policy's membership view in sync — a
+                        # drifted resident set undercounts free slots and
+                        # wastes hysteresis evictions on already-gone keys
+                        if g.group in self._resident_ids:
+                            self._resident_ids[g.group] -= \
+                                {int(i) for i in dels}
+                if self.cube_cache is not None and keys:
+                    self.stats.cube_keys_invalidated += \
+                        self.cube_cache.invalidate_keys(keys)
+                if self.query_cache is not None and items:
+                    self.stats.query_entries_invalidated += \
+                        self.query_cache.invalidate_items(items)
+                self.stats.rows_upserted += int(ids.size)
+                self.stats.rows_deleted += int(dels.size)
+            self.stats.deltas_applied += 1
+            self.stats.last_version = batch.version
+            return batch.version
+
+    def touched_since(self, version: int):
+        """(cube_keys, item_keys) touched by deltas published at versions >
+        ``version``, or None when the log no longer reaches back that far
+        (callers must then invalidate conservatively). Versions bumped by
+        index folds and compaction touch nothing and legitimately have no
+        log entry."""
+        if version < self._touched_floor:
+            return None
+        keys: set = set()
+        items: set = set()
+        for v, ks, its in list(self._touched_log):
+            if v > version:
+                keys |= ks
+                items |= its
+        return keys, items
+
+    # -------------------------------------------------------- generations
+    def on_generation_swap(self, gen=None):
+        """DoubleBuffer on_swap hook: the dense model changed, so every
+        cached SCORE is stale at once; cube ROWS survive unless this
+        deployment swaps the sparse tier with the generation."""
+        if self.query_cache is not None:
+            self.query_cache.bump_model_version()
+        if self.cube_cache is not None and self.swap_invalidates_cube_cache:
+            self.cube_cache.bump_generation()
+        self.stats.generation_swaps += 1
+
+    # -------------------------------------------------- background passes
+    def rebalance(self, group: int = 0) -> tuple[int, int]:
+        """One promote/demote pass for ``group``: cube-cache LFU counts →
+        policy plan → head migration (rows gathered from the cube tail in
+        one batched lookup, scattered into HBM in one donated launch).
+        Returns (promoted, demoted)."""
+        if self.head is None or self.policy is None \
+                or self.cube_cache is None:
+            return (0, 0)
+        with self._lock:
+            counts = merged_lfu_counts(self.cube_cache)
+            resident_ids = self._resident_ids.setdefault(group, set())
+            plan = self.policy.plan(counts, resident_ids)
+            promoted = demoted = 0
+            if plan.demote:
+                ids = np.asarray([k for k in plan.demote], np.int64)
+                demoted = self.head.demote(group, ids)
+                resident_ids -= set(plan.demote)
+            if plan.promote:
+                ids = np.asarray([k for k in plan.promote], np.int64)
+                live = self.cube.contains(group, ids)
+                ids = ids[live]                 # only rows the tail still has
+                if ids.size:
+                    rows = self.cube.lookup(group, ids)
+                    promoted = self.head.promote(group, ids, rows)
+                    resident_ids |= {int(i) for i in ids}
+            self.stats.promotions += promoted
+            self.stats.demotions += demoted
+            return (promoted, demoted)
+
+    def maybe_compact(self) -> bool:
+        """Fold cube overlays once enough have piled up — off the hot path;
+        readers keep their pinned snapshots throughout."""
+        if self.cube.overlay_blocks < self.compact_after_blocks:
+            return False
+        self.cube.compact()
+        self.stats.compactions += 1
+        return True

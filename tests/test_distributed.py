@@ -99,3 +99,28 @@ def test_dryrun_reduced_mesh_cells():
             f"/tmp/dryrun_pytest/{arch}__{shape}__2x4.json").read())
         assert rec["ok"]
         assert rec["hlo"]["flops_per_device"] > 0
+
+
+def test_sharded_row_update_multi_device_no_wraparound():
+    """The donated-scatter ownership mask: a row owned by an EARLIER shard
+    has a NEGATIVE local id, which mode="drop" alone would normalize into
+    the wrong shard's tail — corrupting a resident row of another key."""
+    out = run_sub("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax, jax.numpy as jnp
+        from repro import runtime
+        from repro.launch.mesh import make_mesh
+        from repro.sparse.sharded import sharded_row_update
+        rng = np.random.default_rng(0)
+        mesh = make_mesh((1, 4), ("data", "model"))   # 4 'model' shards
+        base = rng.normal(size=(32, 8)).astype(np.float32)
+        ids = np.array([0, 5, 9, 17, 31], np.int32)   # every shard + edges
+        rows = rng.normal(size=(5, 8)).astype(np.float32)
+        with runtime.use_mesh(mesh):
+            got = sharded_row_update(jnp.asarray(base), ids, rows)
+        want = base.copy(); want[ids] = rows
+        np.testing.assert_array_equal(np.asarray(got), want)
+        print("SCATTER-OK")
+    """)
+    assert "SCATTER-OK" in out

@@ -1,0 +1,425 @@
+"""Hot swap + delta stream under LIVE traffic: AsyncExecutor stage workers
+serve in parallel while new generations and delta versions publish mid-run.
+Contracts under test (DESIGN.md §6):
+
+  * no torn reads — every row a request observes belongs to exactly one
+    published cube version (never a mix, never a half-applied delta);
+  * attribution — each response carries the version it was served at, and
+    its contents match that version exactly;
+  * a generation hot swap mid-run gives every response the scores of
+    exactly one generation, and the query cache never resells the old
+    generation's scores after the swap;
+  * a failing loader never silently stalls the poll thread (backoff+retry).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.cube import ParameterCube
+from repro.core.executors import AsyncExecutor
+from repro.core.sedp import SEDP, Event
+from repro.serve.hotload import DoubleBuffer, Generation, ModelMonitor
+from repro.update import DeltaBatch, GroupDelta, UpdateManager
+
+DIM = 4
+N_IDS = 256
+
+
+def _value_cube():
+    """Cube whose every row is filled with the version that published it:
+    row content IS the version stamp, so torn reads are detectable by
+    value."""
+    cube = ParameterCube(n_servers=4, replication=2, block_rows=32)
+    cube.load_table(0, np.zeros((N_IDS, DIM), np.float32))
+    cube.lookup(0, np.array([0]))          # fold the build → version 1
+    return cube
+
+
+def test_no_torn_reads_single_version_attribution_under_delta_stream(rng):
+    cube = _value_cube()
+    ids_all = np.arange(N_IDS)
+    published = {cube.version: 0.0}        # version → fill value
+    stop = threading.Event()
+    first_batch = threading.Event()
+    writer_err = []
+
+    def writer():
+        try:
+            first_batch.wait(timeout=10)
+            k = 0
+            while not stop.is_set():
+                next_v = cube.version + 1
+                published[next_v] = float(next_v)   # record BEFORE publish
+                got = cube.apply_delta(
+                    0, ids_all, np.full((N_IDS, DIM), float(next_v),
+                                        np.float32))
+                assert got == next_v
+                k += 1
+                if k % 7 == 0:
+                    v = cube.compact()              # value unchanged
+                    published[v] = published[v - 1]
+                time.sleep(0.001)
+        except Exception as e:             # pragma: no cover - debug aid
+            writer_err.append(e)
+
+    def op_lookup(batch, ctx):
+        first_batch.set()
+        with cube.pin() as pv:
+            for ev in batch:
+                ids = ev.payload["ids"]
+                rows = cube.lookup(0, ids, version=pv)
+                ev.payload["version"] = pv.version
+                ev.payload["values"] = np.unique(rows)
+        time.sleep(0.0005)                 # stretch the run past >1 publish
+        return batch
+
+    g = SEDP()
+    g.add_stage("ingress", lambda b, c: b, batch_size=4, parallelism=2)
+    g.add_stage("lookup", op_lookup, batch_size=8, parallelism=3)
+    g.add_stage("respond", lambda b, c: b, batch_size=8)
+    g.chain("ingress", "lookup", "respond")
+    plan = g.compile()
+
+    events = [Event(payload={"ids": rng.integers(0, N_IDS, 32)})
+              for _ in range(240)]
+    th = threading.Thread(target=writer, daemon=True)
+    th.start()
+    try:
+        report = AsyncExecutor(plan).run(events)
+    finally:
+        stop.set()
+        th.join(timeout=10)
+    assert not writer_err
+    assert len(report.results) == len(events)
+    seen_versions = set()
+    for ev in report.results:
+        vals = ev.payload["values"]
+        # NO TORN READ: all rows in one response share one value ⇒ they all
+        # came from a single published version
+        assert vals.size == 1, f"torn read: values {vals}"
+        ver = ev.payload["version"]
+        # ATTRIBUTION: the value matches the version the response claims
+        assert published[ver] == float(vals[0])
+        seen_versions.add(ver)
+    # the stream actually landed mid-run: multiple versions were served
+    assert len(seen_versions) >= 2, seen_versions
+    assert cube.version > 1
+
+
+def test_generation_swap_mid_run_yields_single_generation_responses(rng):
+    """DoubleBuffer hot swap while AsyncExecutor workers score in parallel:
+    each response's score must equal the stamp of the generation it claims
+    (a response mixing two generations' params would show a foreign
+    value)."""
+    buf = DoubleBuffer(Generation(1, np.full((DIM,), 1.0, np.float32)))
+    published = {1}
+    stop = threading.Event()
+    first_batch = threading.Event()
+
+    def swapper():
+        first_batch.wait(timeout=10)
+        stamp = 2
+        while not stop.is_set():
+            published.add(stamp)           # record BEFORE publish
+            buf.load(Generation(stamp, np.full((DIM,), float(stamp),
+                                               np.float32)))
+            stamp += 1
+            time.sleep(0.002)
+
+    def op_score(batch, ctx):
+        first_batch.set()
+        gen = buf.active                   # bind ONCE per batch
+        for ev in batch:
+            vals = np.unique(gen.payload)
+            assert vals.size == 1          # params internally consistent
+            ev.payload["gen"] = gen.stamp
+            ev.payload["score"] = float(vals[0])
+        time.sleep(0.0005)
+        return batch
+
+    g = SEDP()
+    g.add_stage("score", op_score, batch_size=8, parallelism=3)
+    g.add_stage("respond", lambda b, c: b, batch_size=8)
+    g.chain("score", "respond")
+    events = [Event(payload={}) for _ in range(200)]
+    th = threading.Thread(target=swapper, daemon=True)
+    th.start()
+    try:
+        report = AsyncExecutor(g.compile()).run(events)
+    finally:
+        stop.set()
+        th.join(timeout=10)
+    assert len(report.results) == len(events)
+    gens = set()
+    for ev in report.results:
+        assert ev.payload["score"] == float(ev.payload["gen"])
+        assert ev.payload["gen"] in published
+        gens.add(ev.payload["gen"])
+    assert len(gens) >= 2, gens            # swaps really landed mid-run
+
+
+def test_swap_bumps_query_cache_via_on_swap(rng):
+    """The DoubleBuffer → UpdateManager wiring: a hot swap must stop the
+    query cache from reselling the old generation's scores (the latent
+    staleness bug — previously they survived until TTL)."""
+    from repro.core.query_cache import QueryCache
+    cube = _value_cube()
+    qc = QueryCache(capacity=16, window_s=1e9)
+    mgr = UpdateManager(cube, query_cache=qc)
+    buf = DoubleBuffer(Generation(0, "params-g0"))
+    buf.on_swap.append(mgr.on_generation_swap)
+    qc.put("u", "i", 0.9, now=0.0)
+    assert qc.get("u", "i", now=1.0) == 0.9
+    assert buf.load(Generation(1, "params-g1"))
+    assert qc.get("u", "i", now=1.0) is None
+    assert not buf.load(Generation(1, "stale"))    # stale swap → no bump
+    assert mgr.stats.generation_swaps == 1
+
+
+def test_deltas_and_swaps_interleaved_with_manager(rng):
+    """Full wiring: AsyncExecutor traffic + DeltaWatcher-style applies via
+    UpdateManager + generation swaps, all concurrent. Every response is
+    attributable to exactly one (cube_version, generation) pair."""
+    cube = _value_cube()
+    mgr = UpdateManager(cube, compact_after_blocks=64)
+    buf = DoubleBuffer(Generation(1, 1.0))
+    published = {cube.version: 0.0}
+    stop = threading.Event()
+    first_batch = threading.Event()
+
+    def updater():
+        first_batch.wait(timeout=10)
+        dv = 0
+        while not stop.is_set():
+            next_v = cube.version + 1
+            published[next_v] = float(next_v)
+            mgr.apply(DeltaBatch(dv, [GroupDelta(
+                group=0, ids=np.arange(N_IDS),
+                rows=np.full((N_IDS, DIM), float(next_v), np.float32))]))
+            buf.load(Generation(buf.active.stamp + 1, float(next_v)))
+            dv += 1
+            time.sleep(0.002)
+
+    def op(batch, ctx):
+        first_batch.set()
+        gen = buf.active
+        with cube.pin() as pv:
+            for ev in batch:
+                rows = cube.lookup(0, ev.payload["ids"], version=pv)
+                vals = np.unique(rows)
+                assert vals.size == 1
+                ev.payload["cube_version"] = pv.version
+                ev.payload["value"] = float(vals[0])
+                ev.payload["gen"] = gen.stamp
+        time.sleep(0.0005)
+        return batch
+
+    g = SEDP()
+    g.add_stage("op", op, batch_size=8, parallelism=3)
+    g.add_stage("respond", lambda b, c: b, batch_size=8)
+    g.chain("op", "respond")
+    events = [Event(payload={"ids": rng.integers(0, N_IDS, 24)})
+              for _ in range(160)]
+    th = threading.Thread(target=updater, daemon=True)
+    th.start()
+    try:
+        report = AsyncExecutor(g.compile()).run(events)
+    finally:
+        stop.set()
+        th.join(timeout=10)
+    for ev in report.results:
+        assert published[ev.payload["cube_version"]] == ev.payload["value"]
+    assert len(report.results) == len(events)
+    assert mgr.stats.deltas_applied > 0
+
+
+# ----------------------------------------------------- monitor resilience
+
+def test_model_monitor_loader_fails_once_then_succeeds(tmp_path):
+    """Satellite regression: a loader exception must not kill or silently
+    stall the poll thread — it logs, backs off, retries, and the next
+    success loads the generation and resets the backoff."""
+    gen_dir = tmp_path / "gen_5"
+    gen_dir.mkdir()
+    (gen_dir / "DONE").write_text("")
+    calls = {"n": 0}
+
+    def flaky_loader(path):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise IOError("truncated checkpoint")
+        return f"payload:{path}"
+
+    buf = DoubleBuffer(Generation(0, None))
+    mon = ModelMonitor(str(tmp_path), buf, loader=flaky_loader, poll_s=0.01)
+    mon.start()
+    try:
+        deadline = time.monotonic() + 5.0
+        while buf.active.stamp != 5 and time.monotonic() < deadline:
+            time.sleep(0.01)
+    finally:
+        mon.stop()
+    assert buf.active.stamp == 5               # recovered after the failure
+    assert calls["n"] == 2                     # exactly one retry needed
+    assert mon.total_failures == 1
+    assert mon.failures == 0                   # success reset the backoff
+    assert mon.last_error is None
+
+
+def test_model_monitor_backoff_grows_and_caps():
+    mon = ModelMonitor("/nonexistent", DoubleBuffer(Generation(0, None)),
+                       loader=lambda p: p, poll_s=0.5, max_backoff_s=4.0)
+    assert mon._backoff_s() == 0.5
+    mon.failures = 1
+    assert mon._backoff_s() == 1.0
+    mon.failures = 2
+    assert mon._backoff_s() == 2.0
+    mon.failures = 10
+    assert mon._backoff_s() == 4.0             # capped
+
+
+def test_model_monitor_check_once_still_raises_for_tests(tmp_path):
+    """Direct check_once keeps raising (the thread is what absorbs) — the
+    existing test-suite contract."""
+    gen_dir = tmp_path / "gen_1"
+    gen_dir.mkdir()
+    (gen_dir / "DONE").write_text("")
+
+    def bad_loader(path):
+        raise ValueError("boom")
+
+    mon = ModelMonitor(str(tmp_path), DoubleBuffer(Generation(0, None)),
+                       loader=bad_loader)
+    with pytest.raises(ValueError):
+        mon.check_once()
+
+
+# -------------------------------------------- cache-aside race regressions
+
+@pytest.fixture(scope="module")
+def svc():
+    from repro.core.service import InferenceService, ServiceConfig
+    return InferenceService(ServiceConfig(arch_id="din", batch_size=8,
+                                          shed=False, seed=0))
+
+
+def test_op_cube_drops_inserts_raced_by_delta(svc):
+    """A delta landing between op_cube's pinned fetch and its cache insert
+    must not resurrect pre-delta rows as fresh cache entries: the post-put
+    version check drops the batch's own inserts."""
+    from repro.update import DeltaBatch, GroupDelta
+    evs = svc.make_requests(4, seed=777)
+    svc.plan.stages["features"].op(evs, None)
+    keys = sorted({int(ev.payload["hashed"]["item_id"]) for ev in evs})
+    svc.cube_cache.invalidate_keys(keys)        # start from cold cache
+    real_put = svc.cube_cache.put_many
+
+    def racy_put(ks, vs):
+        # the delta applies INSIDE the race window: after the pinned
+        # lookup, before the insert — worst-case interleaving
+        svc.updates.apply(DeltaBatch(
+            svc.updates.stats.last_version + 1,
+            [GroupDelta(group=0, ids=np.asarray(keys, np.int64),
+                        rows=np.full((len(keys), 4), 42.0, np.float32))]))
+        real_put(ks, vs)
+
+    svc.cube_cache.put_many = racy_put
+    try:
+        svc.plan.stages["cube"].op(evs, None)
+    finally:
+        svc.cube_cache.put_many = real_put
+    # the raced inserts (pre-delta rows) must be gone...
+    assert all(svc.cube_cache.get(k) is None for k in keys)
+    # ...and the next batch serves the post-delta rows
+    evs2 = svc.make_requests(4, seed=777)
+    svc.plan.stages["features"].op(evs2, None)
+    svc.plan.stages["cube"].op(evs2, None)
+    for ev in evs2:
+        np.testing.assert_array_equal(ev.payload["cube_rows"],
+                                      np.full(4, 42.0, np.float32))
+
+
+def test_delta_invalidates_raw_item_scores_despite_hashed_ids(svc):
+    """The cube is keyed by HASHED item ids, the query cache by RAW ones:
+    a delta touching a hashed row must invalidate the raw items that map to
+    it (via the op_features reverse map), not treat hashed ids as items."""
+    from repro.sparse.hashing import hash_bucket_np
+    from repro.update import DeltaBatch, GroupDelta
+    evs = svc.make_requests(3, seed=555)
+    svc.plan.stages["features"].op(evs, None)   # records bucket → items
+    raw = int(evs[0].payload["item_id"])
+    bucket = int(hash_bucket_np(0, np.array([raw]),
+                                svc.model_cfg.item_fields[0].vocab)[0])
+    svc.query_cache.put("uX", raw, 0.77, now=0.0)
+    svc.updates.apply(DeltaBatch(
+        svc.updates.stats.last_version + 1,
+        [GroupDelta(group=0, ids=np.array([bucket]),
+                    rows=np.full((1, 4), 1.0, np.float32))]))
+    assert svc.query_cache.get("uX", raw, now=0.1) is None
+
+
+def test_query_cache_put_with_captured_version_cannot_mark_stale_fresh():
+    """op_dnn stamps scores with the model version captured BEFORE binding
+    the generation: a swap racing the batch leaves the entries pre-bump-
+    stamped, i.e. invalid — never old scores marked fresh."""
+    from repro.core.query_cache import QueryCache
+    qc = QueryCache(capacity=8, window_s=1e9)
+    captured = qc.model_version            # batch starts: capture, bind gen
+    qc.bump_model_version()                # hot swap lands mid-batch
+    qc.put_many(["u"], ["i"], [0.9], now=0.0, version=captured)
+    assert qc.get("u", "i", now=0.1) is None   # stamped pre-bump → invalid
+    qc.put("u", "i", 0.4, now=1.0)             # post-swap score is fresh
+    assert qc.get("u", "i", now=1.5) == 0.4
+
+
+def test_op_cube_serves_deleted_items_as_zero_rows(svc):
+    """A delta DELETE is a legitimate serving state: the cube stage must
+    serve the tombstoned row as the zero/default row, not raise KeyError
+    (which would kill the AsyncExecutor stage worker and hang the run)."""
+    from repro.update import DeltaBatch, GroupDelta
+    evs = svc.make_requests(3, seed=999)
+    svc.plan.stages["features"].op(evs, None)
+    bucket = int(evs[0].payload["hashed"]["item_id"])
+    original = svc.cube.lookup(0, np.array([bucket]))
+    svc.cube_cache.invalidate_keys([bucket])
+    svc.updates.apply(DeltaBatch(
+        svc.updates.stats.last_version + 1,
+        [GroupDelta(group=0, delete_ids=np.array([bucket]))]))
+    svc.plan.stages["cube"].op(evs, None)          # must not raise
+    np.testing.assert_array_equal(evs[0].payload["cube_rows"],
+                                  np.zeros(4, np.float32))
+    # restore the row for the rest of the module's tests
+    svc.cube_cache.invalidate_keys([bucket])
+    svc.updates.apply(DeltaBatch(
+        svc.updates.stats.last_version + 1,
+        [GroupDelta(group=0, ids=np.array([bucket]),
+                    rows=original.astype(np.float32))]))
+
+
+def test_op_cube_keeps_inserts_when_raced_delta_touched_other_keys(svc):
+    """The cache-aside guard is TARGETED: a delta racing the batch but
+    touching unrelated keys must not cost the batch its warm inserts."""
+    from repro.update import DeltaBatch, GroupDelta
+    evs = svc.make_requests(4, seed=4242)
+    svc.plan.stages["features"].op(evs, None)
+    keys = sorted({int(ev.payload["hashed"]["item_id"]) for ev in evs})
+    vocab = svc.model_cfg.item_fields[0].vocab
+    other = next(k for k in range(vocab) if k not in keys)
+    svc.cube_cache.invalidate_keys(keys)
+    real_put = svc.cube_cache.put_many
+
+    def racy_put(ks, vs):
+        svc.updates.apply(DeltaBatch(
+            svc.updates.stats.last_version + 1,
+            [GroupDelta(group=0, ids=np.array([other]),
+                        rows=np.full((1, 4), 3.0, np.float32))]))
+        real_put(ks, vs)
+
+    svc.cube_cache.put_many = racy_put
+    try:
+        svc.plan.stages["cube"].op(evs, None)
+    finally:
+        svc.cube_cache.put_many = real_put
+    assert all(svc.cube_cache.get(k) is not None for k in keys)

@@ -49,22 +49,24 @@ def test_cube_failover(cube):
             cube.lookup(1, np.array([start]))
 
 
-def test_cube_batched_equals_scalar_mixed_tiers_and_dups(cube, rng):
-    """Rollout gate for the vectorized path: bit-identical to the legacy
-    per-row path on mixed mem/disk blocks with heavily duplicated ids."""
+def test_cube_batched_equals_per_row_mixed_tiers_and_dups(cube, rng):
+    """Rollout gate for the vectorized path: bit-identical to per-row calls
+    on mixed mem/disk blocks with heavily duplicated ids. (The legacy
+    ``lookup_scalar`` escape hatch is gone — DESIGN.md §3.3 — so the
+    reference is the batched path itself at batch size 1.)"""
     ids = np.concatenate([rng.integers(0, 500, 300),
                           np.repeat(rng.integers(0, 500, 10), 20)])
     rng.shuffle(ids)
     got = cube.lookup(0, ids)
-    want = cube.lookup_scalar(0, ids)
+    want = np.stack([cube.lookup(0, np.array([i]))[0] for i in ids])
     assert got.dtype == want.dtype and np.array_equal(got, want)
 
 
-def test_cube_batched_equals_scalar_under_failover(cube, rng):
+def test_cube_batched_equals_per_row_under_failover(cube, rng):
     ids = rng.integers(0, 300, 200)
     cube.kill_server(2)
     got = cube.lookup(1, ids)
-    want = cube.lookup_scalar(1, ids)
+    want = np.stack([cube.lookup(1, np.array([i]))[0] for i in ids])
     assert np.array_equal(got, want)
     assert cube.metrics.failovers > 0
 
@@ -87,15 +89,12 @@ def test_cube_failover_with_mixed_group_dims(rng):
         c.revive_server(sid)
 
 
-def test_cube_scalar_flag_routes_lookup(cube, rng):
-    c = ParameterCube(n_servers=3, replication=2, block_rows=32,
-                      use_scalar_path=True)
-    table = rng.normal(size=(64, 4)).astype(np.float32)
-    c.load_table(0, table)
-    ids = rng.integers(0, 64, 10)
-    np.testing.assert_array_equal(c.lookup(0, ids), table[ids])
-    # scalar path keeps the legacy per-row accounting
-    assert c.metrics.lookups == 10
+def test_cube_scalar_path_removed():
+    """DESIGN.md §3.3 deprecation completed: the per-row escape hatch and
+    its constructor flag are gone."""
+    with pytest.raises(TypeError):
+        ParameterCube(n_servers=3, replication=2, use_scalar_path=True)
+    assert not hasattr(ParameterCube, "lookup_scalar")
 
 
 def test_cube_lookup_empty_and_scalar_input(cube):

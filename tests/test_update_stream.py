@@ -1,0 +1,690 @@
+"""Streaming parameter-update subsystem (DESIGN.md §6): delta log, MVCC
+cube application, compaction, HBM head migration, cache coherence."""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.cube import ParameterCube
+from repro.core.cube_cache import TwoTierLFUCache
+from repro.core.query_cache import QueryCache
+from repro.sparse.hashing import signature_np
+from repro.update import (DeltaBatch, DeltaEmitter, DeltaWatcher, GroupDelta,
+                          HBMHead, PromoteDemotePolicy, UpdateManager,
+                          list_deltas, read_delta, write_delta)
+
+DIM = 8
+
+
+def small_cube(rng, n=300, **kw):
+    kw.setdefault("n_servers", 4)
+    kw.setdefault("replication", 2)
+    kw.setdefault("block_rows", 64)
+    cube = ParameterCube(**kw)
+    table = rng.normal(size=(n, DIM)).astype(np.float32)
+    cube.load_table(0, table)
+    return cube, table
+
+
+# ------------------------------------------------------------- delta log
+
+def test_delta_log_roundtrip(tmp_path, rng):
+    em = DeltaEmitter(str(tmp_path), start_version=5)
+    rows = rng.normal(size=(4, DIM)).astype(np.float32)
+    b = em.emit([GroupDelta(group=2, ids=np.array([7, 8, 9, 10]), rows=rows,
+                            delete_ids=np.array([1]),
+                            item_ids=np.array([70, 80]))])
+    assert b.version == 5 and em.next_version == 6
+    got = read_delta(os.path.join(str(tmp_path), "delta_000000000005"))
+    assert got.version == 5 and len(got.groups) == 1
+    g = got.groups[0]
+    assert g.group == 2
+    np.testing.assert_array_equal(g.ids, [7, 8, 9, 10])
+    np.testing.assert_array_equal(g.rows, rows)
+    np.testing.assert_array_equal(g.delete_ids, [1])
+    np.testing.assert_array_equal(g.item_ids, [70, 80])
+    assert got.n_upserts == 4 and got.n_deletes == 1
+
+
+def test_delta_list_orders_and_skips_unpublished(tmp_path):
+    for v in (3, 1, 2):
+        write_delta(str(tmp_path), DeltaBatch(v, [GroupDelta(
+            group=0, ids=np.array([v]),
+            rows=np.zeros((1, DIM), np.float32))]))
+    # an unpublished (no DONE) delta must be invisible
+    os.makedirs(tmp_path / "delta_000000000009")
+    assert [v for v, _ in list_deltas(str(tmp_path))] == [1, 2, 3]
+    assert [v for v, _ in list_deltas(str(tmp_path), after_version=2)] == [3]
+
+
+def test_delta_touched_items_defaults_to_ids():
+    g = GroupDelta(group=0, ids=np.array([1, 2]),
+                   rows=np.zeros((2, DIM), np.float32),
+                   delete_ids=np.array([3]))
+    np.testing.assert_array_equal(g.touched_item_ids(), [1, 2, 3])
+
+
+# --------------------------------------------------------- MVCC deltas
+
+def test_apply_delta_bit_identical_to_rebuild(rng):
+    """The tentpole gate in miniature: a cube that ingested a delta stream
+    must serve lookups bit-identical to one rebuilt from scratch with the
+    final logical rows."""
+    cube, table = small_cube(rng)
+    state = {i: table[i] for i in range(300)}
+    for step in range(6):
+        up = rng.integers(0, 340, 20)           # mix of existing + new ids
+        rows = rng.normal(size=(20, DIM)).astype(np.float32)
+        dels = rng.integers(0, 340, 4)
+        cube.apply_delta(0, up, rows, delete_ids=dels)
+        for i, r in zip(up, rows):
+            state[int(i)] = r
+        for i in dels:
+            state.pop(int(i), None)
+        if step == 3:
+            cube.compact()
+    live = np.array(sorted(state), np.int64)
+    want = np.stack([state[int(i)] for i in live])
+    np.testing.assert_array_equal(cube.lookup(0, live), want)
+    rebuilt = ParameterCube(n_servers=4, replication=2, block_rows=64)
+    rebuilt.load_table(0, want, raw_ids=live)
+    np.testing.assert_array_equal(rebuilt.lookup(0, live),
+                                  cube.lookup(0, live))
+    dead = sorted(set(range(340)) - set(state))
+    for i in dead[:3]:
+        with pytest.raises(KeyError):
+            cube.lookup(0, np.array([i]))
+        assert not cube.contains(0, np.array([i]))[0]
+
+
+def test_apply_delta_publishes_atomic_version_bump(rng):
+    cube, _ = small_cube(rng)
+    cube.lookup(0, np.array([0]))               # fold → version 1
+    v0 = cube.version
+    v1 = cube.apply_delta(0, np.array([1]),
+                          np.full((1, DIM), 9.0, np.float32))
+    assert v1 == v0 + 1 == cube.version
+    assert cube.metrics.deltas_applied == 1
+    assert cube.metrics.rows_upserted == 1
+
+
+def test_pinned_reader_keeps_its_snapshot_across_delta_and_compact(rng):
+    cube, table = small_cube(rng)
+    ids = np.arange(50)
+    with cube.pin() as pv:
+        cube.apply_delta(0, ids, np.full((50, DIM), 7.0, np.float32),
+                         delete_ids=np.array([60]))
+        cube.compact()
+        # the pinned reader still sees the pre-delta rows AND the deleted id
+        np.testing.assert_array_equal(
+            cube.lookup(0, ids, version=pv), table[ids])
+        np.testing.assert_array_equal(
+            cube.lookup(0, np.array([60]), version=pv), table[60:61])
+        freed_during = cube.metrics.blocks_freed
+        assert freed_during == 0        # blocks survive while pinned
+    # unpinned: new state, and the old blocks are now reclaimable — freeing
+    # is writer-driven (reader unpin must never touch the filesystem)
+    np.testing.assert_array_equal(
+        cube.lookup(0, ids), np.full((50, DIM), 7.0, np.float32))
+    with pytest.raises(KeyError):
+        cube.lookup(0, np.array([60]))
+    assert cube.metrics.blocks_freed == 0
+    cube.reclaim()
+    assert cube.metrics.blocks_freed > 0
+
+
+def test_delta_failover_serves_updated_rows(rng):
+    """Overlay blocks replicate like base blocks: a dead primary reroutes
+    delta-updated signatures to replicas holding the NEW rows."""
+    cube, _ = small_cube(rng)
+    ids = np.arange(40)
+    new = np.full((40, DIM), 3.25, np.float32)
+    cube.apply_delta(0, ids, new)
+    for sid in range(cube.n_servers):
+        cube.kill_server(sid)
+        np.testing.assert_array_equal(cube.lookup(0, ids), new)
+        cube.revive_server(sid)
+
+
+def test_compact_folds_overlays_and_frees_blocks(rng):
+    cube, table = small_cube(rng)
+    cube.lookup(0, np.array([0]))
+    for _ in range(5):
+        ids = rng.integers(0, 300, 16)
+        cube.apply_delta(0, ids, rng.normal(size=(16, DIM)).astype(np.float32))
+    assert cube.overlay_blocks > 0
+    before = cube.lookup(0, np.arange(300))
+    blocks_before = sum(len(s.blocks) for s in cube.servers)
+    cube.compact()
+    assert cube.overlay_blocks == 0
+    assert cube.metrics.compactions == 1
+    assert cube.metrics.blocks_freed > 0
+    np.testing.assert_array_equal(cube.lookup(0, np.arange(300)), before)
+    # the compacted index must reference only live blocks — failover sweep
+    for sid in range(cube.n_servers):
+        cube.kill_server(sid)
+        np.testing.assert_array_equal(cube.lookup(0, np.arange(300)), before)
+        cube.revive_server(sid)
+    assert blocks_before < sum(len(s.blocks) for s in cube.servers)
+
+
+def test_compact_preserves_multiple_group_dims(rng):
+    cube = ParameterCube(n_servers=3, replication=2, block_rows=32)
+    t8 = rng.normal(size=(100, 8)).astype(np.float32)
+    t16 = rng.normal(size=(100, 16)).astype(np.float32)
+    cube.load_table(0, t8)
+    cube.load_table(1, t16)
+    cube.apply_delta(1, np.array([5]), np.full((1, 16), 2.0, np.float32))
+    cube.compact()
+    np.testing.assert_array_equal(cube.lookup(0, np.arange(100)), t8)
+    np.testing.assert_array_equal(cube.lookup(1, np.array([5])),
+                                  np.full((1, 16), 2.0))
+    t16[5] = 2.0
+    np.testing.assert_array_equal(cube.lookup(1, np.arange(100)), t16)
+
+
+def test_apply_delta_rejects_shape_mismatch(rng):
+    cube, _ = small_cube(rng)
+    with pytest.raises(ValueError):
+        cube.apply_delta(0, np.array([1]), np.zeros((1, DIM + 1), np.float32))
+    with pytest.raises(ValueError):
+        cube.apply_delta(0, np.array([1, 2]), np.zeros((1, DIM), np.float32))
+
+
+# ------------------------------------------------------- cache coherence
+
+def test_cube_cache_targeted_invalidation_keeps_lfu_counts():
+    c = TwoTierLFUCache(mem_capacity=4, disk_capacity=8)
+    c.put_many([1, 2, 3], ["a", "b", "c"])
+    for _ in range(3):
+        c.get_many([1, 2, 3])
+    counts_before = dict(c.mem.counts)
+    assert c.invalidate_keys([2, 99]) == 1
+    assert c.get(2) is None                      # invalidated
+    assert c.get(1) == "a" and c.get(3) == "c"   # untouched survive
+    assert c.mem.counts[2] >= counts_before[2]   # popularity stats persist
+    assert c.invalidations == 1
+
+
+def test_cube_cache_generation_bump_lazily_drops_everything():
+    c = TwoTierLFUCache(mem_capacity=2, disk_capacity=4)
+    for k in range(5):
+        c.put(k, k * 10)
+    c.bump_generation()
+    assert all(c.get(k) is None for k in range(5))
+    c.put(7, 70)                                 # post-bump entries are fresh
+    assert c.get(7) == 70
+
+
+def test_query_cache_item_invalidation_targeted():
+    qc = QueryCache(capacity=16, window_s=1e9)
+    qc.put_many(["u1", "u2", "u1"], [1, 1, 2], [0.1, 0.2, 0.3], now=0.0)
+    assert qc.invalidate_items([1]) == 2
+    assert qc.get("u1", 1, now=1.0) is None
+    assert qc.get("u2", 1, now=1.0) is None
+    assert qc.get("u1", 2, now=1.0) == 0.3       # untouched item survives
+    assert qc.stats.invalidations == 2
+
+
+def test_query_cache_model_version_bump_fixes_hot_swap_staleness():
+    """The latent bug: a generation swap used to keep serving the OLD
+    model's scores for up to window_s. Version-stamped entries fix it."""
+    qc = QueryCache(capacity=16, window_s=1e9)
+    qc.put("u", "i", 0.9, now=0.0)
+    assert qc.get("u", "i", now=1.0) == 0.9
+    qc.bump_model_version()
+    assert qc.get("u", "i", now=1.0) is None     # old-generation score gone
+    assert qc.stats.stale_version == 1
+    qc.put("u", "i", 0.4, now=2.0)
+    assert qc.get("u", "i", now=2.5) == 0.4
+
+
+def test_query_cache_get_many_respects_version_floor():
+    qc = QueryCache(capacity=16, window_s=1e9)
+    qc.put_many(["a", "b"], [1, 2], [0.5, 0.6], now=0.0)
+    qc.bump_model_version()
+    qc.put("c", 3, 0.7, now=0.0)
+    assert qc.get_many(["a", "b", "c"], [1, 2, 3], now=1.0) == \
+        [None, None, 0.7]
+
+
+# ------------------------------------------------------------- HBM head
+
+def test_hbm_head_promote_lookup_update_demote(rng):
+    head = HBMHead(n_slots=8, dim=DIM)
+    ids = np.array([3, 5, 9])
+    rows = rng.normal(size=(3, DIM)).astype(np.float32)
+    assert head.promote(0, ids, rows) == 3
+    got, found = head.lookup(0, np.array([3, 5, 9, 11]))
+    assert found.tolist() == [True, True, True, False]
+    np.testing.assert_allclose(got[:3], rows, rtol=1e-6)
+    assert (got[3] == 0).all()
+    # in-place update touches only resident sigs
+    upd = np.full((2, DIM), 4.0, np.float32)
+    assert head.update_rows(0, np.array([5, 77]), np.stack([upd[0], upd[1]])) == 1
+    got, _ = head.lookup(0, np.array([5]))
+    np.testing.assert_array_equal(got[0], upd[0])
+    # demote frees the slot for reuse
+    assert head.demote(0, np.array([3])) == 1
+    assert not head.resident(0, np.array([3]))[0]
+    assert head.promote(0, np.array([21]), rows[:1]) == 1
+    assert head.resident_count == 3
+
+
+def test_hbm_head_capacity_bounded(rng):
+    head = HBMHead(n_slots=4, dim=DIM)
+    rows = rng.normal(size=(6, DIM)).astype(np.float32)
+    assert head.promote(0, np.arange(6), rows) == 4   # budget-limited
+    assert head.resident_count == 4
+
+
+def test_hbm_head_groups_do_not_collide():
+    head = HBMHead(n_slots=8, dim=DIM)
+    head.promote(0, np.array([1]), np.full((1, DIM), 1.0, np.float32))
+    assert head.resident(0, np.array([1]))[0]
+    assert not head.resident(1, np.array([1]))[0]     # sig includes group
+
+
+# --------------------------------------------------------------- policy
+
+def test_policy_fills_free_slots_then_applies_hysteresis():
+    pol = PromoteDemotePolicy(capacity=2, min_count=1, hysteresis=2.0)
+    plan = pol.plan({1: 10, 2: 8, 3: 1}, resident=set())
+    assert plan.promote == [1, 2] and plan.demote == []
+    # full head: 3 (count 9) displaces 2 (count 4) only at ≥2× heat
+    plan = pol.plan({1: 10, 2: 4, 3: 9}, resident={1, 2})
+    assert plan.promote == [3] and plan.demote == [2]
+    plan = pol.plan({1: 10, 2: 6, 3: 9}, resident={1, 2})
+    assert plan.empty                       # 9 < 2×6 → hysteresis holds 2
+
+
+def test_policy_min_count_filters_cold_keys():
+    pol = PromoteDemotePolicy(capacity=4, min_count=3)
+    plan = pol.plan({1: 1, 2: 2, 3: 5}, resident=set())
+    assert plan.promote == [3]
+
+
+# -------------------------------------------------------------- manager
+
+def make_stack(rng, head_slots=16):
+    cube, table = small_cube(rng)
+    cc = TwoTierLFUCache(8, 32)
+    qc = QueryCache(capacity=64, window_s=1e9)
+    head = HBMHead(n_slots=head_slots, dim=DIM)
+    mgr = UpdateManager(cube, cube_cache=cc, query_cache=qc, head=head,
+                        policy=PromoteDemotePolicy(capacity=head_slots,
+                                                   min_count=2),
+                        compact_after_blocks=4)
+    return mgr, cube, cc, qc, head, table
+
+
+def test_manager_apply_coheres_every_layer(rng):
+    mgr, cube, cc, qc, head, table = make_stack(rng)
+    ids = np.array([1, 2, 3, 4])
+    cc.put_many([int(i) for i in ids], [table[i][None] for i in ids])
+    qc.put_many([f"u{i}" for i in ids], [int(i) for i in ids],
+                [0.5] * 4, now=0.0)
+    head.promote(0, ids, table[ids])
+    new = np.full((2, DIM), 6.5, np.float32)
+    v = mgr.apply(DeltaBatch(0, [GroupDelta(
+        group=0, ids=np.array([1, 2]), rows=new,
+        delete_ids=np.array([3]))]))
+    assert v == 0 and mgr.stats.last_version == 0
+    np.testing.assert_array_equal(cube.lookup(0, np.array([1, 2])), new)
+    with pytest.raises(KeyError):
+        cube.lookup(0, np.array([3]))
+    got, _ = head.lookup(0, np.array([1, 2]))     # head updated in place
+    np.testing.assert_array_equal(got, new)
+    assert not head.resident(0, np.array([3]))[0]  # delete demoted
+    assert cc.get_many([1, 2, 3]) == [None, None, None]
+    assert cc.get(4) is not None                   # untouched key survives
+    assert qc.get("u1", 1, now=0.1) is None
+    assert qc.get("u4", 4, now=0.1) == 0.5
+
+
+def test_manager_skips_replayed_versions(rng):
+    mgr, cube, *_ = make_stack(rng)
+    b = DeltaBatch(3, [GroupDelta(group=0, ids=np.array([1]),
+                                  rows=np.full((1, DIM), 1.0, np.float32))])
+    assert mgr.apply(b) == 3
+    cube_v = cube.version
+    assert mgr.apply(b) == 3                       # replay → skipped
+    assert mgr.stats.deltas_skipped == 1
+    assert cube.version == cube_v                  # no spurious bump
+
+
+def test_manager_rebalance_promotes_hot_tail_rows(rng):
+    mgr, cube, cc, qc, head, table = make_stack(rng, head_slots=4)
+    hot = [10, 11, 12]
+    rows = cube.lookup(0, np.asarray(hot))
+    cc.put_many(hot, [rows[i][None] for i in range(3)])
+    for _ in range(4):
+        cc.get_many(hot)
+    p, d = mgr.rebalance(0)
+    assert p == 3 and d == 0
+    got, found = head.lookup(0, np.asarray(hot))
+    assert found.all()
+    np.testing.assert_array_equal(got, table[hot])
+
+
+def test_manager_maybe_compact_threshold(rng):
+    mgr, cube, *_ = make_stack(rng)
+    assert not mgr.maybe_compact()
+    for v in range(2):
+        mgr.apply(DeltaBatch(v, [GroupDelta(
+            group=0, ids=np.arange(8),
+            rows=rng.normal(size=(8, DIM)).astype(np.float32))]))
+    assert cube.overlay_blocks >= 4
+    assert mgr.maybe_compact()
+    assert cube.overlay_blocks == 0
+
+
+def test_manager_generation_swap_invalidates_scores_not_rows(rng):
+    """A dense-generation swap stales every cached SCORE but leaves the
+    warm cube-row cache alone (rows only change via deltas, which
+    invalidate key-by-key); the sparse-tier-swapping deployment opts in."""
+    mgr, cube, cc, qc, *_ = make_stack(rng)
+    cc.put(1, "x")
+    qc.put("u", 1, 0.9, now=0.0)
+    mgr.on_generation_swap()
+    assert cc.get(1) == "x"                # cube rows survive the swap
+    assert qc.get("u", 1, now=0.1) is None
+    assert mgr.stats.generation_swaps == 1
+    mgr.swap_invalidates_cube_cache = True  # sparse tier swaps too
+    mgr.on_generation_swap()
+    assert cc.get(1) is None
+
+
+def test_double_compact_under_pin_does_not_double_count_freed(rng):
+    """A second compact while a pin defers the first one's garbage must not
+    re-queue the same blocks — blocks_freed would double-count."""
+    cube, table = small_cube(rng, n=64, block_rows=16, replication=1,
+                             n_servers=2)
+    cube.lookup(0, np.array([0]))
+    total_blocks = sum(len(s.blocks) for s in cube.servers)
+    with cube.pin():
+        cube.apply_delta(0, np.array([1]),
+                         np.full((1, DIM), 1.0, np.float32))
+        cube.compact()
+        cube.compact()                     # first compact's garbage pinned
+        total_blocks = sum(
+            1 for s in cube.servers for b in s.blocks
+            if type(b).__name__ == "_Block")
+    cube.reclaim()
+    # every retired block freed exactly once: freed + live == all slots
+    live = sum(1 for s in cube.servers for b in s.blocks
+               if type(b).__name__ == "_Block")
+    slots = sum(len(s.blocks) for s in cube.servers)
+    assert cube.metrics.blocks_freed + live == slots
+    np.testing.assert_array_equal(cube.lookup(0, np.array([1])),
+                                  np.full((1, DIM), 1.0))
+
+
+# -------------------------------------------------------------- watcher
+
+def test_watcher_applies_in_version_order(tmp_path, rng):
+    applied = []
+    w = DeltaWatcher(str(tmp_path), lambda b: applied.append(b.version),
+                     poll_s=0.01)
+    em = DeltaEmitter(str(tmp_path))
+    for _ in range(3):
+        em.emit([GroupDelta(group=0, ids=np.array([1]),
+                            rows=np.zeros((1, DIM), np.float32))])
+    assert w.check_once()
+    assert applied == [0, 1, 2]
+    assert w.applied_version == 2
+    assert not w.check_once()                      # idempotent when drained
+
+
+def test_watcher_retries_failed_apply_preserving_order(tmp_path):
+    calls = []
+
+    def flaky(batch):
+        calls.append(batch.version)
+        if len(calls) == 1:
+            raise RuntimeError("transient load failure")
+
+    em = DeltaEmitter(str(tmp_path))
+    for _ in range(2):
+        em.emit([GroupDelta(group=0, ids=np.array([1]),
+                            rows=np.zeros((1, DIM), np.float32))])
+    w = DeltaWatcher(str(tmp_path), flaky, poll_s=0.01)
+    with pytest.raises(RuntimeError):
+        w.check_once()
+    assert w.applied_version == -1                 # nothing marked applied
+    assert w.check_once()
+    assert calls == [0, 0, 1]                      # retried v0, then v1
+    assert w.applied_version == 1
+
+
+def test_merged_lfu_counts_do_not_double_count_cold_keys():
+    """A probe increments BOTH tier counters for non-mem-resident keys
+    (mem miss + disk probe) but only one for mem-hot keys; the merge must
+    take the max per key, or cold keys outrank genuinely hotter ones."""
+    from repro.update.policy import merged_lfu_counts
+    c = TwoTierLFUCache(mem_capacity=1, disk_capacity=4)
+    c.put(1, "hot")                 # mem-resident
+    c.put(2, "cold")                # pushes into tiers; 2 may evict 1 — re-pin
+    c.put(1, "hot")
+    for _ in range(10):
+        c.get(1)                    # mem hits: only mem counter moves
+    for _ in range(8):
+        c.get(99)                   # absent: BOTH counters move
+    counts = merged_lfu_counts(c)
+    assert counts[1] > counts[99]   # 10 real accesses outrank 8
+
+
+def test_manager_rejects_malformed_batch_before_applying_any_group(rng):
+    """Validation runs over ALL groups before ANY applies: a bad group must
+    not leave earlier groups half-applied (the watcher would re-apply them
+    on every retry — duplicate overlays, double-counted stats)."""
+    mgr, cube, cc, qc, head, table = make_stack(rng)
+    cube.lookup(0, np.array([0]))
+    v = cube.version
+    bad = DeltaBatch(0, [
+        GroupDelta(group=0, ids=np.array([1]),
+                   rows=np.full((1, DIM), 1.0, np.float32)),
+        GroupDelta(group=0, ids=np.array([2]),
+                   rows=np.zeros((1, DIM + 3), np.float32)),   # wrong dim
+    ])
+    with pytest.raises(ValueError):
+        mgr.apply(bad)
+    assert cube.version == v                       # no group landed
+    assert mgr.stats.last_version == -1            # retry still possible
+    np.testing.assert_array_equal(cube.lookup(0, np.array([1])),
+                                  table[1:2])      # group 1 NOT applied
+
+
+def test_manager_delete_keeps_policy_resident_view_in_sync(rng):
+    """A delta-delete demotes the head slot AND the policy's membership
+    view — a drifted resident set undercounts free slots and wastes
+    hysteresis evictions on keys that already left."""
+    mgr, cube, cc, qc, head, table = make_stack(rng, head_slots=4)
+    hot = [10, 11]
+    rows = cube.lookup(0, np.asarray(hot))
+    cc.put_many(hot, [rows[i][None] for i in range(2)])
+    for _ in range(4):
+        cc.get_many(hot)
+    mgr.rebalance(0)
+    assert mgr._resident_ids[0] == {10, 11}
+    mgr.apply(DeltaBatch(0, [GroupDelta(group=0,
+                                        delete_ids=np.array([10]))]))
+    assert 10 not in mgr._resident_ids[0]
+    assert not head.resident(0, np.array([10]))[0]
+
+
+def test_query_cache_reverse_indexes_do_not_leak_empty_sets():
+    """Capacity eviction must remove emptied reverse-index entries — a
+    long-running service over a large catalog would otherwise hold one
+    empty set per distinct user/item ever cached."""
+    qc = QueryCache(capacity=2, window_s=1e9)
+    for i in range(50):
+        qc.put(f"u{i}", f"i{i}", 0.5, now=0.0)
+    assert len(qc) <= 2
+    assert len(qc._by_user) <= 2 and len(qc._by_item) <= 2
+    qc.user_feedback(f"u{49}")
+    assert f"i{49}" not in qc._by_item
+
+
+def test_compact_with_everything_deleted_compacts_to_empty(rng):
+    """Tombstoning every row and compacting must yield an empty cube, not
+    crash the update thread (the watcher would back off retrying forever,
+    stalling compaction AND garbage reclamation)."""
+    cube = ParameterCube(n_servers=2, replication=1, block_rows=8)
+    cube.load_table(0, rng.normal(size=(16, DIM)).astype(np.float32))
+    cube.lookup(0, np.arange(16))
+    cube.apply_delta(0, delete_ids=np.arange(16))
+    cube.compact()                        # must not raise
+    cube.reclaim()
+    assert not cube.contains(0, np.arange(16)).any()
+    with pytest.raises(KeyError):
+        cube.lookup(0, np.array([0]))
+    # a fresh cube (never loaded) compacts too
+    empty = ParameterCube(n_servers=2, replication=1)
+    empty.compact()
+    # and the emptied cube accepts new deltas afterwards
+    cube.apply_delta(0, np.array([3]), np.full((1, DIM), 2.0, np.float32))
+    np.testing.assert_array_equal(cube.lookup(0, np.array([3])),
+                                  np.full((1, DIM), 2.0))
+
+
+def test_manager_touched_since_tracks_delta_key_spans(rng):
+    """The touched-key log behind the serving ops' targeted cache-aside
+    guards: covers versions since a pin, empty when nothing landed, None
+    once the log no longer reaches back far enough."""
+    mgr, cube, *_ = make_stack(rng)
+    cube.lookup(0, np.array([0]))
+    v0 = cube.version
+    mgr.apply(DeltaBatch(0, [GroupDelta(
+        group=0, ids=np.array([1, 2]),
+        rows=np.zeros((2, DIM), np.float32))]))
+    mgr.apply(DeltaBatch(1, [GroupDelta(
+        group=0, ids=np.array([5]),
+        rows=np.zeros((1, DIM), np.float32))]))
+    keys, items = mgr.touched_since(v0)
+    assert keys == {1, 2, 5} and items == {1, 2, 5}
+    keys2, items2 = mgr.touched_since(cube.version)
+    assert keys2 == set() and items2 == set()
+    mgr._touched_floor = v0 + 1            # simulate log truncation
+    assert mgr.touched_since(v0) is None
+
+
+def test_touched_log_visible_before_invalidation_runs(rng):
+    """The guard-ordering contract: by the time a delta's cache
+    invalidation executes (the window a racing serving batch can slip its
+    stale insert into), the touched-key log already covers that delta —
+    touched_since may only ever over-report, never under-report."""
+    mgr, cube, cc, qc, head, table = make_stack(rng)
+    cube.lookup(0, np.array([0]))
+    v0 = cube.version
+    seen = {}
+    real = cc.invalidate_keys
+
+    def probe(keys):
+        seen["touched"] = mgr.touched_since(v0)
+        return real(keys)
+
+    cc.invalidate_keys = probe
+    try:
+        mgr.apply(DeltaBatch(0, [GroupDelta(
+            group=0, ids=np.array([1]),
+            rows=np.zeros((1, DIM), np.float32))]))
+    finally:
+        cc.invalidate_keys = real
+    assert seen["touched"] is not None and 1 in seen["touched"][0]
+
+
+def test_watcher_prunes_applied_deltas_when_sole_consumer(tmp_path):
+    em = DeltaEmitter(str(tmp_path))
+    for _ in range(3):
+        em.emit([GroupDelta(group=0, ids=np.array([1]),
+                            rows=np.zeros((1, DIM), np.float32))])
+    w = DeltaWatcher(str(tmp_path), lambda b: b.version, poll_s=0.01,
+                     prune_applied=True)
+    assert w.check_once()
+    assert w.applied_version == 2
+    assert not any(d.startswith("delta_") for d in os.listdir(tmp_path))
+    # new deltas still flow after pruning
+    em.emit([GroupDelta(group=0, ids=np.array([2]),
+                        rows=np.zeros((1, DIM), np.float32))])
+    assert w.check_once() and w.applied_version == 3
+
+
+def test_block_slots_reused_across_compaction_cycles(rng):
+    """A perpetual delta+compact cadence must not grow the per-server
+    block lists without bound: reclaimed slots are reused."""
+    cube, _ = small_cube(rng, n=128, block_rows=32, replication=1,
+                         n_servers=2)
+    cube.lookup(0, np.array([0]))
+    for k in range(2):                     # reach steady state
+        cube.apply_delta(0, np.arange(8),
+                         np.full((8, DIM), float(k), np.float32))
+        cube.compact()
+    steady = sum(len(s.blocks) for s in cube.servers)
+    for k in range(5):
+        cube.apply_delta(0, np.arange(8),
+                         np.full((8, DIM), 10.0 + k, np.float32))
+        cube.compact()
+    assert sum(len(s.blocks) for s in cube.servers) <= steady
+    np.testing.assert_array_equal(cube.lookup(0, np.arange(8)),
+                                  np.full((8, DIM), 14.0, np.float32))
+
+
+def test_disk_promote_does_not_resurrect_raced_invalidation():
+    """A disk hit racing invalidate_keys must not re-insert the entry into
+    the memory tier: the transient read is fine (equivalent to reading just
+    before the delta), a resurrected entry would serve stale forever."""
+    c = TwoTierLFUCache(mem_capacity=1, disk_capacity=4)
+    c.put(1, "old")
+    c.put(2, "x")                  # evicts 1 from mem → 1 lives on disk
+    assert 1 in c.disk.data and 1 not in c.mem.data
+    orig = c.disk.get
+
+    def racy_get(key):
+        v = orig(key)
+        if v is not None and key == 1:
+            c.invalidate_keys([1])         # update thread wins the race
+        return v
+
+    c.disk.get = racy_get
+    try:
+        assert c.get(1) == "old"           # transient read still served
+    finally:
+        c.disk.get = orig
+    assert c.get(1) is None                # NOT resurrected
+    # same contract through the batched path
+    c.put(1, "old2")
+    c.put(3, "y")
+    if 1 in c.disk.data:
+        c.disk.get = racy_get
+        try:
+            got = c.get_many([1])
+        finally:
+            c.disk.get = orig
+        assert c.get(1) is None
+
+
+def test_query_cache_link_survives_raced_item_invalidation():
+    """put racing invalidate_items must leave the entry REACHABLE by the
+    next targeted invalidation (an orphaned reverse-index set would let
+    the stale score hide until TTL)."""
+    qc = QueryCache(capacity=8, window_s=1e9)
+    qc.put("u0", "i", 0.1, now=0.0)        # install _by_item["i"]
+
+    class RacyByItem(dict):
+        armed = True
+
+        def setdefault(self, key, default=None):
+            s = super().setdefault(key, default)
+            if RacyByItem.armed and key == "i":
+                RacyByItem.armed = False
+                qc.invalidate_items(["i"])  # pops the set we just got
+            return s
+
+    qc._by_item = RacyByItem(qc._by_item)
+    qc.put("u1", "i", 0.2, now=0.0)        # insert races the invalidation
+    assert qc.get("u1", "i", now=0.1) == 0.2
+    # the entry must be reachable by targeted invalidation afterwards
+    assert qc.invalidate_items(["i"]) >= 1
+    assert qc.get("u1", "i", now=0.2) is None
