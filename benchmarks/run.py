@@ -62,6 +62,20 @@ def main() -> None:
            derived="saving={:.1f}% (paper 73.7%)".format(
                t5["instance_saving_pct"]))
 
+    from benchmarks import scenario_bench
+
+    t0 = time.time()
+    dnn, _ = scenario_bench.train_pruning_dnn(
+        n_samples=300 if quick else 800, steps=400 if quick else 2000)
+    sc_cells = [scenario_bench.run_cell(dnn, mult, shed,
+                                        1500 if quick else 4000, seed=0)
+                for mult, shed in ((1.0, True), (2.0, True))]
+    sc1 = sc_cells[0]["scenarios"][scenario_bench.PRIMARY]
+    sc2 = sc_cells[1]["scenarios"][scenario_bench.PRIMARY]
+    record("scenario_mixed", sc_cells, us=(time.time() - t0) * 1e6,
+           derived="primary p99 2x/1x={:.2f} (gate <=1.5)".format(
+               sc2["p99_ms"] / max(sc1["p99_ms"], 1e-9)))
+
     from benchmarks import update_bench
 
     t0 = time.time()

@@ -1,0 +1,285 @@
+"""Mixed-scenario closed-loop serving benchmark (DESIGN.md §7 + paper §4
+multi-tenant extension / §8.6 Service E).
+
+Drives THREE scenario branches — a primary DIN-style re-rank (priority 0),
+a heavier DIEN-style sequential re-rank and a cheap MIND-style retrieval
+(both priority 1) — behind the quota-aware multi-tenant fanout under
+time-varying traffic at 1× and 2× of the PRIMARY branch's sustainable
+capacity, with the serving loop closed exactly like benchmarks/sedp_bench:
+
+  * bounded channels, per-branch overflow shedding,
+  * per-branch live quota (queue depth + utilization → PruningDNN cutoff),
+  * the FANOUT quota gate: when the primary's queue saturates, priority-1
+    scenarios stop receiving clones — CTR keeps serving while FR/CMT ride
+    out the spike (§8.6).
+
+Gate (the existing shed-ON p99 gate, applied to the mixed-scenario loop):
+at 2× capacity with shedding ON the PRIMARY scenario stays within 1.5× of
+its 1× p99 and ≥90% of its 1× goodput; shedding OFF at the same load blows
+its p99 up. A --live cell additionally smokes the REAL MultiScenarioService
+(jitted DIN + DIEN + MIND on one substrate) on the virtual clock.
+
+Usage:
+    PYTHONPATH=src python benchmarks/scenario_bench.py            # full run
+    PYTHONPATH=src python benchmarks/scenario_bench.py --smoke    # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.core.executors import SimExecutor
+from repro.core.irm.shedding import (OnlineShedder, QuotaController,
+                                     train_pruning_dnn)
+from repro.core.multitenant import make_fanout_op
+from repro.core.sedp import SEDP, Event
+from repro.core.service_model import service_time_model
+from repro.data.synthetic import diurnal_burst_arrivals
+
+# ------------------------------------------------------------- cost model
+# (name, fanout priority, per-candidate seconds, parallelism)
+SCENARIOS = (
+    ("din", 0, 25e-6, 4),      # primary ranking objective
+    ("dien", 1, 30e-6, 6),     # heavier sequential ranker, secondary
+    ("mind", 1, 4e-6, 2),      # retrieval: cheap per candidate
+)
+PRIMARY = "din"
+INGRESS_BASE_S = 0.01e-3
+MAX_QUEUE = 192
+UTIL_TARGET = 0.70          # capacity = rate loading the PRIMARY to 70%
+MIN_QUOTA = 0.5             # fanout gate: below this, priority-0 only
+
+MEAN_CANDS_LOG = np.log(80.0)
+CANDS_SIGMA = 0.4
+MIN_KEEP = 12
+
+
+def mean_candidates(seed: int = 7, n: int = 4000) -> float:
+    rng = np.random.default_rng(seed)
+    return float(np.clip(rng.lognormal(MEAN_CANDS_LOG, CANDS_SIGMA, n),
+                         16, 240).mean())
+
+
+def sustainable_qps() -> float:
+    per_cand = dict((n, c) for n, _, c, _ in SCENARIOS)[PRIMARY]
+    par = dict((n, p) for n, _, _, p in SCENARIOS)[PRIMARY]
+    return par / (per_cand * mean_candidates()) * UTIL_TARGET
+
+
+def make_workload(n_events: int, mult: float, seed: int
+                  ) -> list[tuple[float, Event]]:
+    rng = np.random.default_rng(seed)
+    peak_mult, burst_rate, burst_mult, burst_dur = 1.35, 0.25, 2.2, 0.35
+    diurnal_avg = 1.0 + (peak_mult - 1.0) * 0.5
+    burst_avg = 1.0 + burst_rate * burst_dur * (burst_mult - 1.0)
+    base = mult * sustainable_qps() / (diurnal_avg * burst_avg)
+    times = diurnal_burst_arrivals(
+        rng, n_events, base, peak_mult=peak_mult, day_s=40.0, start_frac=0.5,
+        burst_rate_per_s=burst_rate, burst_mult=burst_mult,
+        burst_dur_s=burst_dur)
+    n_cands = np.clip(rng.lognormal(MEAN_CANDS_LOG, CANDS_SIGMA, n_events),
+                      16, 240).astype(int)
+    arrivals = []
+    for i in range(n_events):
+        cands = [(int(c), float(s)) for c, s in
+                 zip(rng.integers(0, 1 << 20, n_cands[i]),
+                     rng.random(n_cands[i]))]
+        arrivals.append((float(times[i]), Event(
+            payload={"user": i, "item": i, "candidates": cands})))
+    return arrivals
+
+
+def build_mixed(dnn, shed: bool):
+    """ingress → fanout → per-scenario [shed →] model → respond."""
+    g = SEDP()
+    g.add_stage("ingress", lambda b, c: b, batch_size=16, parallelism=2,
+                sim_base_s=INGRESS_BASE_S)
+    g.add_stage("respond", lambda b, c: b, batch_size=32, parallelism=2,
+                sim_base_s=0.01e-3)
+    shedders = {}
+    entries, priorities = [], {}
+    for name, prio, per_cand, par in SCENARIOS:
+        model_stage = f"{name}.model"
+
+        def make_model_op(scenario=name, cost=per_cand):
+            def op(batch, ctx):
+                for ev in batch:
+                    n = len(ev.payload["candidates"])
+                    ev.meta["cost_s"] = cost * n
+                    ev.payload["scenario"] = scenario
+                    ev.payload["topk"] = sorted(
+                        ev.payload["candidates"],
+                        key=lambda c: -c[1])[:MIN_KEEP]
+                return batch
+            return op
+
+        if shed:
+            sh = OnlineShedder(
+                dnn, min_keep=MIN_KEEP, downstream=model_stage,
+                controller=QuotaController(model_stage, depth_capacity=48.0))
+            shedders[name] = sh
+            g.add_stage(f"{name}.shed", sh.op, batch_size=16, parallelism=2,
+                        max_wait_s=0.5e-3, sim_base_s=0.02e-3)
+            entry = f"{name}.shed"
+        else:
+            entry = model_stage
+        g.add_stage(model_stage, make_model_op(), batch_size=8,
+                    parallelism=par, max_wait_s=2e-3, max_queue=MAX_QUEUE,
+                    sim_base_s=0.05e-3)
+        if shed:
+            g.add_edge(f"{name}.shed", model_stage)
+        g.add_edge(model_stage, "respond")
+        entries.append(entry)
+        priorities[entry] = prio
+    controller = (QuotaController(f"{PRIMARY}.model", depth_capacity=48.0)
+                  if shed else None)
+    fan = make_fanout_op(entries, priorities=priorities,
+                         quota_fn=controller.observe if controller else None,
+                         min_quota=MIN_QUOTA)
+    g.add_stage("fanout", fan, batch_size=16, parallelism=1,
+                sim_base_s=0.01e-3)
+    g.chain("ingress", "fanout")
+    for e in entries:
+        g.add_edge("fanout", e)
+    return g.compile(), shedders
+
+
+def run_cell(dnn, mult: float, shed: bool, n_events: int, seed: int) -> dict:
+    plan, shedders = build_mixed(dnn, shed)
+
+    def overflow(stage, ev, ctx):
+        sh = shedders.get(stage.split(".", 1)[0])
+        return sh.on_overflow(stage, ev, ctx) if sh else ev
+
+    ex = SimExecutor(plan, service_time=service_time_model,
+                     overflow_policy=overflow if shed else None)
+    arrivals = make_workload(n_events, mult, seed)
+    horizon = arrivals[-1][0]
+    rep = ex.run(arrivals)
+    by_scen: dict = {}
+    for ev in rep.results:
+        by_scen.setdefault(ev.payload.get("scenario", "?"), []).append(ev)
+    out = {"mult": mult, "shed": shed, "offered": rep.offered,
+           "completed": len(rep.results), "dropped": rep.dropped,
+           "scenarios": {}}
+    for name, evs in sorted(by_scen.items()):
+        lat = np.sort([ev.done_at - ev.born_at for ev in evs])
+        st = rep.stage_stats.get(f"{name}.model")
+        out["scenarios"][name] = {
+            "completed": len(evs),
+            "p50_ms": float(lat[int(0.50 * (len(lat) - 1))]) * 1e3,
+            "p99_ms": float(lat[int(0.99 * (len(lat) - 1))]) * 1e3,
+            "goodput_qps": len(evs) / max(horizon, 1e-9),
+            "max_depth": st.max_depth if st else 0,
+        }
+    if shed:
+        out["shed_candidate_ratio"] = {
+            n: s.state.shed_events / max(1, s.state.shed_events
+                                         + s.state.kept_events)
+            for n, s in shedders.items()}
+    return out
+
+
+def fmt(r: dict) -> str:
+    rows = []
+    for name, s in r["scenarios"].items():
+        rows.append(f"{name}: p99={s['p99_ms']:8.2f}ms "
+                    f"goodput={s['goodput_qps']:7.1f}qps "
+                    f"depth={s['max_depth']:4d}")
+    return (f"  {r['mult']:>3.1f}x shed={'on ' if r['shed'] else 'off'} "
+            + "  ".join(rows))
+
+
+def run_live_smoke(n_requests: int = 32) -> dict:
+    """The REAL 3-scenario service (jitted DIN + DIEN + MIND over one
+    substrate) end to end on the virtual clock."""
+    from repro.core.service import MultiScenarioService, MultiServiceConfig
+    svc = MultiScenarioService(MultiServiceConfig(seed=0, max_queue=128))
+    rep = svc.run(n_requests=n_requests, executor="sim", rate_qps=500.0)
+    by = {k: len(v) for k, v in svc.by_scenario(rep).items()}
+    assert set(by) == {s.name for s in svc.specs}, by
+    assert all(n > 0 for n in by.values()), by
+    assert len(svc.substrate.groups) == 2       # shared feature groups
+    return {"served": by, "groups": len(svc.substrate.groups),
+            "query_cache_hits": svc.query_cache.stats.hits,
+            "cube_cache_hit_ratio": svc.cube_cache.overall_hit_ratio}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--events", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-assert", action="store_true")
+    ap.add_argument("--no-live", action="store_true",
+                    help="skip the real-service smoke cell")
+    args = ap.parse_args()
+    n_events = args.events or (1500 if args.smoke else 6000)
+    train_kw = (dict(n_samples=300, steps=400) if args.smoke
+                else dict(n_samples=800, steps=2000))
+
+    print(f"primary ({PRIMARY}) sustainable capacity ≈ "
+          f"{sustainable_qps():.0f} qps (@ {UTIL_TARGET:.0%} target)")
+    dnn, mse = train_pruning_dnn(seed=args.seed, **train_kw)
+    print(f"pruning DNN trained (oracle-imitation mse={mse:.4f})")
+
+    cells = [(1.0, True), (2.0, True), (2.0, False)]
+    results = []
+    for mult, shed in cells:
+        r = run_cell(dnn, mult, shed, n_events, args.seed)
+        results.append(r)
+        print(fmt(r))
+
+    by = {(r["mult"], r["shed"]): r for r in results}
+    p1 = by[(1.0, True)]["scenarios"][PRIMARY]
+    p2 = by[(2.0, True)]["scenarios"][PRIMARY]
+    p2off = by[(2.0, False)]["scenarios"][PRIMARY]
+    summary = {
+        "primary_p99_ratio_2x_on_vs_1x": p2["p99_ms"] / max(p1["p99_ms"],
+                                                            1e-9),
+        "primary_goodput_2x_on_vs_1x": p2["goodput_qps"]
+        / max(p1["goodput_qps"], 1e-9),
+        "primary_p99_blowup_2x_off_vs_on": p2off["p99_ms"]
+        / max(p2["p99_ms"], 1e-9),
+        "secondary_completed_2x_on": {
+            n: by[(2.0, True)]["scenarios"].get(n, {}).get("completed", 0)
+            for n, prio, _, _ in SCENARIOS if prio > 0},
+    }
+    print("mixed-scenario summary: "
+          + " ".join(f"{k}={v:.2f}" if isinstance(v, float) else f"{k}={v}"
+                     for k, v in summary.items()))
+
+    live = None
+    if not args.no_live:
+        live = run_live_smoke(24 if args.smoke else 48)
+        print(f"live 3-scenario service: {live['served']} "
+              f"({live['groups']} shared feature groups)")
+
+    os.makedirs("artifacts/bench", exist_ok=True)
+    path = os.path.join("artifacts", "bench", "scenario_mixed.json")
+    with open(path, "w") as f:
+        json.dump({"config": {"n_events": n_events, "seed": args.seed,
+                              "smoke": args.smoke,
+                              "sustainable_qps": sustainable_qps()},
+                   "cells": results, "summary": summary, "live": live},
+                  f, indent=1)
+    print(f"wrote {path}")
+
+    if not args.no_assert:
+        # the existing shed-ON closed-loop gate, on the mixed-scenario DAG
+        assert summary["primary_p99_ratio_2x_on_vs_1x"] <= 1.5, \
+            f"2x-capacity primary p99 with shedding ON exceeds 1.5x: " \
+            f"{summary['primary_p99_ratio_2x_on_vs_1x']:.2f}"
+        assert summary["primary_goodput_2x_on_vs_1x"] >= 0.90, \
+            f"2x primary goodput below 90% of 1x: " \
+            f"{summary['primary_goodput_2x_on_vs_1x']:.2f}"
+        assert summary["primary_p99_blowup_2x_off_vs_on"] > 3.0, \
+            "shedding OFF at 2x did not blow up the primary p99"
+        print("mixed-scenario closed-loop assertions passed")
+
+
+if __name__ == "__main__":
+    main()

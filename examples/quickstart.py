@@ -3,6 +3,9 @@
 Builds an InferenceService (SEDP DAG + query cache + cube/cube-cache +
 online load shedding + a real jitted DIN ranking model), pushes requests
 through the async executor, and prints latency + cache effectiveness.
+InferenceService is the single-scenario wrapper over the scenario API
+(DESIGN.md §7) — see examples/serve_recsys.py's multi_scenario_demo for
+the N-scenario surface.
 
     PYTHONPATH=src python examples/quickstart.py
 """

@@ -16,8 +16,14 @@ directory while the full InferenceService keeps serving — each batch is
 applied to the cube behind an atomic version bump, resident HBM-head rows
 are scattered in place, and exactly the touched cache entries drop.
 
-    PYTHONPATH=src python examples/serve_recsys.py
+A third act is the SCENARIO API surface (DESIGN.md §7): the declaratively
+registered DIN re-rank + DIEN sequential scoring + MIND retrieval
+scenarios compiled into ONE SEDP DAG behind the quota-aware multi-tenant
+fanout, sharing one cube/cache/update substrate.
+
+    PYTHONPATH=src python examples/serve_recsys.py [--smoke]
 """
+import sys
 import tempfile
 import threading
 import time
@@ -38,7 +44,7 @@ from repro.serve.bucketing import (ShapeBucketer, bucketed_candidate_rerank,
                                    pow2_buckets, step_buckets)
 
 
-def main():
+def main(n_req: int = 48):
     rng = np.random.default_rng(0)
     tt_arch = registry.get("two-tower-retrieval")
     tt_cfg = tt_arch.reduced(tt_arch.config)
@@ -119,7 +125,6 @@ def main():
     # ---------------------------------------------------------- traffic
     # time-varying arrivals: diurnal ramp compressed to a 2 s "day" plus
     # Poisson flash-crowd bursts — the load the closed loop must absorb
-    n_req = 48
     times = synthetic.diurnal_burst_arrivals(
         rng, n_req, base_qps=600.0, peak_mult=2.0, day_s=2.0,
         burst_rate_per_s=1.0, burst_mult=3.0, burst_dur_s=0.1)
@@ -157,11 +162,12 @@ def main():
     print(f"sample top-3 recommendations: {top}")
 
 
-def live_update_demo():
+def live_update_demo(n_req: int = 48):
     """Uninterrupted serving under a continuous delta stream: the emitter
-    thread plays the training cluster, publishing a delta batch every few
-    milliseconds; the service's watcher thread applies each version while
-    AsyncExecutor workers serve traffic against the same cube."""
+    thread plays the training cluster, publishing a delta batch (sha256-
+    manifested, watcher-verified) every few milliseconds; the service's
+    watcher thread applies each version while AsyncExecutor workers serve
+    traffic against the same cube."""
     from repro.core.service import InferenceService, ServiceConfig
     from repro.update import DeltaEmitter, GroupDelta
 
@@ -186,7 +192,7 @@ def live_update_demo():
         trainer = threading.Thread(target=emit_loop, daemon=True)
         trainer.start()
         svc.start_updates()
-        report = svc.run(n_requests=48)
+        report = svc.run(n_requests=n_req)
         stop.set()
         trainer.join()
         svc.stop_updates()
@@ -208,6 +214,34 @@ def live_update_demo():
               f"in place, {st.promotions} promoted")
 
 
+def multi_scenario_demo(n_req: int = 32):
+    """The Model-as-a-Service surface: every registered scenario —
+    DIN re-rank, DIEN sequential scoring, MIND retrieval — compiled into
+    one SEDP DAG behind the quota-aware fanout, over ONE shared
+    cube/cache/update substrate (paper §4 multi-tenant + §8.6)."""
+    from repro.core.service import MultiScenarioService, MultiServiceConfig
+
+    svc = MultiScenarioService(MultiServiceConfig(seed=0))
+    print(f"multi-scenario DAG ({len(svc.specs)} scenarios): "
+          + " | ".join(svc.plan.order))
+    report = svc.run(n_requests=n_req)
+    by = svc.by_scenario(report)
+    print(f"served {len(report.results)} responses for {n_req} requests: "
+          + ", ".join(f"{k}={len(v)}" for k, v in sorted(by.items())))
+    print(f"  shared feature groups: {svc.substrate.groups} "
+          f"(one cube, {svc.cube.version} versions published)")
+    print(f"  cube cache: {100 * svc.cube_cache.overall_hit_ratio:.1f}% "
+          f"hit ratio across all scenarios")
+    for name in sorted(by):
+        resp = by[name][0].meta["response"]
+        what = (f"score={resp.score:.3f}" if resp.score is not None
+                else f"top-1={resp.topk[0] if resp.topk else None}")
+        print(f"  {name}: {what} (generation {resp.generation}, "
+              f"cube v{resp.cube_version})")
+
+
 if __name__ == "__main__":
-    main()
-    live_update_demo()
+    smoke = "--smoke" in sys.argv
+    main(n_req=24 if smoke else 48)
+    live_update_demo(n_req=24 if smoke else 48)
+    multi_scenario_demo(n_req=16 if smoke else 32)

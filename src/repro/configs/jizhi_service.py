@@ -4,8 +4,38 @@ onto the simulator's ServiceSpec and the servable ranking models.
 
 The dense DNN of each service is a DIN-family ranker; the sparse part
 (Table 1: 210-500 GB) lives in the parameter cube / sharded tables.
+
+This module is also the SCENARIO REGISTRY of the serving surface
+(DESIGN.md §7): each entry below is a declarative ScenarioSpec that
+``MultiScenarioService`` compiles into a pipeline on the shared substrate
+— the repro's analogue of the paper's twenty-plus production services
+behind one SEDP abstraction. Adding a scenario is one ``register_scenario``
+call, not a fork of core/service.py.
 """
 from repro.core.service_model import SERVICES, ServiceSpec  # noqa: F401
+from repro.serve.scenario import ScenarioSpec, register_scenario
+
+# ------------------------------------------------------ scenario registry
+# Priority 0 = the primary objective (never shed by the quota-aware
+# fanout); priority 1 scenarios ride out overload spikes (§8.6: CTR keeps
+# serving while FR/CMT shed first).
+DIN_RERANK = register_scenario(ScenarioSpec(
+    name="din-rerank", arch_id="din", pipeline="rerank", priority=0,
+    batch_size=16))
+DIEN_RERANK = register_scenario(ScenarioSpec(
+    name="dien-rerank", arch_id="dien", pipeline="rerank", priority=1,
+    batch_size=16))
+MIND_RETRIEVAL = register_scenario(ScenarioSpec(
+    name="mind-retrieval", arch_id="mind", pipeline="retrieval",
+    # retrieval responses are top-k lists, not (user, item) scores — the
+    # pointwise query cache does not apply
+    query_cache=False, priority=1, batch_size=8))
+TOWERS_RETRIEVAL = register_scenario(ScenarioSpec(
+    name="towers-retrieval", arch_id="two-tower-retrieval",
+    pipeline="retrieval", query_cache=False, priority=1, batch_size=8))
+
+#: The default multi-scenario serving surface (MultiScenarioService()).
+DEFAULT_SCENARIOS = ("din-rerank", "dien-rerank", "mind-retrieval")
 
 # Table 1 statistics (the paper's deployed services)
 TABLE_1 = {

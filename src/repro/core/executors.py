@@ -163,6 +163,12 @@ class AsyncExecutor:
             st.events += len(batch)
             st.batches += 1
             st.busy_s += time.monotonic() - t0
+            # ops may CREATE events (multi-tenant fanout clones) or DROP
+            # them (filters): the completion count must track the actual
+            # in-flight population or run() would return early / hang
+            if len(out) != len(batch):
+                with self._pending_lock:
+                    self._pending += len(out) - len(batch)
             self._emit(sp.name, out, gen)
         # a worker only exits once run() saw _pending == 0, so its batcher
         # buffer is necessarily empty here — nothing to drain

@@ -212,7 +212,7 @@ class OnlineShedder:
         MOVE from kept to shed here — counting them afresh would make
         shed+kept exceed the candidates that ever existed."""
         cands = (ev.payload.get("candidates")
-                 if isinstance(ev.payload, dict) else None)
+                 if hasattr(ev.payload, "get") else None)
         counted = bool(ev.meta.get("shed_accounted")) if cands else False
         if cands and len(cands) > self.min_keep:
             scores = np.array([c[1] for c in cands], np.float32)

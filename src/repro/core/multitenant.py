@@ -38,11 +38,20 @@ class TrafficSplit:
         return self._cum[-1][1]
 
 
-def make_dispatch_op(split: TrafficSplit) -> Callable:
-    """SEDP stage op routing each event to its test-group branch."""
+def _clone_payload(payload):
+    """Per-tenant payload clone via the payload's own ``copy()`` — a
+    shallow copy for plain dicts, an independent-extras clone for the
+    scenario API's typed Requests."""
+    return payload.copy()
+
+
+def make_dispatch_op(split: TrafficSplit, key: str = "user") -> Callable:
+    """SEDP stage op routing each event to its test-group branch.
+    ``key`` names the payload field carrying the stable A/B unit (the
+    scenario API's typed Requests use ``"user_id"``)."""
     def op(batch: list[Event], ctx):
         for ev in batch:
-            ev.route = split.assign(ev.payload["user"])
+            ev.route = split.assign(ev.payload[key])
             ev.meta["tenant"] = ev.route
         return batch
     return op
@@ -82,7 +91,7 @@ def make_fanout_op(targets: list[str],
                 ev.meta["tenants_shed"] = [t for t in targets
                                            if t not in live]
             for i, t in enumerate(live):
-                e = ev if i == 0 else Event(payload=dict(ev.payload),
+                e = ev if i == 0 else Event(payload=_clone_payload(ev.payload),
                                             req_id=ev.req_id,
                                             born_at=ev.born_at)
                 e.route = t

@@ -1,37 +1,35 @@
-"""InferenceService: the full JiZHI stack around a REAL JAX ranking model.
+"""The deployable JiZHI services, composed from the scenario API.
 
-This is the deployable composition (examples/serve_recsys.py): SEDP DAG +
-query cache + cube cache/cube + online load shedding + a jitted recsys model
-(DIN by default) as the DNN stage, with hot-loading via DoubleBuffer. The
-benchmark suite uses the calibrated service_model instead (deterministic
-latency); THIS class is the functional end-to-end path.
+Two surfaces (DESIGN.md §7):
+
+  * :class:`MultiScenarioService` — the Model-as-a-Service composition:
+    N declaratively-registered scenarios (DIN re-rank, DIEN sequential
+    scoring, MIND/two-tower retrieval, ...) compiled into ONE SEDP DAG
+    behind the quota-aware multi-tenant fanout, all sharing one
+    cube / cube-cache / query-cache / streaming-update substrate.
+  * :class:`InferenceService` — the original single-scenario surface,
+    kept as a thin compatibility wrapper: ``InferenceService(cfg)``
+    builds one scenario from a :class:`ServiceConfig` with the historic
+    stage names (ingress → query_cache → features → cube → shed →
+    rerank → respond) and attribute layout, so existing examples,
+    benchmarks and tests keep working unchanged.
+
+The stage logic itself lives in ``repro.serve.stages`` (typed processors
+owning version pinning and cache-aside guards) and ``repro.serve.scenario``
+(specs, substrate, pipeline builder, build-time payload-contract checks).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Sequence, Union
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import registry
-from repro.core import sedp as sedp_lib
-from repro.core.cube import ParameterCube
-from repro.core.cube_cache import TwoTierLFUCache, capacity_from_ratio
 from repro.core.executors import AsyncExecutor, SimExecutor
-from repro.core.irm.shedding import (OnlineShedder, QuotaController,
-                                     train_pruning_dnn)
-from repro.core.query_cache import QueryCache
-from repro.core.sedp import SEDP, Event
-from repro.data import synthetic
-from repro.serve.bucketing import (ShapeBucketer, TracedJit,
-                                   bucketed_candidate_rerank, pow2_buckets,
-                                   step_buckets)
-from repro.serve.hotload import DoubleBuffer, Generation
-from repro.sparse.hashing import hash_bucket_np
-from repro.update import (DeltaWatcher, HBMHead, PromoteDemotePolicy,
-                          UpdateManager)
+from repro.core.irm.shedding import QuotaController
+from repro.core.multitenant import make_fanout_op
+from repro.core.sedp import Event
+from repro.serve.scenario import (PipelineBuilder, ScenarioSpec,
+                                  ServingSubstrate, SubstrateDeltaWatcher,
+                                  get_scenario, make_request_events)
 
 
 @dataclass
@@ -59,304 +57,81 @@ class ServiceConfig:
     update_poll_s: float = 0.1
     compact_after_blocks: int = 64
     head_slots: int = 0            # >0 → HBM head tier for promoted hot rows
+    # bound on the per-group bucket → raw-items reverse map (entries over
+    # the cap are invalidated-and-forgotten — over-invalidation is safe)
+    reverse_map_items: int = 65536
+
+    def to_scenario_spec(self) -> ScenarioSpec:
+        """The ServiceConfig → ScenarioSpec migration mapping (DESIGN.md
+        §7.5): model/pipeline knobs move onto the spec; substrate knobs
+        (caches, live updates, head) configure the ServingSubstrate."""
+        return ScenarioSpec(
+            name=self.arch_id, arch_id=self.arch_id, pipeline="rerank",
+            shed=self.shed, batch_size=self.batch_size,
+            batch_buckets=self.rerank_buckets,
+            cand_buckets=self.cand_buckets, seed=self.seed)
+
+    def make_substrate(self) -> ServingSubstrate:
+        return ServingSubstrate(
+            cube_cache_ratio=self.cube_cache_ratio,
+            query_window_s=self.query_window_s,
+            head_slots=self.head_slots,
+            compact_after_blocks=self.compact_after_blocks,
+            reverse_map_items=self.reverse_map_items, seed=self.seed)
 
 
-class _ServiceDeltaWatcher(DeltaWatcher):
-    """The service's live-update stage: tail the delta log, apply through
-    the UpdateManager, then run the off-hot-path maintenance a fresh batch
-    warrants — overlay compaction and the promote/demote pass."""
+@dataclass
+class MultiServiceConfig:
+    """Knobs of the multi-scenario composition. ``scenarios`` may hold
+    ScenarioSpec objects or names registered in configs/jizhi_service.py;
+    empty → the default 3-scenario surface (DIN + DIEN + MIND)."""
+    scenarios: tuple = ()
+    cube_cache_ratio: float = 1.0
+    query_window_s: float = 120.0
+    seed: int = 0
+    max_queue: int = 512
+    batch_wait_s: float = 0.002
+    # fanout quota gate: below this, only priority-0 scenarios get clones
+    min_quota: float = 0.5
+    live_updates: bool = False
+    update_dir: Optional[str] = None
+    update_poll_s: float = 0.1
+    compact_after_blocks: int = 64
+    head_slots: int = 0
+    reverse_map_items: int = 65536
 
-    def __init__(self, svc: "InferenceService", **kw):
-        # the service is its delta log's only consumer → prune applied
-        # deltas so the log directory (and each poll's scan) stays bounded
-        kw.setdefault("prune_applied", True)
-        super().__init__(svc.cfg.update_dir, svc.updates.apply, **kw)
-        self._svc = svc
 
-    def check_once(self) -> bool:
-        applied = super().check_once()
-        if applied:
-            self._svc.updates.maybe_compact()
-            if self._svc.updates.head is not None:
-                self._svc.updates.rebalance(0)
-        return applied
+class _ServiceBase:
+    """Shared run/update machinery of both service surfaces."""
 
+    substrate: ServingSubstrate
+    cfg = None
+    plan = None
 
-class InferenceService:
-    def __init__(self, cfg: ServiceConfig = ServiceConfig()):
-        self.cfg = cfg
-        arch = registry.get(cfg.arch_id)
-        self.model_cfg = arch.reduced(arch.config)
-        from repro.launch.specs import REC_MODULES
-        self.mod = REC_MODULES[self.model_cfg.model]
-        params = self.mod.init(jax.random.PRNGKey(cfg.seed), self.model_cfg)
-        self.buffer = DoubleBuffer(Generation(0, params))
-        self.rerank_buckets = ShapeBucketer(
-            cfg.rerank_buckets or pow2_buckets(cfg.batch_size))
-        self.cand_buckets = ShapeBucketer(
-            cfg.cand_buckets or pow2_buckets(64, min_size=16))
-        # step-8 history buckets (DESIGN.md §5.3): padded history rows still
-        # pay the full attention MLP, so tight T buckets beat a small menu
-        self.hist_buckets = (ShapeBucketer(
-            step_buckets(self.model_cfg.seq_len, step=8))
-            if self.model_cfg.seq_len else None)
-        self._serve = TracedJit(
-            lambda p, b: self.mod.serve_scores(p, b, self.model_cfg))
-        # fused one-user-many-candidates re-rank (kernels/rerank_score via
-        # score_candidates): full ranking of each request's candidate set
-        self._rerank = (TracedJit(
-            lambda p, u, c: self.mod.score_candidates(
-                p, u, c, self.model_cfg, top_k=c["item_id"].shape[0]))
-            if hasattr(self.mod, "score_candidates") else None)
+    # ------------------------------------------------------- properties
+    @property
+    def query_cache(self):
+        return self.substrate.query_cache
 
-        vocab = self.model_cfg.item_fields[0].vocab
-        self.query_cache = QueryCache(window_s=cfg.query_window_s)
-        mem, disk = capacity_from_ratio(vocab * 4, cfg.cube_cache_ratio)
-        self.cube_cache = TwoTierLFUCache(mem, disk)
-        self.cube = ParameterCube(n_servers=4, replication=2, block_rows=4096)
-        rng = np.random.default_rng(cfg.seed)
-        for g, field in enumerate(self.model_cfg.item_fields):
-            self.cube.load_table(g, rng.normal(
-                0, 0.01, (field.vocab, 4)).astype(np.float32))
-        # streaming-update subsystem: one manager keeps the cube, both
-        # caches and the optional HBM head coherent per delta batch, and a
-        # generation swap bumps the caches' model version — previously a
-        # hot swap kept serving the OLD generation's scores out of the
-        # query cache for up to its TTL window (DESIGN.md §6.4)
-        head = (HBMHead(cfg.head_slots, dim=4) if cfg.head_slots else None)
-        # the cube is keyed by HASHED item ids while the query cache scores
-        # RAW item ids — op_features records the bucket → raw-items reverse
-        # map so a delta invalidates exactly the raw items whose rows it
-        # touched (a hash collision over-invalidates a sibling: safe)
-        self._bucket_items: dict[int, set] = {}
-        self.updates = UpdateManager(
-            self.cube, cube_cache=self.cube_cache,
-            query_cache=self.query_cache, head=head,
-            policy=(PromoteDemotePolicy(capacity=cfg.head_slots)
-                    if head else None),
-            qcache_items_fn=self._items_for_buckets,
-            compact_after_blocks=cfg.compact_after_blocks)
-        self.buffer.on_swap.append(self.updates.on_generation_swap)
-        self.update_watcher = None
-        if cfg.live_updates and cfg.update_dir:
-            self.update_watcher = _ServiceDeltaWatcher(
-                self, poll_s=cfg.update_poll_s)
-        self.shedder = None
-        if cfg.shed:
-            dnn, _ = train_pruning_dnn(n_samples=800, seed=cfg.seed)
-            # live controller: re-rank queue depth + utilization → quota
-            self.shedder = OnlineShedder(
-                dnn, downstream="rerank",
-                controller=QuotaController("rerank", depth_capacity=64.0))
-        self.graph, self.plan = self._build()
+    @property
+    def cube_cache(self):
+        return self.substrate.cube_cache
 
-    # ------------------------------------------------------------- stages
-    def _build(self):
-        g = SEDP()
-        mc = self.model_cfg
+    @property
+    def cube(self):
+        return self.substrate.cube
 
-        def op_qcache(batch, ctx):
-            now = ctx.now()        # executor clock: wall (Async) or virtual (Sim)
-            scores = self.query_cache.get_many(
-                [ev.payload["user_id"] for ev in batch],
-                [ev.payload["item_id"] for ev in batch], now)
-            for ev, s in zip(batch, scores):
-                if s is not None:
-                    ev.payload["score"] = s
-                    ev.route = "respond"
-                else:
-                    ev.route = "features"
-            return batch
+    @property
+    def updates(self):
+        return self.substrate.updates
 
-        def op_features(batch, ctx):
-            items = np.fromiter((ev.payload["item_id"] for ev in batch),
-                                np.int64, len(batch))
-            hashed = hash_bucket_np(0, items, mc.item_fields[0].vocab)
-            bucket_items = self._bucket_items
-            for ev, h, item in zip(batch, hashed, items):
-                ev.payload["hashed"] = {"item_id": h}
-                # reverse map for targeted query-cache invalidation (GIL-
-                # atomic set/dict ops; bounded by vocab × items-per-bucket)
-                bucket_items.setdefault(int(h), set()).add(int(item))
-            return batch
-
-        def op_cube(batch, ctx):
-            keys = [int(ev.payload["hashed"]["item_id"]) for ev in batch]
-            fetched = {}
-            # version-pinned resolve: cache probe AND misses happen under
-            # ONE pinned cube version, stamped on each event — probing the
-            # cache before pinning would let a pre-delta cached row ride
-            # out stamped with the post-delta version, sneaking past both
-            # cache-aside guards
-            with self.cube.pin() as pv:
-                cached = self.cube_cache.get_many(keys)
-                miss = sorted({k for k, v in zip(keys, cached) if v is None})
-                if miss:
-                    pending = np.asarray(miss, np.int64)
-                    head = self.updates.head
-                    if head is not None and head.resident_count:
-                        # HBM head tier first: promoted hot rows skip the
-                        # host cube entirely (freshness: the head is
-                        # updated in place at delta-apply, DESIGN.md §6.3)
-                        hrows, hfound = head.lookup(0, pending)
-                        for k, r, f in zip(pending.tolist(), hrows, hfound):
-                            if f:
-                                fetched[int(k)] = r
-                        pending = pending[~hfound]
-                    if pending.size:
-                        # delta deletes leave tombstones: a deleted row is
-                        # a legitimate serving state (the feature fell out
-                        # of the model), served as the zero/default row —
-                        # NOT a KeyError that would kill the stage worker
-                        live = self.cube.contains(0, pending, version=pv)
-                        if not live.all():
-                            dim = (self.cube.row_shape(0) or (4,))[0]
-                            zero = np.zeros(dim, np.float32)
-                            for k in pending[~live].tolist():
-                                fetched[int(k)] = zero
-                            pending = pending[live]
-                    if pending.size:
-                        rows = self.cube.lookup(0, pending, version=pv)
-                        for i, k in enumerate(pending.tolist()):
-                            fetched[int(k)] = rows[i]
-                    self.cube_cache.put_many(
-                        list(fetched), [fetched[k][None] for k in fetched])
-                    # close the cache-aside race: a delta may have published
-                    # (and run its targeted invalidation) between our pinned
-                    # fetch and the insert above, which would resurrect
-                    # pre-delta rows as fresh entries. Drop our own inserts
-                    # for exactly the keys deltas touched since the pin
-                    # (batch-wide dropping would fire on nearly every batch
-                    # under a continuous stream); the touched-key log going
-                    # cold forces the conservative full drop.
-                    if self.cube.version != pv.version:
-                        touched = self.updates.touched_since(pv.version)
-                        drop = (list(fetched) if touched is None else
-                                [k for k in fetched if k in touched[0]])
-                        if drop:
-                            self.cube_cache.invalidate_keys(drop)
-                # the gathered rows ride on the event: the rerank stage
-                # consumes cube output from the payload instead of
-                # re-touching the cube
-                for ev, k, c in zip(batch, keys, cached):
-                    row = fetched[k] if c is None else c[0]
-                    ev.payload["cube_rows"] = np.asarray(row, np.float32)
-                    ev.payload["cube_version"] = pv.version
-            return batch
-
-        def op_dnn(batch, ctx):
-            # capture the query-cache model version BEFORE binding the
-            # generation: scores are stamped with qv at insert, so a hot
-            # swap racing this batch can only over-invalidate (fresh scores
-            # stamped pre-bump), never mark old-generation scores as fresh
-            qv = self.query_cache.model_version
-            gen = self.buffer.active       # ONE generation for the batch
-            params = gen.payload
-            B = len(batch)
-            payloads = [ev.payload for ev in batch]
-            # pad to the covering batch bucket (bounded jit-trace count);
-            # scores are per-row, so slicing [:B] discards the filler exactly
-            b = self._pack_batch(self.rerank_buckets.pad_rows(payloads))
-            scores = np.asarray(self._serve(params, b))[:B]
-            now = ctx.now()
-            for ev, s in zip(batch, scores):
-                ev.payload["score"] = float(s)
-                ev.payload["generation"] = gen.stamp
-                self._rerank_candidates(params, ev.payload)
-            self.query_cache.put_many(
-                [ev.payload["user_id"] for ev in batch],
-                [ev.payload["item_id"] for ev in batch],
-                [float(s) for s in scores], now, version=qv)
-            # close the delta-side cache-aside race (the query-cache twin of
-            # op_cube's guard): these scores embed cube rows fetched at the
-            # events' pinned versions — if a delta published since, its
-            # invalidate_items may have run BEFORE our insert, resurrecting
-            # a stale score. Drop exactly the batch items deltas actually
-            # touched since the earliest pin (the pipeline latency between
-            # cube fetch and score insert usually spans a delta interval
-            # under a continuous stream, so a batch-wide drop would gut the
-            # cache); a cold touched-key log forces the conservative drop.
-            vmin = min((ev.payload.get("cube_version", 0) for ev in batch),
-                       default=0)
-            if self.cube.version != vmin:
-                items = {ev.payload["item_id"] for ev in batch}
-                touched = self.updates.touched_since(vmin)
-                if touched is not None:
-                    items &= touched[1]
-                if items:
-                    self.query_cache.invalidate_items(items)
-            return batch
-
-        kw = dict(max_queue=self.cfg.max_queue,
-                  max_wait_s=self.cfg.batch_wait_s)
-        g.add_stage("ingress", sedp_lib.passthrough, batch_size=8,
-                    parallelism=2, **kw)
-        g.add_stage("query_cache", op_qcache, batch_size=16, parallelism=2,
-                    **kw)
-        g.add_stage("features", op_features, batch_size=8, parallelism=2, **kw)
-        g.add_stage("cube", op_cube, batch_size=8, parallelism=2, **kw)
-        if self.shedder:
-            g.add_stage("shed", self.shedder.op, batch_size=8, parallelism=1,
-                        **kw)
-        g.add_stage("rerank", op_dnn, batch_size=self.cfg.batch_size,
-                    parallelism=1, **kw)
-        g.add_stage("respond", sedp_lib.passthrough, batch_size=32,
-                    parallelism=1, **kw)
-        g.chain("ingress", "query_cache")
-        g.add_edge("query_cache", "respond")
-        g.chain("query_cache", "features", "cube")
-        if self.shedder:
-            g.chain("cube", "shed", "rerank")
-        else:
-            g.add_edge("cube", "rerank")
-        g.add_edge("rerank", "respond")
-        return g, g.compile()
-
-    def _pack_batch(self, payloads: list[dict]) -> dict:
-        mc = self.model_cfg
-        user_fields = {f.name: np.stack([p["user_fields"][f.name]
-                                         for p in payloads])
-                       for f in mc.user_fields}
-        item = {f.name: np.stack([p["item_fields"][f.name] for p in payloads])
-                for f in mc.item_fields}
-        batch = {"user": {"fields": jax.tree.map(jnp.asarray, user_fields)},
-                 "item": jax.tree.map(jnp.asarray, item)}
-        # cube output attached upstream (op_cube) becomes a model input: the
-        # item's host-tier tail features enter the packed batch here rather
-        # than being re-derived by another cube round-trip
-        if all("cube_rows" in p for p in payloads):
-            batch["item"]["cube_tail"] = jnp.asarray(
-                np.stack([p["cube_rows"] for p in payloads]))
-        if mc.seq_len:
-            batch["user"]["hist"] = jnp.asarray(
-                np.stack([p["hist"] for p in payloads]))
-        return batch
-
-    def _rerank_candidates(self, params, payload: dict, keep: int = 12):
-        """Full re-rank of the request's surviving candidate set through the
-        fused shared-history scorer. C and the history length are padded to
-        buckets so the jit cache stays at |cand_buckets| × |hist_buckets|."""
-        mc = self.model_cfg
-        cands = payload.get("candidates")
-        if not cands or self._rerank is None or not mc.seq_len:
-            return
-        payload["topk"] = bucketed_candidate_rerank(
-            self._rerank, params, payload["hist"],
-            {f.name: payload["user_fields"][f.name] for f in mc.user_fields},
-            cands, self.cand_buckets, self.hist_buckets,
-            item_fields=[(f.name, f.bag) for f in mc.item_fields
-                         if f.name != "item_id"], keep=keep)
-
-    # ------------------------------------------------------- live updates
-    def _items_for_buckets(self, group: int, hashed_ids) -> list:
-        """Raw item ids whose scores embed the given cube (hashed) rows —
-        the UpdateManager's query-cache invalidation key set."""
-        if group != 0:
-            return []
-        out: list = []
-        for h in hashed_ids:
-            out.extend(self._bucket_items.get(int(h), ()))
-        return out
+    # ------------------------------------------------------ live updates
+    def _make_watcher(self):
+        if getattr(self.cfg, "live_updates", False) and self.cfg.update_dir:
+            return SubstrateDeltaWatcher(
+                self.substrate, self.cfg.update_dir,
+                poll_s=self.cfg.update_poll_s)
+        return None
 
     def start_updates(self):
         """Start the live-update stage (requires cfg.live_updates +
@@ -372,39 +147,163 @@ class InferenceService:
             self.update_watcher.stop()
 
     # --------------------------------------------------------------- run
-    def make_requests(self, n: int, seed: int = 0) -> list[Event]:
-        rng = np.random.default_rng(seed)
-        mc = self.model_cfg
-        evs = []
-        raw = synthetic.recsys_batch(rng, mc, n)
-        for i in range(n):
-            payload = {
-                "user_id": int(raw["user"]["fields"][mc.user_fields[0].name][i]
-                               if mc.user_fields[0].bag == 1 else i),
-                "item_id": int(raw["item"][mc.item_fields[0].name][i]),
-                "user_fields": {f.name: raw["user"]["fields"][f.name][i]
-                                for f in mc.user_fields},
-                "item_fields": {f.name: raw["item"][f.name][i]
-                                for f in mc.item_fields},
-                "candidates": [(j, float(rng.random())) for j in range(64)],
-            }
-            if mc.seq_len:
-                payload["hist"] = raw["user"]["hist"][i]
-            evs.append(Event(payload=payload))
-        return evs
+    def _overflow_policy(self):
+        raise NotImplementedError
 
     def run(self, n_requests: int = 64, executor: str = "async",
             rate_qps: float = 500.0):
         """Serve n_requests end to end. ``executor="async"`` is the real
         threaded path (bounded channels block upstream — backpressure);
         ``executor="sim"`` runs the identical DAG on the virtual clock with
-        the shedder as the bounded-channel overflow policy."""
+        the shedders as the bounded-channel overflow policy."""
         reqs = self.make_requests(n_requests, seed=self.cfg.seed)
         if executor == "async":
             return AsyncExecutor(self.plan).run(reqs)
         if executor != "sim":
             raise ValueError(f"unknown executor {executor!r}")
-        ex = SimExecutor(
-            self.plan,
-            overflow_policy=self.shedder.on_overflow if self.shedder else None)
+        ex = SimExecutor(self.plan, overflow_policy=self._overflow_policy())
         return ex.run([(i / rate_qps, ev) for i, ev in enumerate(reqs)])
+
+
+class InferenceService(_ServiceBase):
+    """Single-scenario compatibility wrapper over the scenario API: the
+    full JiZHI stack around a REAL JAX ranking model (SEDP DAG + query
+    cache + cube cache/cube + online load shedding + a jitted recsys model
+    as the DNN stage, with hot-loading via DoubleBuffer). The benchmark
+    suite uses the calibrated service_model instead; THIS class is the
+    functional end-to-end path."""
+
+    def __init__(self, cfg: ServiceConfig = ServiceConfig()):
+        self.cfg = cfg
+        self.substrate = cfg.make_substrate()
+        builder = PipelineBuilder(self.substrate, max_queue=cfg.max_queue,
+                                  batch_wait_s=cfg.batch_wait_s)
+        builder.add_ingress("ingress")
+        rt = builder.add_scenario(cfg.to_scenario_spec(), namespaced=False)
+        builder.g.add_edge("ingress", builder.entries[rt.spec.name])
+        self.graph, self.plan = builder.compile()
+        self._rt = rt
+        # historic attribute surface (tests/examples poke these directly)
+        self.model_cfg = rt.model_cfg
+        self.mod = rt.mod
+        self.buffer = rt.buffer
+        self.shedder = rt.shedder
+        self.rerank_buckets = rt.batch_buckets
+        self.cand_buckets = rt.cand_buckets
+        self.hist_buckets = rt.hist_buckets
+        self._serve = rt.serve
+        self._rerank = rt.rerank
+        self._pack_batch = rt.pack_batch
+        self.update_watcher = self._make_watcher()
+
+    @property
+    def _bucket_items(self):
+        """Primary group's bucket → raw-items reverse map (bounded)."""
+        return self.substrate.bucket_items[self._rt.cube_groups[0][1]].buckets
+
+    def make_requests(self, n: int, seed: int = 0) -> list[Event]:
+        return make_request_events([self.model_cfg], n, seed=seed)
+
+    def _overflow_policy(self):
+        return self.shedder.on_overflow if self.shedder else None
+
+
+class MultiScenarioService(_ServiceBase):
+    """N scenario pipelines behind the quota-aware multi-tenant fanout,
+    one shared substrate (paper §4 multi-tenant extension + §8.6 Service
+    E: several models share the upstream data plane and >80% of feature
+    groups).
+
+    DAG shape::
+
+        ingress → fanout ──→ <s1>.query_cache → ... → <s1>.rerank ──→ respond
+                         └─→ <s2>...                                ↗
+                         └─→ <s3>...                                ↗
+
+    The fanout clones each request to every scenario (payloads cloned so
+    per-scenario stages never write into a sibling's view); under
+    overload the quota controller gates secondary scenarios first —
+    priority-0 scenarios keep serving while the rest ride out the spike.
+    """
+
+    def __init__(self, cfg: Union[MultiServiceConfig, Sequence, None] = None):
+        if cfg is None:
+            cfg = MultiServiceConfig()
+        elif not isinstance(cfg, MultiServiceConfig):
+            cfg = MultiServiceConfig(scenarios=tuple(cfg))
+        self.cfg = cfg
+        specs = []
+        names = cfg.scenarios or _default_scenario_names()
+        for s in names:
+            specs.append(s if isinstance(s, ScenarioSpec)
+                         else get_scenario(s))
+        if not specs:
+            raise ValueError("MultiScenarioService needs ≥1 scenario")
+        self.substrate = ServingSubstrate(
+            cube_cache_ratio=cfg.cube_cache_ratio,
+            query_window_s=cfg.query_window_s, head_slots=cfg.head_slots,
+            compact_after_blocks=cfg.compact_after_blocks,
+            reverse_map_items=cfg.reverse_map_items, seed=cfg.seed)
+        builder = PipelineBuilder(self.substrate, max_queue=cfg.max_queue,
+                                  batch_wait_s=cfg.batch_wait_s)
+        builder.add_ingress("ingress")
+        for spec in specs:
+            builder.add_scenario(spec, namespaced=True)
+        # quota signal: the primary (lowest-priority-number) scenario's
+        # terminal queue — the stage overload hits first
+        primary = min(specs, key=lambda s: (s.priority, specs.index(s)))
+        self.fanout_controller = QuotaController(
+            builder.terminals[primary.name], depth_capacity=64.0)
+        targets = [builder.entries[s.name] for s in specs]
+        priorities = {builder.entries[s.name]: s.priority for s in specs}
+        fan = make_fanout_op(targets, priorities=priorities,
+                             quota_fn=self.fanout_controller.observe,
+                             min_quota=cfg.min_quota)
+        builder.g.add_stage("fanout", fan, batch_size=8, parallelism=1,
+                            max_queue=cfg.max_queue,
+                            max_wait_s=cfg.batch_wait_s)
+        builder.g.add_edge("ingress", "fanout")
+        for t in targets:
+            builder.g.add_edge("fanout", t)
+        self.graph, self.plan = builder.compile()
+        self.specs = tuple(specs)
+        self.runtimes = builder.runtimes
+        self.entries = builder.entries
+        self.terminals = builder.terminals
+        self.update_watcher = self._make_watcher()
+
+    # ------------------------------------------------------------ traffic
+    def make_requests(self, n: int, seed: int = 0) -> list[Event]:
+        return make_request_events(
+            [rt.model_cfg for rt in self.runtimes.values()], n, seed=seed)
+
+    def _overflow_policy(self):
+        def policy(stage, ev, ctx):
+            name = stage.split(".", 1)[0]
+            rt = self.runtimes.get(name)
+            if rt is not None and rt.shedder is not None:
+                return rt.shedder.on_overflow(stage, ev, ctx)
+            return ev
+        return policy
+
+    # ------------------------------------------------------------ results
+    @staticmethod
+    def by_scenario(report) -> dict:
+        """Completed events grouped by the scenario that served them."""
+        out: dict = {}
+        for ev in report.results:
+            get = ev.payload.get if hasattr(ev.payload, "get") else None
+            name = (get("scenario", "?") if get else "?") or "?"
+            out.setdefault(name, []).append(ev)
+        return out
+
+    @staticmethod
+    def responses(report) -> list:
+        """Typed Response objects (stamped by RespondStage)."""
+        return [ev.meta["response"] for ev in report.results
+                if "response" in ev.meta]
+
+
+def _default_scenario_names() -> tuple:
+    from repro.configs import jizhi_service
+    return jizhi_service.DEFAULT_SCENARIOS

@@ -110,19 +110,23 @@ def bucketed_candidate_rerank(score_fn, params, hist_ids, user_fields,
     so top_k < padded C would let filler crowd out real candidates.
     ``item_fields``: (name, bag) pairs for the non-item_id candidate
     fields (zero-filled — recall output carries ids only).
+    ``hist_ids=None`` serves history-free scorers (e.g. the two-tower
+    retrieval head): the user batch carries fields only.
     Returns the top ``keep`` real candidates as [(item_id, score)], scores
     on the probability scale (sigmoid of the ranking logits — the same
-    scale ``serve_scores`` puts in ``payload["score"]``).
+    scale ``serve_scores`` puts in ``payload["score"]``; for retrieval
+    similarities the sigmoid is monotone, so the ranking is unchanged).
     """
     import jax.numpy as jnp
     C = len(cands)
     Cp = cand_buckets.fit(C)
     ids = np.fromiter((c[0] for c in cands), np.int64, C)
     ids_p = np.concatenate([ids, np.full(Cp - C, ids[0])])
-    hist = compact_history(np.asarray(hist_ids), hist_buckets)
-    user = {"hist": jnp.asarray(hist)[None],
-            "fields": {k: jnp.asarray(np.asarray(v))[None]
+    user = {"fields": {k: jnp.asarray(np.asarray(v))[None]
                        for k, v in user_fields.items()}}
+    if hist_ids is not None:
+        hist = compact_history(np.asarray(hist_ids), hist_buckets)
+        user["hist"] = jnp.asarray(hist)[None]
     cand_ids = {"item_id": jnp.asarray(ids_p)}
     for name, bag in item_fields:
         shape = (Cp,) if bag == 1 else (Cp, bag)

@@ -1,17 +1,18 @@
 """Streaming parameter-update subsystem (DESIGN.md §6): versioned delta
 ingestion for uninterrupted serving — delta log + watcher, MVCC cube
 application, HBM-head in-place migration, and cache coherence."""
-from repro.update.delta import (DeltaBatch, DeltaEmitter, DeltaWatcher,
+from repro.update.delta import (DeltaBatch, DeltaEmitter,
+                                DeltaIntegrityError, DeltaWatcher,
                                 GroupDelta, list_deltas, read_delta,
-                                write_delta)
+                                verify_delta, write_delta)
 from repro.update.hbm_head import HBMHead
 from repro.update.manager import UpdateManager, UpdateStats
 from repro.update.policy import (PromoteDemotePolicy, TierPlan,
-                                 merged_lfu_counts)
+                                 group_lfu_counts, merged_lfu_counts)
 
 __all__ = [
-    "DeltaBatch", "DeltaEmitter", "DeltaWatcher", "GroupDelta",
-    "HBMHead", "PromoteDemotePolicy", "TierPlan", "UpdateManager",
-    "UpdateStats", "list_deltas", "merged_lfu_counts", "read_delta",
-    "write_delta",
+    "DeltaBatch", "DeltaEmitter", "DeltaIntegrityError", "DeltaWatcher",
+    "GroupDelta", "HBMHead", "PromoteDemotePolicy", "TierPlan",
+    "UpdateManager", "UpdateStats", "group_lfu_counts", "list_deltas",
+    "merged_lfu_counts", "read_delta", "verify_delta", "write_delta",
 ]

@@ -16,12 +16,21 @@ full-snapshot anti-pattern. The delta log is the streaming alternative:
     deletes apply after upserts.
 
 On-disk layout (the training-side emitter writes, the serving-side watcher
-tails): ``<dir>/delta_<version>/group_<g>.npz`` + an empty ``DONE`` marker
+tails): ``<dir>/delta_<version>/group_<g>.npz`` + a ``CHECKSUMS`` manifest
+(per-file sha256, the stream-integrity record) + an empty ``DONE`` marker
 written LAST — the marker is the publish point, exactly like hot-load
 generations, so a half-written delta is never consumed.
+
+Integrity: the DONE marker catches a TORN delta (partial write), but not a
+CORRUPTED one (bit rot, a truncated copy that still parses, a tampered
+file). ``verify_delta`` re-hashes every npz against the manifest; the
+watcher runs it before apply, so a corrupt batch is logged and skipped —
+and retried after backoff, preserving version order — never half-applied.
 """
 from __future__ import annotations
 
+import hashlib
+import logging
 import os
 import shutil
 from dataclasses import dataclass, field
@@ -31,7 +40,15 @@ import numpy as np
 
 from repro.serve.hotload import PollWatcher
 
+log = logging.getLogger(__name__)
+
 _PREFIX = "delta_"
+_CHECKSUMS = "CHECKSUMS"
+
+
+class DeltaIntegrityError(ValueError):
+    """A published delta's npz content does not match its CHECKSUMS
+    manifest — the batch must be skipped (and re-emitted), never applied."""
 
 
 @dataclass
@@ -73,21 +90,83 @@ def delta_path(log_dir: str, version: int) -> str:
     return os.path.join(log_dir, f"{_PREFIX}{version:012d}")
 
 
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
 def write_delta(log_dir: str, batch: DeltaBatch) -> str:
-    """Training-side emit: per-group npz files first, DONE marker last (the
-    atomic publish point). Returns the delta directory."""
+    """Training-side emit: per-group npz files first, then the CHECKSUMS
+    manifest (sha256 per npz), DONE marker last (the atomic publish
+    point). Returns the delta directory."""
     path = delta_path(log_dir, batch.version)
     os.makedirs(path, exist_ok=True)
+    # a re-emit of this version (the corrupt-delta recovery path) may
+    # carry fewer groups: drop leftovers so the directory always matches
+    # the manifest exactly (verify_delta rejects unmanifested files)
+    want = {f"group_{g.group}.npz" for g in batch.groups}
+    for fn in os.listdir(path):
+        if fn.startswith("group_") and fn.endswith(".npz") and fn not in want:
+            os.remove(os.path.join(path, fn))
+    sums = []
     for g in batch.groups:
         kw = {"ids": np.atleast_1d(np.asarray(g.ids)),
               "rows": np.asarray(g.rows),
               "delete_ids": np.atleast_1d(np.asarray(g.delete_ids))}
         if g.item_ids is not None:
             kw["item_ids"] = np.atleast_1d(np.asarray(g.item_ids))
-        np.savez(os.path.join(path, f"group_{g.group}.npz"), **kw)
+        fn = f"group_{g.group}.npz"
+        np.savez(os.path.join(path, fn), **kw)
+        sums.append(f"{_sha256(os.path.join(path, fn))}  {fn}")
+    with open(os.path.join(path, _CHECKSUMS), "w") as f:
+        f.write("\n".join(sums) + "\n")
     with open(os.path.join(path, "DONE"), "w"):
         pass
     return path
+
+
+def verify_delta(path: str) -> bool:
+    """Re-hash every npz against the CHECKSUMS manifest. Raises
+    :class:`DeltaIntegrityError` on any mismatch, a file the manifest
+    names that is missing, or a group npz present on disk that the
+    manifest does NOT name (``read_delta`` would apply it — a re-emitted
+    delta with fewer groups must not resurrect a stale leftover, and a
+    stray file dropped into a published dir must not slip past the
+    check). Returns True when verified, False when the delta predates
+    checksums (no manifest — accepted for compatibility, nothing to
+    verify against)."""
+    manifest = os.path.join(path, _CHECKSUMS)
+    if not os.path.exists(manifest):
+        return False
+    expected = {}
+    with open(manifest) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                digest, fn = line.split(None, 1)
+                expected[fn.strip()] = digest
+    on_disk = {fn for fn in os.listdir(path)
+               if fn.startswith("group_") and fn.endswith(".npz")}
+    extra = sorted(on_disk - set(expected))
+    if extra:
+        raise DeltaIntegrityError(
+            f"{os.path.basename(path)}: {extra} present on disk but not "
+            f"in the CHECKSUMS manifest")
+    for fn, digest in expected.items():
+        full = os.path.join(path, fn)
+        if not os.path.exists(full):
+            raise DeltaIntegrityError(
+                f"{os.path.basename(path)}: {fn} named in manifest "
+                f"but missing on disk")
+        got = _sha256(full)
+        if got != digest:
+            raise DeltaIntegrityError(
+                f"{os.path.basename(path)}: {fn} sha256 mismatch "
+                f"(manifest {digest[:12]}…, file {got[:12]}…)")
+    return True
 
 
 def read_delta(path: str) -> DeltaBatch:
@@ -153,20 +232,38 @@ class DeltaWatcher(PollWatcher):
     it, the log directory grows one directory per delta forever and every
     poll's os.listdir scans the full history — enable when this watcher is
     the log's only consumer (the serving wiring); leave off for shared
-    logs, where retention belongs to the training side."""
+    logs, where retention belongs to the training side.
+
+    ``verify_checksums`` (default on): each delta's npz files are re-hashed
+    against its CHECKSUMS manifest BEFORE apply. A corrupted batch raises
+    :class:`DeltaIntegrityError` — the poll thread logs it, backs off and
+    retries at the same version (the training side must re-emit), so a
+    corrupt delta is skipped rather than half-applied, and later versions
+    are never applied over it out of order."""
 
     def __init__(self, watch_dir: str, apply_fn: Callable[[DeltaBatch], int],
                  poll_s: float = 0.25, max_backoff_s: float = 10.0,
-                 start_after_version: int = -1, prune_applied: bool = False):
+                 start_after_version: int = -1, prune_applied: bool = False,
+                 verify_checksums: bool = True):
         super().__init__(poll_s=poll_s, max_backoff_s=max_backoff_s)
         self.watch_dir = watch_dir
         self.apply_fn = apply_fn
         self.applied_version = start_after_version
         self.prune_applied = prune_applied
+        self.verify_checksums = verify_checksums
+        self.integrity_failures = 0
 
     def check_once(self) -> bool:
         applied = False
         for ver, path in list_deltas(self.watch_dir, self.applied_version):
+            if self.verify_checksums:
+                try:
+                    verify_delta(path)
+                except DeltaIntegrityError:
+                    self.integrity_failures += 1
+                    log.warning("delta v%d failed checksum verification; "
+                                "skipping (will retry after backoff)", ver)
+                    raise
             self.apply_fn(read_delta(path))
             self.applied_version = ver
             applied = True

@@ -2,21 +2,26 @@
 out (DESIGN.md §6).
 
 Apply order per batch — chosen so no reader can observe a NEW cache entry
-over OLD cube rows:
+over OLD cube rows, or OLD cache rows attributed to a NEW version:
 
-  1. cube        — ``ParameterCube.apply_delta`` publishes the rows with an
+  1. caches      — targeted ``invalidate_keys`` / ``invalidate_items`` of
+                   exactly the touched keys/items, BEFORE the publish
+                   (LFU counts persist);
+  2. cube        — ``ParameterCube.apply_delta`` publishes the rows with an
                    atomic version bump (pinned/in-flight readers keep their
                    snapshot);
-  2. HBM head    — in-place donated-buffer scatter for the touched
+  3. HBM head    — in-place donated-buffer scatter for the touched
                    signatures currently resident; deletes demote;
-  3. cube cache  — targeted ``invalidate_keys`` of exactly the touched
-                   keys (LFU counts persist);
-  4. query cache — targeted ``invalidate_items`` of the touched items
-                   (scores embedding the old rows must not be reused).
+  4. caches      — the same targeted invalidation AGAIN, post-publish.
 
-Invalidate-after-publish means a request racing the apply either reads the
-old rows coherently (old cache + old cube version) or misses and refetches
-the new ones; it can never cache-hit its way to a torn mix.
+The double invalidation brackets the publish: pass 1 closes the window
+where a reader pinning the new version could cache-hit a not-yet-
+invalidated pre-delta row (old rows stamped with the new version — torn
+attribution); pass 4 plus the serving ops' cache-aside guards remove any
+entry a racing reader re-inserted around the publish itself. A request
+racing the apply therefore either reads the old rows coherently (old
+cache + old pinned version) or misses and refetches; it can never
+cache-hit its way to a torn mix.
 
 The manager is also the DoubleBuffer ``on_swap`` subscriber: a whole-
 generation hot swap bumps the caches' model version — the fix for the
@@ -39,7 +44,8 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.update.delta import DeltaBatch
-from repro.update.policy import PromoteDemotePolicy, merged_lfu_counts
+from repro.update.policy import (PromoteDemotePolicy, merged_lfu_counts,
+                                 slice_group_counts)
 
 
 @dataclass
@@ -70,6 +76,7 @@ def _default_cache_key_fn(group: int, ids: np.ndarray):
 class UpdateManager:
     def __init__(self, cube, cube_cache=None, query_cache=None, head=None,
                  policy: Optional[PromoteDemotePolicy] = None,
+                 policies: Optional[dict] = None,
                  cache_key_fn: Callable = _default_cache_key_fn,
                  qcache_items_fn: Optional[Callable] = None,
                  compact_after_blocks: int = 256,
@@ -79,6 +86,10 @@ class UpdateManager:
         self.query_cache = query_cache
         self.head = head
         self.policy = policy
+        # per-group promote/demote policies (multi-scenario substrates
+        # split the head budget across groups); ``policy`` stays as the
+        # single-group default when a group has no dedicated entry
+        self.policies: dict = dict(policies or {})
         self.cache_key_fn = cache_key_fn
         # (group, touched cube ids) → the RAW item keys the query cache is
         # scored under. When the cube id space is a hash of the item space
@@ -137,22 +148,49 @@ class UpdateManager:
             for g in batch.groups:
                 ids = np.atleast_1d(np.asarray(g.ids)).reshape(-1)
                 dels = np.atleast_1d(np.asarray(g.delete_ids)).reshape(-1)
-                v_after = self.cube.apply_delta(
-                    g.group, ids if ids.size else None,
-                    np.asarray(g.rows) if ids.size else None,
-                    delete_ids=dels if dels.size else None)
                 touched = np.concatenate([ids, dels]) if dels.size else ids
                 keys = (self.cache_key_fn(g.group, touched)
                         if touched.size else [])
                 if self.qcache_items_fn is not None:
-                    items = list(self.qcache_items_fn(g.group, touched))
+                    items = set(self.qcache_items_fn(g.group, touched))
+                    # the training side may ship the raw item ids alongside
+                    # the delta (GroupDelta.item_ids): union them in so
+                    # invalidation no longer depends on the serving side
+                    # having SEEN an item since start — a delta landing
+                    # before an item's first request still invalidates any
+                    # warm-started query-cache entry for it
+                    if g.item_ids is not None:
+                        items |= {int(i)
+                                  for i in np.atleast_1d(g.item_ids)}
+                    items = list(items)
                 else:
                     items = [int(i) for i in g.touched_item_ids()]
-                # log BEFORE any invalidation: the serving-side guards read
-                # this concurrently — appended after, a guard checking in
-                # the window between invalidate and append would see an
-                # empty span and keep a just-resurrected stale entry.
-                # Appended first, it can only over-report (harmless drop).
+                # FIRST invalidation pass, BEFORE the cube publish. The
+                # old invalidate-after-publish order had a torn-attribution
+                # window: a reader pinning the NEW version could probe the
+                # cache before the invalidation landed and cache-hit a
+                # pre-delta row, stamping old rows with the new version.
+                # Invalidating first closes it — a reader that re-inserts
+                # after this pass is inserting rows that are still current
+                # (nothing has published yet), and the SECOND pass below
+                # plus the serving ops' own cache-aside guards cover every
+                # insert that races the publish itself.
+                if self.cube_cache is not None and keys:
+                    self.stats.cube_keys_invalidated += \
+                        self.cube_cache.invalidate_keys(keys)
+                if self.query_cache is not None and items:
+                    self.stats.query_entries_invalidated += \
+                        self.query_cache.invalidate_items(items)
+                v_after = self.cube.apply_delta(
+                    g.group, ids if ids.size else None,
+                    np.asarray(g.rows) if ids.size else None,
+                    delete_ids=dels if dels.size else None)
+                # log BEFORE the post-publish invalidation: the serving-
+                # side guards read this concurrently — appended after, a
+                # guard checking in the window between invalidate and
+                # append would see an empty span and keep a just-
+                # resurrected stale entry. Appended first, it can only
+                # over-report (harmless drop).
                 self._touched_log.append(
                     (v_after, frozenset(keys), frozenset(items)))
                 while len(self._touched_log) > self._touched_cap:
@@ -169,6 +207,10 @@ class UpdateManager:
                         if g.group in self._resident_ids:
                             self._resident_ids[g.group] -= \
                                 {int(i) for i in dels}
+                # SECOND invalidation pass, AFTER the publish: catches
+                # entries a concurrent reader re-inserted during the
+                # publish window whose own cache-aside guard ran before
+                # the new version became visible to it.
                 if self.cube_cache is not None and keys:
                     self.stats.cube_keys_invalidated += \
                         self.cube_cache.invalidate_keys(keys)
@@ -209,18 +251,23 @@ class UpdateManager:
         self.stats.generation_swaps += 1
 
     # -------------------------------------------------- background passes
-    def rebalance(self, group: int = 0) -> tuple[int, int]:
-        """One promote/demote pass for ``group``: cube-cache LFU counts →
-        policy plan → head migration (rows gathered from the cube tail in
-        one batched lookup, scattered into HBM in one donated launch).
-        Returns (promoted, demoted)."""
-        if self.head is None or self.policy is None \
-                or self.cube_cache is None:
+    def rebalance(self, group: int = 0,
+                  _merged: Optional[dict] = None) -> tuple[int, int]:
+        """One promote/demote pass for ``group``: the group's slice of the
+        cube-cache LFU counts → the group's policy plan → head migration
+        (rows gathered from the cube tail in one batched lookup, scattered
+        into HBM in one donated launch). Returns (promoted, demoted).
+        ``_merged`` lets ``rebalance_all`` fold the two cache tiers once
+        and share the result across every group's slice."""
+        policy = self.policies.get(group, self.policy)
+        if self.head is None or policy is None or self.cube_cache is None:
             return (0, 0)
         with self._lock:
-            counts = merged_lfu_counts(self.cube_cache)
+            counts = slice_group_counts(
+                merged_lfu_counts(self.cube_cache) if _merged is None
+                else _merged, group)
             resident_ids = self._resident_ids.setdefault(group, set())
-            plan = self.policy.plan(counts, resident_ids)
+            plan = policy.plan(counts, resident_ids)
             promoted = demoted = 0
             if plan.demote:
                 ids = np.asarray([k for k in plan.demote], np.int64)
@@ -237,6 +284,17 @@ class UpdateManager:
             self.stats.promotions += promoted
             self.stats.demotions += demoted
             return (promoted, demoted)
+
+    def rebalance_all(self) -> dict:
+        """One promote/demote pass per group that owns a policy (or group
+        0 under the legacy single-policy wiring). The mem+disk LFU count
+        fold runs ONCE and is sliced per group — this runs after every
+        applied delta batch, so N full folds per apply would dominate."""
+        if self.head is None or self.cube_cache is None:
+            return {}
+        groups = sorted(self.policies) if self.policies else [0]
+        merged = merged_lfu_counts(self.cube_cache)
+        return {g: self.rebalance(g, _merged=merged) for g in groups}
 
     def maybe_compact(self) -> bool:
         """Fold cube overlays once enough have piled up — off the hot path;

@@ -62,6 +62,27 @@ class PromoteDemotePolicy:
         return TierPlan(promote=promote, demote=demote)
 
 
+def slice_group_counts(merged: Dict, group: int) -> Dict:
+    """One feature group's slice of merged LFU counts, keyed by RAW id.
+    Follows the ``_default_cache_key_fn`` convention the serving stack
+    uses: bare keys belong to group 0, ``(group, id)`` tuples to their
+    group — so each group's promote/demote policy ranks only its own rows
+    instead of competing against every other group's popularity."""
+    out: Dict = {}
+    for k, c in merged.items():
+        if group == 0:
+            if isinstance(k, tuple):
+                continue
+            out[k] = c
+        elif isinstance(k, tuple) and len(k) == 2 and k[0] == group:
+            out[k[1]] = c
+    return out
+
+
+def group_lfu_counts(cube_cache, group: int) -> Dict:
+    return slice_group_counts(merged_lfu_counts(cube_cache), group)
+
+
 def merged_lfu_counts(cube_cache) -> Dict:
     """Fold both cache tiers' persistent LFU counts into one popularity
     estimate. Elementwise MAX, not sum: `_LFU.get` increments a tier's

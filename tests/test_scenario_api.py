@@ -1,0 +1,489 @@
+"""Scenario-API contract tests (DESIGN.md §7).
+
+  * every registered ScenarioSpec builds, compiles and serves a batch on
+    BOTH executors, with Sim/Async result equivalence;
+  * payload-contract violations fail at BUILD time, not mid-traffic;
+  * the multi-scenario service fans one request stream across N pipelines
+    over ONE shared substrate (shared feature groups, scoped query cache);
+  * multi-group CubeFetchStage: every item-field group resolved under one
+    pinned version — per-group no-torn-reads under a live delta stream;
+  * the bounded reverse map prunes by invalidate-and-forget;
+  * delta-stream integrity: a corrupted npz is skipped (and retried),
+    never applied; GroupDelta.item_ids invalidates never-seen items.
+"""
+import dataclasses
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.sedp import SEDP, Event
+from repro.core.service import (InferenceService, MultiScenarioService,
+                                MultiServiceConfig, ServiceConfig)
+from repro.serve.scenario import (BoundedReverseMap, ContractError,
+                                  PipelineBuilder, Request, ScenarioSpec,
+                                  ServingSubstrate, make_request_events,
+                                  registered_scenarios)
+from repro.serve.stages import Stage
+from repro.update import DeltaBatch, GroupDelta
+
+
+# ------------------------------------------------------------ typed payloads
+
+def test_request_mapping_protocol_and_copy():
+    req = Request(user_id=7, item_id=3, user_fields={"user_id": 7},
+                  item_fields={"item_id": 3})
+    assert req["user_id"] == 7 and "hist" not in req
+    req["score"] = 0.5                       # extras via mapping writes
+    assert req.get("score") == 0.5 and "score" in req
+    assert req.get("missing", "d") == "d"
+    as_dict = dict(req)                      # keys()/__getitem__ protocol
+    assert as_dict["score"] == 0.5 and "candidates" not in as_dict
+    clone = req.copy()
+    clone["score"] = 0.9
+    clone["hashed"] = {"item_id": 1}
+    assert req["score"] == 0.5 and "hashed" not in req
+
+
+# --------------------------------------------------- every registered spec
+
+def _single(spec, seed=0):
+    """One-scenario service for a spec (shed off → executor-independent
+    candidate sets, so Sim and Async results are comparable)."""
+    spec = dataclasses.replace(spec, shed=False, seed=seed)
+    return MultiScenarioService(MultiServiceConfig(scenarios=(spec,)))
+
+
+@pytest.mark.parametrize("spec", registered_scenarios(),
+                         ids=lambda s: s.name)
+def test_registered_spec_builds_and_serves_with_executor_equivalence(spec):
+    """Build + compile + serve a batch on BOTH executors; scores/topk must
+    agree (the DAG is the same graph on a virtual clock)."""
+    a = _single(spec)
+    rep_a = a.run(n_requests=12, executor="async")
+    b = _single(spec)
+    rep_b = b.run(n_requests=12, executor="sim", rate_qps=2000.0)
+    assert len(rep_a.results) == 12 and len(rep_b.results) == 12
+
+    def keyed(rep):
+        out = {}
+        for ev in rep.results:
+            out[(ev.payload["user_id"], ev.payload["item_id"])] = ev.payload
+        return out
+
+    ka, kb = keyed(rep_a), keyed(rep_b)
+    assert ka.keys() == kb.keys()
+    for k in ka:
+        pa, pb = ka[k], kb[k]
+        if spec.pipeline == "rerank":
+            assert pa["score"] == pytest.approx(pb["score"], abs=1e-6)
+        if "topk" in pa or "topk" in pb:
+            assert [i for i, _ in pa["topk"]] == [i for i, _ in pb["topk"]]
+            for (_, sa), (_, sb) in zip(pa["topk"], pb["topk"]):
+                assert sa == pytest.approx(sb, abs=1e-6)
+    # typed responses stamped at the sink
+    for ev in rep_a.results:
+        r = ev.meta["response"]
+        assert r.scenario == spec.name
+        if spec.pipeline == "retrieval":
+            assert r.topk and r.score is None
+
+
+# ------------------------------------------------------- build-time checks
+
+def test_contract_violation_fails_at_build_not_mid_traffic():
+    """A rerank pipeline without its cube stage can never satisfy the
+    rerank stage's payload contract — the builder must say so at compile
+    time."""
+    sub = ServingSubstrate()
+    b = PipelineBuilder(sub)
+    b.add_ingress("ingress")
+    b.add_scenario(ScenarioSpec(name="bad", arch_id="din",
+                                cube_fetch=False, shed=False),
+                   namespaced=False)
+    b.g.add_edge("ingress", b.entries["bad"])
+    with pytest.raises(ContractError, match="cube_rows"):
+        b.compile()
+
+
+def test_contract_checker_uses_path_intersection():
+    """A key provided on only ONE path into a multi-pred stage is not
+    guaranteed — the checker takes the intersection over predecessors."""
+
+    class Provider(Stage):
+        name = "provider"
+        provides = ("thing",)
+
+        def op(self, batch, ctx):
+            return batch
+
+    class Needs(Stage):
+        name = "needs"
+        requires = ("thing",)
+
+        def op(self, batch, ctx):
+            return batch
+
+    from repro.serve.scenario import validate_contracts
+    g = SEDP()
+    g.add_stage("src_a", Provider().op)
+    g.add_stage("src_b", lambda b, c: b)          # provides nothing
+    g.add_stage("sink", Needs().op)
+    g.add_edge("src_a", "sink")
+    g.add_edge("src_b", "sink")
+    with pytest.raises(ContractError, match="thing"):
+        validate_contracts(g.compile(), ingress_keys=set())
+    # with both paths providing it, the same graph validates
+    g2 = SEDP()
+    g2.add_stage("src_a", Provider().op)
+    g2.add_stage("src_b", Provider().op)
+    g2.add_stage("sink", Needs().op)
+    g2.add_edge("src_a", "sink")
+    g2.add_edge("src_b", "sink")
+    validate_contracts(g2.compile(), ingress_keys=set())
+
+
+# --------------------------------------------------- multi-scenario service
+
+@pytest.fixture(scope="module")
+def multi():
+    return MultiScenarioService(MultiServiceConfig(seed=0))
+
+
+def test_multi_scenario_serves_every_scenario_from_one_substrate(multi):
+    rep = multi.run(n_requests=16)
+    by = multi.by_scenario(rep)
+    assert set(by) == {"din-rerank", "dien-rerank", "mind-retrieval"}
+    assert all(len(evs) == 16 for evs in by.values())
+    for ev in by["din-rerank"] + by["dien-rerank"]:
+        assert np.isfinite(ev.payload["score"])
+        assert 0.0 <= ev.payload["score"] <= 1.0
+    for ev in by["mind-retrieval"]:
+        assert "score" not in ev.payload or ev.payload.get("generation") is None
+        assert ev.payload["topk"]
+    # ONE substrate: DIN/DIEN/MIND share the (item_id, 1024) and
+    # (item_cat, 1024) feature groups — two groups total, not six
+    assert len(multi.substrate.groups) == 2
+    # every pipeline pinned a cube version from the same shared cube
+    versions = {ev.payload.get("cube_version") for ev in rep.results
+                if "cube_version" in ev.payload}
+    assert versions
+
+
+def test_multi_scenario_query_cache_is_scenario_scoped(multi):
+    multi.run(n_requests=16)                    # warm (same seed as fixture)
+    before = multi.query_cache.stats.hits
+    rep = multi.run(n_requests=16)              # identical traffic
+    assert multi.query_cache.stats.hits > before
+    # hits route straight to respond WITH a score but WITHOUT a
+    # generation stamp; retrieval scenarios never enter the cache
+    by = multi.by_scenario(rep)
+    hit_evs = [ev for ev in by["din-rerank"] + by["dien-rerank"]
+               if "generation" not in ev.payload]
+    assert hit_evs, "second identical wave produced no query-cache hits"
+    assert all("topk" in ev.payload for ev in by["mind-retrieval"])
+
+
+def test_fanout_clones_are_independent(multi):
+    """Each scenario's stages write into their own Request clone — one
+    scenario's intermediates never leak into a sibling's payload."""
+    rep = multi.run(n_requests=8)
+    by_req: dict = {}
+    for ev in rep.results:
+        by_req.setdefault(ev.req_id, []).append(ev)
+    multi_served = [evs for evs in by_req.values() if len(evs) > 1]
+    assert multi_served, "no request was served by >1 scenario"
+    for evs in multi_served:
+        payloads = [ev.payload for ev in evs]
+        assert len({id(p) for p in payloads}) == len(payloads)
+        scens = {p["scenario"] for p in payloads}
+        assert len(scens) == len(payloads)
+
+
+def test_async_executor_accounts_for_op_created_events():
+    """Regression for the fanout-on-AsyncExecutor accounting: an op that
+    RETURNS more events than it consumed must not make run() return
+    early (or hang when events are dropped)."""
+    from repro.core.executors import AsyncExecutor
+
+    def clone_op(batch, ctx):
+        out = []
+        for ev in batch:
+            out.append(ev)
+            out.append(Event(payload=dict(ev.payload), req_id=ev.req_id))
+        return out
+
+    def drop_op(batch, ctx):
+        return [ev for ev in batch if ev.payload.get("keep", True)]
+
+    g = SEDP()
+    g.add_stage("clone", clone_op, batch_size=4)
+    g.add_stage("drop", drop_op, batch_size=4)
+    g.add_stage("sink", lambda b, c: b, batch_size=4)
+    g.chain("clone", "drop", "sink")
+    events = [Event(payload={"i": i, "keep": i % 2 == 0}) for i in range(10)]
+    rep = AsyncExecutor(g.compile()).run(events)
+    # 10 in → 20 after clone → clones of odd events dropped (keep=False
+    # rides the shallow copy) → 10 out; completing without a hang IS the
+    # accounting fix
+    assert len(rep.results) == 10
+
+
+# ------------------------------------- multi-group fetch delta coherence
+
+def test_multi_group_fetch_resolves_all_groups_under_one_pin():
+    """Deterministic slice of the tentpole property: after a delta batch
+    touching BOTH item-field groups, one cube stage pass attaches every
+    group's new rows, all stamped with one pinned version."""
+    svc = InferenceService(ServiceConfig(arch_id="din", batch_size=8,
+                                         shed=False, seed=3))
+    vocab = svc.model_cfg.item_fields[0].vocab
+    ids = np.arange(vocab)
+    dv = svc.updates.stats.last_version + 1
+    svc.updates.apply(DeltaBatch(dv, [
+        GroupDelta(group=0, ids=ids,
+                   rows=np.full((vocab, 4), 5.0, np.float32)),
+        GroupDelta(group=1, ids=ids,
+                   rows=np.full((vocab, 4), 7.0, np.float32))]))
+    evs = svc.make_requests(6, seed=42)
+    svc.plan.stages["features"].op(evs, None)
+    svc.plan.stages["cube"].op(evs, None)
+    for ev in evs:
+        rows = ev.payload["cube_rows_all"]
+        assert set(rows) == {"item_id", "item_cat"}
+        np.testing.assert_array_equal(rows["item_id"],
+                                      np.full(4, 5.0, np.float32))
+        np.testing.assert_array_equal(rows["item_cat"],
+                                      np.full(4, 7.0, np.float32))
+        assert ev.payload["cube_version"] == svc.cube.version
+        # the primary group's row keeps its historical slot
+        np.testing.assert_array_equal(ev.payload["cube_rows"],
+                                      rows["item_id"])
+
+
+def test_multi_group_no_torn_reads_under_live_delta_stream():
+    """test_live_update-style property, per group: AsyncExecutor workers
+    serve while a writer streams delta batches touching BOTH groups
+    through the UpdateManager (cube + cache invalidation + guards). Every
+    response's per-group rows must be uniform and match exactly the value
+    published at the version the response pinned."""
+    svc = InferenceService(ServiceConfig(arch_id="din", batch_size=8,
+                                         shed=False, seed=11))
+    vocab = svc.model_cfg.item_fields[0].vocab
+    ids = np.arange(vocab)
+    svc.run(n_requests=8)                   # fold build indexes, warm jits
+    published = {0: {}, 1: {}}              # group → {cube_version: value}
+    stop = threading.Event()
+    first_batch = threading.Event()
+    writer_err = []
+
+    def writer():
+        try:
+            first_batch.wait(timeout=10)
+            x = 1.0
+            dv = svc.updates.stats.last_version + 1
+            while not stop.is_set():
+                v0 = svc.cube.version
+                # record BEFORE publish: group g's apply bumps to v0+1+g
+                published[0][v0 + 1] = x
+                published[1][v0 + 2] = x
+                svc.updates.apply(DeltaBatch(dv, [
+                    GroupDelta(group=0, ids=ids, rows=np.full(
+                        (vocab, 4), x, np.float32)),
+                    GroupDelta(group=1, ids=ids, rows=np.full(
+                        (vocab, 4), x, np.float32))]))
+                x += 1.0
+                dv += 1
+                time.sleep(0.002)
+        except Exception as e:              # pragma: no cover - debug aid
+            writer_err.append(e)
+
+    def expected(group, pin_version):
+        vs = [v for v in published[group] if v <= pin_version]
+        return published[group][max(vs)] if vs else None
+
+    th = threading.Thread(target=writer, daemon=True)
+    th.start()
+    first_batch.set()
+    time.sleep(0.01)                        # let the first batch publish
+    try:
+        reports = [svc.run(n_requests=24) for _ in range(3)]
+    finally:
+        stop.set()
+        th.join(timeout=10)
+    assert not writer_err
+    checked = 0
+    seen_versions = set()
+    for rep in reports:
+        for ev in rep.results:
+            p = ev.payload
+            if "cube_rows_all" not in p:
+                continue                    # query-cache hit short-circuit
+            pv = p["cube_version"]
+            for group, fname in ((0, "item_id"), (1, "item_cat")):
+                rows = p["cube_rows_all"][fname]
+                vals = np.unique(rows)
+                # NO TORN READ within the group: one value ⇒ one version
+                assert vals.size == 1, f"torn read in group {group}: {vals}"
+                exp = expected(group, pv)
+                if exp is None:
+                    continue                # served before the first batch
+                # ATTRIBUTION: the value matches the pinned version exactly
+                assert float(vals[0]) == exp, (
+                    f"group {group} rows show {vals[0]} but version {pv} "
+                    f"published {exp}")
+                checked += 1
+            seen_versions.add(pv)
+    assert checked > 0
+    assert len(seen_versions) >= 2, seen_versions   # stream landed mid-run
+
+
+# ------------------------------------------------------ bounded reverse map
+
+def test_bounded_reverse_map_prunes_and_reports_dropped_items():
+    m = BoundedReverseMap(max_items=8, prune_fraction=0.5)
+    for i in range(12):
+        m.add(bucket=i % 4, item=i)
+    assert m.total == 12
+    dropped = m.maybe_prune()
+    assert m.total <= 4                     # 8 * (1 - 0.5)
+    remaining = {i for s in m.buckets.values() for i in s}
+    assert remaining | set(dropped) == set(range(12))
+    assert remaining.isdisjoint(dropped)
+    assert m.maybe_prune() == []            # under the cap: no-op
+
+
+def test_reverse_map_prune_invalidates_query_cache_first():
+    """The bound keeps the over-invalidation-is-safe property: any item
+    whose mapping is dropped leaves the query cache in the same stage
+    pass, so a later delta can never miss it."""
+    svc = InferenceService(ServiceConfig(arch_id="din", batch_size=8,
+                                         shed=False, seed=5,
+                                         reverse_map_items=16))
+    evs = svc.make_requests(64, seed=99)
+    items = sorted({int(ev.payload["item_id"]) for ev in evs})
+    for it in items:
+        svc.query_cache.put("warm-user", it, 0.5, now=0.0)
+    svc.plan.stages["features"].op(evs, None)
+    group0 = svc.substrate.bucket_items[0]
+    assert group0.total <= 16
+    mapped = {i for s in group0.buckets.values() for i in s}
+    for it in items:
+        if it not in mapped:
+            # mapping forgotten ⇒ score must already be invalidated
+            assert svc.query_cache.get("warm-user", it, now=0.1) is None
+
+
+# ------------------------------------------------------- stream integrity
+
+def test_corrupted_delta_skipped_and_retried_never_applied(tmp_path):
+    from repro.update import (DeltaEmitter, DeltaIntegrityError,
+                              DeltaWatcher, write_delta)
+    em = DeltaEmitter(str(tmp_path))
+    batch = em.emit([GroupDelta(group=0, ids=np.arange(8),
+                                rows=np.ones((8, 4), np.float32))])
+    npz = tmp_path / "delta_000000000000" / "group_0.npz"
+    blob = bytearray(npz.read_bytes())
+    blob[len(blob) // 2] ^= 0xFF            # flip one byte mid-file
+    npz.write_bytes(bytes(blob))
+    applied = []
+    w = DeltaWatcher(str(tmp_path), lambda b: applied.append(b.version))
+    with pytest.raises(DeltaIntegrityError):
+        w.check_once()
+    assert applied == [] and w.applied_version == -1
+    assert w.integrity_failures == 1
+    # the training side re-emits the same version; the retry applies it
+    write_delta(str(tmp_path), batch)
+    assert w.check_once()
+    assert applied == [0] and w.applied_version == 0
+
+
+def test_unmanifested_npz_rejected_and_reemit_cleans_leftovers(tmp_path):
+    """read_delta applies every group_*.npz in the directory, so a file
+    the manifest does not name must fail verification — and a re-emit of
+    the same version with fewer groups (the corrupt-delta recovery path)
+    must remove the previous attempt's leftovers rather than let them
+    ride along."""
+    from repro.update import (DeltaBatch, DeltaIntegrityError, read_delta,
+                              verify_delta, write_delta)
+    two = DeltaBatch(0, [
+        GroupDelta(group=0, ids=np.arange(4),
+                   rows=np.ones((4, 4), np.float32)),
+        GroupDelta(group=1, ids=np.arange(4),
+                   rows=np.ones((4, 4), np.float32))])
+    path = write_delta(str(tmp_path), two)
+    # a stray/tampered npz dropped into the published dir fails closed
+    np.savez(tmp_path / "delta_000000000000" / "group_7.npz",
+             ids=np.arange(2), rows=np.zeros((2, 4), np.float32),
+             delete_ids=np.empty(0, np.int64))
+    with pytest.raises(DeltaIntegrityError, match="group_7"):
+        verify_delta(path)
+    # re-emitting the version with ONE group drops group_1 and group_7
+    one = DeltaBatch(0, [GroupDelta(group=0, ids=np.arange(4),
+                                    rows=np.ones((4, 4), np.float32))])
+    write_delta(str(tmp_path), one)
+    assert verify_delta(path) is True
+    assert [g.group for g in read_delta(path).groups] == [0]
+
+
+def test_pre_checksum_deltas_still_accepted(tmp_path):
+    """Deltas emitted before the CHECKSUMS manifest existed (or by foreign
+    emitters) apply unverified — integrity is opt-out-compatible."""
+    import os
+    from repro.update import DeltaWatcher, verify_delta
+    d = tmp_path / "delta_000000000000"
+    d.mkdir()
+    np.savez(d / "group_0.npz", ids=np.arange(4),
+             rows=np.ones((4, 4), np.float32),
+             delete_ids=np.empty(0, np.int64))
+    (d / "DONE").write_text("")
+    assert verify_delta(str(d)) is False    # nothing to verify against
+    applied = []
+    w = DeltaWatcher(str(tmp_path), lambda b: applied.append(b.version))
+    assert w.check_once()
+    assert applied == [0]
+    assert os.path.exists(d)                # prune_applied defaults off
+
+
+def test_group_delta_item_ids_invalidate_items_never_seen_by_service():
+    """ROADMAP open item: a delta landing BEFORE an item's first request
+    must still invalidate a warm-started query-cache entry — the training
+    side ships the raw item ids, the manager unions them with the
+    reverse-map lookup."""
+    from repro.sparse.hashing import hash_bucket_np
+    svc = InferenceService(ServiceConfig(arch_id="din", batch_size=8,
+                                         shed=False, seed=21))
+    vocab = svc.model_cfg.item_fields[0].vocab
+    raw_item = 777_777                      # never requested: map is cold
+    bucket = int(hash_bucket_np(0, np.array([raw_item]), vocab)[0])
+    svc.query_cache.put("warm-user", raw_item, 0.9, now=0.0)
+    svc.updates.apply(DeltaBatch(
+        svc.updates.stats.last_version + 1,
+        [GroupDelta(group=0, ids=np.array([bucket]),
+                    rows=np.full((1, 4), 2.0, np.float32),
+                    item_ids=np.array([raw_item]))]))
+    assert svc.query_cache.get("warm-user", raw_item, now=0.1) is None
+
+
+# -------------------------------------------------------- request generator
+
+def test_make_request_events_covers_union_of_configs():
+    from repro.configs import registry as arch_registry
+    cfgs = []
+    for arch in ("din", "mind", "two-tower-retrieval"):
+        a = arch_registry.get(arch)
+        cfgs.append(a.reduced(a.config))
+    evs = make_request_events(cfgs, 5, seed=1)
+    assert len(evs) == 5
+    for ev in evs:
+        req = ev.payload
+        assert isinstance(req, Request)
+        for mc in cfgs:
+            for f in mc.user_fields:
+                assert f.name in req["user_fields"]
+                assert np.asarray(req["user_fields"][f.name]).size == f.bag
+            for f in mc.item_fields:
+                assert f.name in req["item_fields"]
+        assert req["hist"] is not None       # din/mind carry history
+        assert len(req["candidates"]) == 64
