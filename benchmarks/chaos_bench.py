@@ -1,0 +1,304 @@
+"""Chaos drill: failure-domain hardening under live faults (DESIGN.md §8).
+
+Two cells, two gates:
+
+  * **Exactness drill** — a real ParameterCube under a live update plane
+    (deltas + compactions landing while readers hold pins) with every
+    server killed and revived in turn. Gate: every pinned failover read is
+    BIT-IDENTICAL to the pre-kill read at the same version — zero torn or
+    stale-version rows (the §6.2 exact-failover property, measured, not
+    assumed).
+  * **Closed-loop drill** — the SimExecutor serving a diurnal+burst
+    workload against a real cube with a ``FaultInjector`` driven by the
+    virtual clock and a ``HealthRegistry`` circuit breaker attached: one
+    server is hard-killed and another latency-spiked across the traffic
+    peak. Per-request deadlines are live (``meta["deadline_s"]``). Gates:
+    ≥ 99.9% of offered requests get an answer (degraded tiers count as
+    answered; timeouts and errors do NOT), and the p99 of NON-degraded
+    responses stays within 1.5× of a fault-free baseline of the identical
+    workload.
+
+Usage:
+    PYTHONPATH=src python benchmarks/chaos_bench.py            # full run
+    PYTHONPATH=src python benchmarks/chaos_bench.py --smoke    # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.core.cube import TIER_PRIMARY, TIER_REPLICA, ParameterCube
+from repro.core.executors import SimExecutor
+from repro.core.sedp import SEDP, Event
+from repro.core.service_model import service_time_model
+from repro.data.synthetic import diurnal_burst_arrivals
+from repro.faults import FaultInjector, FaultPlan, HealthRegistry
+
+GROUP = 7
+DIM = 16
+N_SERVERS = 4
+
+# closed-loop cost model (seconds)
+INGRESS_S = 0.02e-3
+MODEL_S = 0.2e-3
+RESPOND_S = 0.02e-3
+DEADLINE_S = 25e-3
+MAX_QUEUE = 256
+
+# drill shape: kill one server across the peak, latency-spike another
+KILL_SERVER = 1
+SPIKE_SERVER = 2
+SPIKE_ADD_S = 1e-3
+
+
+# ---------------------------------------------------------------- cell 1
+
+def run_exactness(vocab: int = 4000, rounds: int = 6,
+                  round_upserts: int = 256, round_deletes: int = 32,
+                  compact_every: int = 3, sample: int = 256,
+                  seed: int = 0) -> dict:
+    """Kill/revive every server while deltas and compactions land; pinned
+    reads must stay bit-identical to the pre-kill baseline at the pin."""
+    rng = np.random.default_rng(seed)
+    cube = ParameterCube(n_servers=N_SERVERS, replication=2, block_rows=512,
+                         mem_block_fraction=0.5)
+    cube.load_table(GROUP, rng.standard_normal((vocab, DIM)
+                                               ).astype(np.float32),
+                    raw_ids=np.arange(vocab))
+    live = set(range(vocab))
+    reads = mismatched_rows = bad_tiers = kills = 0
+    for r in range(rounds):
+        ups = rng.choice(vocab, round_upserts, replace=False)
+        dels_pool = np.array(sorted(live - set(ups.tolist())), np.int64)
+        dels = rng.choice(dels_pool, min(round_deletes, dels_pool.size),
+                          replace=False)
+        cube.apply_delta(
+            GROUP, ups,
+            rng.standard_normal((round_upserts, DIM)).astype(np.float32),
+            delete_ids=dels)
+        live |= {int(u) for u in ups}
+        live -= {int(d) for d in dels}
+        with cube.pin() as pv:
+            ids = rng.choice(np.array(sorted(live), np.int64),
+                             min(sample, len(live)), replace=False)
+            baseline = cube.lookup(GROUP, ids, version=pv)
+            # the update plane keeps moving while this pin is held: a
+            # second delta publishes, and periodically the compactor folds
+            # every overlay — neither may perturb reads at the pin
+            ups2 = rng.choice(vocab, round_upserts, replace=False)
+            cube.apply_delta(
+                GROUP, ups2,
+                rng.standard_normal((round_upserts, DIM)
+                                    ).astype(np.float32))
+            live |= {int(u) for u in ups2}
+            if (r + 1) % compact_every == 0:
+                cube.compact()
+            for sid in range(N_SERVERS):
+                cube.kill_server(sid)
+                kills += 1
+                rows, tiers = cube.lookup_ex(GROUP, ids, version=pv)
+                reads += int(ids.size)
+                eq = (rows == baseline).all(axis=1)
+                mismatched_rows += int((~eq).sum())
+                bad_tiers += int((tiers > TIER_REPLICA).sum())
+                cube.revive_server(sid)
+    return {"reads": reads, "kills": kills, "versions": cube.version,
+            "compactions": cube.metrics.compactions,
+            "replica_rows": cube.metrics.replica_rows,
+            "mismatched_rows": mismatched_rows,
+            "unreachable_rows": bad_tiers,
+            "ok": mismatched_rows == 0 and bad_tiers == 0}
+
+
+# ---------------------------------------------------------------- cell 2
+
+def make_workload(n_events: int, base_qps: float, seed: int
+                  ) -> list[tuple[float, Event]]:
+    rng = np.random.default_rng(seed)
+    times = diurnal_burst_arrivals(
+        rng, n_events, base_qps, peak_mult=1.6, day_s=30.0, start_frac=0.5,
+        burst_rate_per_s=0.2, burst_mult=1.8, burst_dur_s=0.3)
+    ids = rng.integers(0, 4000, n_events)
+    return [(float(t), Event(payload={"id": int(i)},
+                             meta={"deadline_s": DEADLINE_S}))
+            for t, i in zip(times, ids)]
+
+
+def build_plan(cube, injector):
+    g = SEDP()
+
+    def ingress_op(batch, ctx):
+        for ev in batch:
+            ev.meta["cost_s"] = INGRESS_S
+        return batch
+
+    def fetch_op(batch, ctx):
+        now = ctx.now()
+        if injector is not None:
+            injector.poll(now)
+        ids = np.fromiter((ev.payload["id"] for ev in batch), np.int64,
+                          len(batch))
+        t0 = cube.metrics.simulated_latency_s
+        rows, tiers = cube.lookup_ex(GROUP, ids)
+        per = (cube.metrics.simulated_latency_s - t0) / max(1, len(batch))
+        for ev, tier, row in zip(batch, tiers, rows):
+            ev.meta["cost_s"] = per
+            ev.payload["tier"] = int(tier)
+            ev.payload["row0"] = float(row[0])
+            if tier > TIER_PRIMARY:
+                ev.meta["_degraded"] = True
+        return batch
+
+    def model_op(batch, ctx):
+        for ev in batch:
+            ev.meta["cost_s"] = MODEL_S
+            ev.payload["score"] = ev.payload["row0"]
+        return batch
+
+    def respond_op(batch, ctx):
+        for ev in batch:
+            ev.meta["cost_s"] = RESPOND_S
+        return batch
+
+    g.add_stage("ingress", ingress_op, batch_size=16, parallelism=2,
+                max_queue=MAX_QUEUE)
+    g.add_stage("fetch", fetch_op, batch_size=8, parallelism=4,
+                max_wait_s=1e-3, max_queue=MAX_QUEUE)
+    g.add_stage("model", model_op, batch_size=16, parallelism=4,
+                max_wait_s=2e-3, max_queue=MAX_QUEUE)
+    g.add_stage("respond", respond_op, batch_size=32, parallelism=2,
+                max_queue=MAX_QUEUE)
+    g.chain("ingress", "fetch", "model", "respond")
+    return g.compile()
+
+
+def run_closed_loop(n_events: int, base_qps: float, chaos: bool,
+                    seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed + 1)
+    cube = ParameterCube(n_servers=N_SERVERS, replication=2, block_rows=512,
+                         mem_block_fraction=0.5)
+    cube.load_table(GROUP, rng.standard_normal((4000, DIM)
+                                               ).astype(np.float32),
+                    raw_ids=np.arange(4000))
+    arrivals = make_workload(n_events, base_qps, seed)
+    horizon = arrivals[-1][0]
+    injector = None
+    if chaos:
+        # kill one server and latency-spike another across the peak
+        plan = (FaultPlan()
+                .kill(KILL_SERVER, 0.40 * horizon,
+                      revive_at=0.75 * horizon)
+                .latency_spike(SPIKE_SERVER, 0.45 * horizon,
+                               duration_s=0.20 * horizon,
+                               add_s=SPIKE_ADD_S))
+        injector = FaultInjector(cube, plan)
+    ex = SimExecutor(build_plan(cube, injector),
+                     service_time=service_time_model)
+    registry = HealthRegistry(N_SERVERS, clock=ex.ctx.now,
+                              failure_threshold=2, cooldown_s=0.5)
+    cube.attach_health(registry)
+    rep = ex.run(arrivals)
+    if injector is not None:
+        injector.drain()
+
+    answered = [ev for ev in rep.results
+                if not ev.meta.get("timed_out") and "error" not in ev.meta]
+    tiers = np.array([ev.payload.get("tier", 0) for ev in answered])
+    lat_ok = np.sort([ev.done_at - ev.born_at for ev, t in
+                      zip(answered, tiers) if t == TIER_PRIMARY])
+    out = {
+        "chaos": chaos, "offered": rep.offered,
+        "completed": len(rep.results), "answered": len(answered),
+        "answered_frac": len(answered) / max(1, rep.offered),
+        "timed_out": rep.expired, "errors": rep.errors,
+        "dropped": rep.dropped,
+        "degraded": {int(t): int(n) for t, n in
+                     zip(*np.unique(tiers, return_counts=True))},
+        "p50_ms": float(lat_ok[int(0.50 * (len(lat_ok) - 1))]) * 1e3,
+        "p99_nondegraded_ms":
+            float(lat_ok[int(0.99 * (len(lat_ok) - 1))]) * 1e3,
+        "replica_rows": cube.metrics.replica_rows,
+        "unavailable_rows": cube.metrics.unavailable_rows,
+        "breaker": {"opens": sum(h.opens for h in registry.servers),
+                    "closes": sum(h.closes for h in registry.servers),
+                    "skipped": registry.total_skipped},
+    }
+    if injector is not None:
+        out["faults_applied"] = len(injector.applied)
+    return out
+
+
+# ------------------------------------------------------------------ main
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--events", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-assert", action="store_true")
+    args = ap.parse_args()
+    n_events = args.events or (1500 if args.smoke else 6000)
+    rounds = 3 if args.smoke else 6
+
+    g1 = run_exactness(rounds=rounds, seed=args.seed)
+    print(f"exactness drill: {g1['reads']} pinned failover reads across "
+          f"{g1['kills']} kills / {g1['versions']} versions / "
+          f"{g1['compactions']} compactions — "
+          f"mismatched={g1['mismatched_rows']} "
+          f"unreachable={g1['unreachable_rows']} ok={g1['ok']}")
+
+    base = run_closed_loop(n_events, base_qps=1500.0, chaos=False,
+                           seed=args.seed)
+    drill = run_closed_loop(n_events, base_qps=1500.0, chaos=True,
+                            seed=args.seed)
+    for tag, r in (("fault-free", base), ("chaos", drill)):
+        print(f"  {tag:>10}: answered={r['answered_frac']:.4%} "
+              f"timeouts={r['timed_out']} errors={r['errors']} "
+              f"degraded={ {k: v for k, v in r['degraded'].items() if k} } "
+              f"p99(non-degraded)={r['p99_nondegraded_ms']:.2f}ms "
+              f"breaker={r['breaker']}")
+
+    summary = {
+        "exact_failover_ok": g1["ok"],
+        "answered_frac": drill["answered_frac"],
+        "p99_ratio_chaos_vs_baseline":
+            drill["p99_nondegraded_ms"] / max(base["p99_nondegraded_ms"],
+                                              1e-9),
+        "degraded_served": sum(v for k, v in drill["degraded"].items()
+                               if k > 0),
+        "breaker_opens": drill["breaker"]["opens"],
+    }
+    print("chaos summary: "
+          + " ".join(f"{k}={v:.4f}" if isinstance(v, float) else f"{k}={v}"
+                     for k, v in summary.items()))
+
+    os.makedirs("artifacts/bench", exist_ok=True)
+    path = os.path.join("artifacts", "bench", "chaos_drill.json")
+    with open(path, "w") as f:
+        json.dump({"config": {"n_events": n_events, "seed": args.seed,
+                              "smoke": args.smoke,
+                              "deadline_s": DEADLINE_S},
+                   "exactness": g1, "baseline": base, "drill": drill,
+                   "summary": summary}, f, indent=1)
+    print(f"wrote {path}")
+
+    if not args.no_assert:
+        assert summary["exact_failover_ok"], \
+            f"torn/stale failover reads: {g1}"
+        assert summary["answered_frac"] >= 0.999, \
+            f"availability below 99.9%: {summary['answered_frac']:.4%}"
+        assert summary["p99_ratio_chaos_vs_baseline"] <= 1.5, \
+            f"non-degraded p99 blew past 1.5x baseline: " \
+            f"{summary['p99_ratio_chaos_vs_baseline']:.2f}"
+        assert summary["degraded_served"] > 0, \
+            "drill never exercised the degradation ladder"
+        assert summary["breaker_opens"] > 0, \
+            "drill never opened a circuit breaker"
+        print("chaos drill assertions passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -76,6 +76,22 @@ def main() -> None:
            derived="primary p99 2x/1x={:.2f} (gate <=1.5)".format(
                sc2["p99_ms"] / max(sc1["p99_ms"], 1e-9)))
 
+    from benchmarks import chaos_bench
+
+    t0 = time.time()
+    ch1 = chaos_bench.run_exactness(rounds=3 if quick else 6)
+    ch_base = chaos_bench.run_closed_loop(
+        1500 if quick else 6000, base_qps=1500.0, chaos=False)
+    ch_drill = chaos_bench.run_closed_loop(
+        1500 if quick else 6000, base_qps=1500.0, chaos=True)
+    record("chaos_drill", {"exactness": ch1, "baseline": ch_base,
+                           "drill": ch_drill},
+           us=(time.time() - t0) * 1e6,
+           derived="exact={} answered={:.4f} p99_ratio={:.2f}".format(
+               ch1["ok"], ch_drill["answered_frac"],
+               ch_drill["p99_nondegraded_ms"]
+               / max(ch_base["p99_nondegraded_ms"], 1e-9)))
+
     from benchmarks import update_bench
 
     t0 = time.time()

@@ -240,8 +240,55 @@ def multi_scenario_demo(n_req: int = 32):
               f"cube v{resp.cube_version})")
 
 
+def chaos_demo(n_req: int = 48):
+    """Failure-domain hardening (DESIGN.md §8): a cube server is dead when
+    traffic starts and revives mid-run. The service keeps answering —
+    the circuit breaker routes around the corpse, failover reads come
+    from versioned replica snapshots (bit-identical at the pinned
+    version), and every response carries the degradation-ladder rung it
+    was served from plus its deadline fate."""
+    from repro.core.service import InferenceService, ServiceConfig
+    from repro.faults import HealthRegistry
+
+    svc = InferenceService(ServiceConfig(arch_id="din", batch_size=8,
+                                         shed=False, seed=0))
+    reg = HealthRegistry(svc.cube.n_servers, failure_threshold=2,
+                         cooldown_s=0.2)
+    svc.cube.attach_health(reg)
+    svc.cube.kill_server(1)
+
+    def reviver():
+        time.sleep(0.4)
+        svc.cube.revive_server(1)
+
+    th = threading.Thread(target=reviver, daemon=True)
+    th.start()
+    report = svc.run(n_requests=n_req, deadline_s=2.0)
+    th.join()
+
+    tiers: dict = {}
+    for ev in report.results:
+        r = ev.meta["response"]
+        key = "timed_out" if r.timed_out else f"tier{r.degraded_tier}"
+        tiers[key] = tiers.get(key, 0) + 1
+    print(f"chaos act: {len(report.results)}/{n_req} requests answered "
+          f"while cube server 1 was dead, then revived mid-run")
+    print(f"  degradation tiers: {dict(sorted(tiers.items()))} "
+          f"(tier0=primary tier1=versioned-replica tier2=stale-cache "
+          f"tier3=default)")
+    print(f"  breaker: opens={sum(h.opens for h in reg.servers)} "
+          f"closes={sum(h.closes for h in reg.servers)} "
+          f"probes absorbed={reg.total_skipped}; "
+          f"replica rows served={svc.cube.metrics.replica_rows}")
+
+
 if __name__ == "__main__":
     smoke = "--smoke" in sys.argv
-    main(n_req=24 if smoke else 48)
-    live_update_demo(n_req=24 if smoke else 48)
-    multi_scenario_demo(n_req=16 if smoke else 32)
+    chaos_only = "--chaos" in sys.argv
+    if chaos_only:
+        chaos_demo(n_req=24 if smoke else 48)
+    else:
+        main(n_req=24 if smoke else 48)
+        live_update_demo(n_req=24 if smoke else 48)
+        multi_scenario_demo(n_req=16 if smoke else 32)
+        chaos_demo(n_req=24 if smoke else 48)

@@ -40,6 +40,14 @@ import numpy as np
 
 from repro.sparse.hashing import signature_np
 
+# serving-tier codes for lookup_ex (DESIGN.md §8.3): the graceful-
+# degradation ladder. 2 (stale cache) is assigned by CubeFetchStage —
+# the cube itself cannot see the cache tier.
+TIER_PRIMARY = 0
+TIER_REPLICA = 1
+TIER_STALE_CACHE = 2
+TIER_DEFAULT = 3
+
 
 def _merge_last_wins(sigs: np.ndarray, *arrays: np.ndarray):
     """Sort parallel index arrays by signature, resolving duplicate
@@ -64,6 +72,8 @@ class CubeMetrics:
     mem_block_hits: int = 0      # batched path: distinct mem blocks touched
     disk_block_hits: int = 0     # batched path: distinct disk blocks touched
     failovers: int = 0
+    replica_rows: int = 0        # rows served from a replica snapshot
+    unavailable_rows: int = 0    # rows no live replica could serve
     simulated_latency_s: float = 0.0
     # streaming-update subsystem
     deltas_applied: int = 0
@@ -119,10 +129,22 @@ class CubeServer:
         self.tmpdir = tmpdir
         self.blocks: list = []       # _Block | _FreedBlock, append-only slots
         self.alive = True
+        # fault-injection dials (repro.faults): per-RPC latency added while
+        # a spike is active; multiplier on this server's disk-block latency
+        self.extra_latency_s = 0.0
+        self.disk_latency_mult = 1.0
         self._index = (np.empty(0, np.uint64), np.empty(0, np.int32),
                        np.empty(0, np.int32))
         self._pending: list[tuple[np.ndarray, int]] = []   # ingested, unsorted
         self._idx_lock = threading.Lock()
+        # versioned index snapshots: (version, (sigs, blk, off)) appended by
+        # ``publish_version`` at every cube version bump that touched this
+        # server. A pinned reader failing over probes the newest snapshot
+        # ≤ its pinned version — the DESIGN.md §6.2 exact-failover contract
+        # (replica reads are bit-identical to the primary's at that
+        # version, never the replica's freshest row). Append-only between
+        # prunes; readers capture the list reference lock-free.
+        self._snaps: list[tuple[int, tuple]] = [(0, self._index)]
         # slot ids whose blocks were reclaimed: reused by the next ingest
         # so a perpetual delta stream + compaction cadence doesn't grow the
         # block list (and its _FreedBlock sentinels) without bound. Safe:
@@ -184,6 +206,54 @@ class CubeServer:
             self._pending.clear()
             return self._index
 
+    # ------------------------------------------------ versioned snapshots
+    def publish_version(self, version: int):
+        """Record the server's index as of cube ``version``: folds pending
+        ingests and appends a (version, index) snapshot. Called by every
+        cube writer at its version bump; appending nothing when the index
+        is unchanged keeps the snapshot list proportional to the versions
+        that actually touched this server."""
+        idx = self._ensure_index()
+        with self._idx_lock:
+            last_ver, last_idx = self._snaps[-1]
+            if last_idx is idx:
+                return                         # nothing new landed here
+            if last_ver == version:            # same-version re-publish
+                self._snaps[-1] = (version, idx)
+            else:
+                self._snaps.append((version, idx))
+
+    def _index_at(self, version: int) -> tuple:
+        """Newest snapshot ≤ ``version`` (lock-free: capture the list
+        reference once; publishers only append)."""
+        snaps = self._snaps
+        lo, hi = 0, len(snaps)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if snaps[mid][0] <= version:
+                lo = mid + 1
+            else:
+                hi = mid
+        if lo == 0:          # pinned before this server's first publish
+            return (np.empty(0, np.uint64), np.empty(0, np.int32),
+                    np.empty(0, np.int32))
+        return snaps[lo - 1][1]
+
+    def prune_snapshots(self, min_version: int):
+        """Drop snapshots no pinned reader can reach: keep the newest one
+        ≤ ``min_version`` (still the answer for a reader pinned there) and
+        everything newer. Writer-driven, like block reclaim."""
+        with self._idx_lock:
+            snaps = self._snaps
+            keep_from = 0
+            for i, (ver, _) in enumerate(snaps):
+                if ver <= min_version:
+                    keep_from = i
+                else:
+                    break
+            if keep_from:
+                self._snaps = snaps[keep_from:]
+
     # ------------------------------------------------------------ probing
     def get(self, sig: int) -> Optional[tuple[np.ndarray, bool]]:
         """Scalar probe (debugging)."""
@@ -195,14 +265,19 @@ class CubeServer:
         blk = self.blocks[int(blk_a[pos])]
         return np.asarray(blk.values[int(off_a[pos])]), blk.on_disk
 
-    def get_batch(self, sigs: np.ndarray
+    def get_batch(self, sigs: np.ndarray, version: Optional[int] = None
                   ) -> tuple[Optional[np.ndarray], np.ndarray, int, int]:
         """Vectorized probe. Returns (rows, found, mem_touches, disk_touches):
         ``found`` is a boolean mask over ``sigs``; ``rows`` holds the values
         of the found signatures in order (one fancy-index gather per touched
         block); touch counts are DISTINCT blocks read, for latency accounting.
+
+        ``version``: resolve against the index snapshot published at the
+        newest cube version ≤ it (exact failover for pinned readers);
+        None probes the latest index.
         """
-        isigs, iblk, ioff = self._ensure_index()
+        isigs, iblk, ioff = (self._ensure_index() if version is None
+                             else self._index_at(version))
         m = sigs.size
         if isigs.size == 0:
             return None, np.zeros(m, bool), 0, 0
@@ -297,6 +372,17 @@ class ParameterCube:
         self._pin_lock = threading.Lock()
         self._garbage: list[tuple[int, int, int]] = []  # (retire_ver, sid, bid)
         self.overlay_blocks = 0       # blocks added by deltas since compact()
+        # optional circuit-breaker registry (repro.faults.HealthRegistry):
+        # when attached, routing consults it before probing a server — an
+        # open breaker skips the server without paying the failed probe
+        self.health = None
+
+    def attach_health(self, registry):
+        """Attach a ``repro.faults.HealthRegistry`` (one breaker per
+        server) that routing consults before touching a server."""
+        assert len(registry) == self.n_servers
+        self.health = registry
+        return registry
 
     # ------------------------------------------------------------- build
     @property
@@ -388,6 +474,12 @@ class ParameterCube:
             # publish BEFORE clearing pending: a concurrent reader's
             # lock-free fast path is "pending empty → use _snap"; clearing
             # first opens a window where it reads the PRE-fold snapshot
+            # server snapshots FIRST: a reader that pins ver+1 the instant
+            # _snap swaps may immediately fail over — the replica index at
+            # ver+1 must already exist (at ≤ ver it is unreachable: no
+            # reader can pin ver+1 before the swap below)
+            for srv_ in self.servers:
+                srv_.publish_version(ver + 1)
             self._snap = (ver + 1,) + _merge_last_wins(sigs, srv, blk, off)
             self._p_pending.clear()
             return self._snap
@@ -456,19 +548,84 @@ class ParameterCube:
         finally:
             self._pin_release(snap[0])
 
+    def lookup_ex(self, group: int, raw_ids: np.ndarray,
+                  version: Optional[PinnedVersion] = None
+                  ) -> tuple[np.ndarray, np.ndarray]:
+        """Degradation-aware batched gather (DESIGN.md §8.3): like
+        ``lookup`` but NEVER raises on a fault — returns ``(rows, tiers)``
+        where ``tiers[i]`` says how row i was served: ``TIER_PRIMARY``
+        (healthy primary, HBM-adjacent, or an authoritative tombstone
+        zero), ``TIER_REPLICA`` (versioned failover — bit-identical to the
+        primary at the pinned version), or ``TIER_DEFAULT`` (no live
+        replica could serve it; the row is zeros and the caller decides
+        whether a stale cache entry beats it)."""
+        raw = np.atleast_1d(np.asarray(raw_ids)).reshape(-1)
+        sigs = signature_np(group, raw)
+        if sigs.size == 0:
+            dim, dtype = self._shapes.get(group, (self._dim or 0, self._dtype))
+            return np.empty((0, dim), dtype), np.empty(0, np.int8)
+        if version is not None:
+            return self._lookup_pinned_ex(group, sigs, version.snap,
+                                          strict=False)
+        snap = self._pin_current()
+        try:
+            return self._lookup_pinned_ex(group, sigs, snap, strict=False)
+        finally:
+            self._pin_release(snap[0])
+
+    def _alive_mask(self) -> tuple[np.ndarray, float]:
+        """Effective server availability for one routing decision, and the
+        latency the decision itself cost. Without a health registry this is
+        the raw ``alive`` flags for free (the historical behaviour). With
+        one, each CLOSED/HALF-OPEN breaker admits a probe — a dead server's
+        failed probe costs one net RPC and is recorded (opening the breaker
+        after enough failures) — while an OPEN breaker reroutes instantly
+        and for free."""
+        if self.health is None:
+            return np.fromiter((s.alive for s in self.servers), bool,
+                               self.n_servers), 0.0
+        now = self.health.clock()
+        out = np.empty(self.n_servers, bool)
+        cost = 0.0
+        for i, s in enumerate(self.servers):
+            h = self.health.servers[i]
+            if not h.allow_request(now):
+                out[i] = False               # open breaker: free reroute
+            elif s.alive:
+                h.record_success(now)
+                out[i] = True
+            else:
+                h.record_failure(now)        # paid probe, found it dead
+                out[i] = False
+                cost += self.lat["net"]
+        return out, cost
+
     def _lookup_pinned(self, group: int, sigs: np.ndarray, snap) -> np.ndarray:
+        return self._lookup_pinned_ex(group, sigs, snap, strict=True)[0]
+
+    def _lookup_pinned_ex(self, group: int, sigs: np.ndarray, snap,
+                          strict: bool = True
+                          ) -> tuple[np.ndarray, np.ndarray]:
+        """Resolve ``sigs`` against one pinned snapshot. Returns
+        (rows, tiers) aligned with ``sigs``; tiers are the ladder codes
+        (TIER_PRIMARY / TIER_REPLICA / TIER_DEFAULT). ``strict`` keeps the
+        historical ``lookup`` contract — KeyError on a deleted or
+        unavailable signature; non-strict (``lookup_ex``) zero-fills and
+        stamps TIER_DEFAULT instead, so a fetch stage can degrade rather
+        than error."""
         _, psigs, psrv, pblk, poff = snap
         n_req = sigs.size
         uniq, inverse = np.unique(sigs, return_inverse=True)
         nu = uniq.size
         dim, dtype = self._shapes.get(group, (self._dim or 0, self._dtype))
         rows = np.empty((nu, dim), dtype)
+        tiers = np.zeros(nu, np.int8)
         primary = (uniq % np.uint64(self.n_servers)).astype(np.int64)
         t = 0.0
 
         # ---- fast path: one searchsorted over the primary index
-        alive = np.fromiter((s.alive for s in self.servers), bool,
-                            self.n_servers)
+        alive, probe_cost = self._alive_mask()
+        t += probe_cost
         pos = np.searchsorted(psigs, uniq)
         np.minimum(pos, max(0, psigs.size - 1), out=pos)
         found = (psigs[pos] == uniq) if psigs.size else \
@@ -498,6 +655,7 @@ class ParameterCube:
             gathered = np.empty((sidx.size, dim), dtype)
             touched_srv = set()
             mem_t = disk_t = 0
+            disk_lat = 0.0
             for lo, hi in zip(starts[:-1], starts[1:]):
                 c = int(scomp[lo])
                 srv_id, blk_id = c >> 32, c & 0xFFFFFFFF
@@ -506,19 +664,27 @@ class ParameterCube:
                 touched_srv.add(srv_id)
                 if block.on_disk:
                     disk_t += 1
+                    # slow-disk fault: the owning server's memmap reads
+                    # pay a multiplied latency for the fault's duration
+                    disk_lat += (self.lat["disk"]
+                                 * self.servers[srv_id].disk_latency_mult)
                 else:
                     mem_t += 1
             rows[sidx[order]] = gathered
             self.metrics.mem_block_hits += mem_t
             self.metrics.disk_block_hits += disk_t
             t += (len(touched_srv) * self.lat["net"]
-                  + mem_t * self.lat["mem"] + disk_t * self.lat["disk"])
+                  + mem_t * self.lat["mem"] + disk_lat
+                  + sum(self.servers[s].extra_latency_s
+                        for s in touched_srv))
 
         # ---- slow path: replica probing for misses / dead primaries.
-        # NOTE (DESIGN.md §6.2): per-server indexes are NOT versioned — a
-        # pinned reader that fails over reads the replica's LATEST row for
-        # the signature (freshness relaxation under faults), never a torn or
-        # freed one (blocks are append-only until unpinned).
+        # Replica indexes ARE versioned (the DESIGN.md §6.2 relaxation is
+        # closed): the probe resolves against the snapshot published at the
+        # pinned version, so a failover read is bit-identical to what the
+        # primary would have served at that version — never the replica's
+        # fresher row, never a torn or freed one.
+        pinned_ver = snap[0]
         pending = np.flatnonzero(~served & ~tomb)
         for r in range(1, self.replication):
             if pending.size == 0:
@@ -534,30 +700,43 @@ class ParameterCube:
                     continue
                 idxs = sp[lo:hi]
                 srv = self.servers[sid]
-                if not srv.alive:
+                if not alive[sid]:
                     missed.append(idxs)
                     continue
-                got, fmask, mem_t, disk_t = srv.get_batch(uniq[idxs])
-                t += self.lat["net"]                    # one RPC per server
+                got, fmask, mem_t, disk_t = srv.get_batch(
+                    uniq[idxs], version=pinned_ver)
+                t += self.lat["net"] + srv.extra_latency_s  # one RPC/server
                 if got is not None:
                     rows[idxs[fmask]] = got
+                    tiers[idxs[fmask]] = TIER_REPLICA
+                    self.metrics.replica_rows += int(fmask.sum())
                 self.metrics.mem_block_hits += mem_t
                 self.metrics.disk_block_hits += disk_t
-                t += mem_t * self.lat["mem"] + disk_t * self.lat["disk"]
+                t += (mem_t * self.lat["mem"]
+                      + disk_t * self.lat["disk"] * srv.disk_latency_mult)
                 if not fmask.all():
                     missed.append(idxs[~fmask])
             pending = (np.concatenate(missed) if missed
                        else np.empty(0, np.int64))
         if pending.size:
-            raise KeyError(
-                f"signature {uniq[pending[0]]} unavailable (group {group})")
+            if strict:
+                raise KeyError(
+                    f"signature {uniq[pending[0]]} unavailable "
+                    f"(group {group})")
+            rows[pending] = 0
+            tiers[pending] = TIER_DEFAULT
+            self.metrics.unavailable_rows += int(pending.size)
         if tomb.any():
-            raise KeyError(
-                f"signature {uniq[np.flatnonzero(tomb)[0]]} deleted "
-                f"(group {group})")
+            if strict:
+                raise KeyError(
+                    f"signature {uniq[np.flatnonzero(tomb)[0]]} deleted "
+                    f"(group {group})")
+            # a tombstone is an authoritative answer at this version — the
+            # zero row IS the value, not a degradation
+            rows[tomb] = 0
         self.metrics.lookups += n_req
         self.metrics.simulated_latency_s += t
-        return rows[inverse]
+        return rows[inverse], tiers[inverse]
 
     def contains(self, group: int, raw_ids: np.ndarray,
                  version: Optional[PinnedVersion] = None) -> np.ndarray:
@@ -674,6 +853,10 @@ class ParameterCube:
                     noff = np.insert(noff, ins, doff[m])
             else:
                 nsigs, nsrv, nblk, noff = dsigs, dsrv, dblk, doff
+            # replica indexes at ver+1 must exist before any reader can pin
+            # ver+1 (same ordering rule as _ensure_primary_index)
+            for srv_ in self.servers:
+                srv_.publish_version(ver + 1)
             self._snap = (ver + 1, nsigs, nsrv, nblk, noff)
             self.metrics.deltas_applied += 1
             self.metrics.rows_upserted += n_up
@@ -759,6 +942,11 @@ class ParameterCube:
                     self.servers[sid].install_index(
                         np.empty(0, np.uint64), np.empty(0, np.int32),
                         np.empty(0, np.int32))
+            # snapshot the fresh replica indexes at new_ver before the
+            # primary swap makes new_ver pinnable; older snapshots stay
+            # for readers still pinned behind the compaction
+            for srv_ in self.servers:
+                srv_.publish_version(new_ver)
             if new_entries:
                 nsigs = np.concatenate([s for s, _, _ in new_entries])
                 nsrv = np.concatenate([
@@ -793,8 +981,6 @@ class ParameterCube:
         must stay free of filesystem work."""
         freed = []
         with self._pin_lock:
-            if not self._garbage:
-                return
             min_pinned = min(self._pins) if self._pins else self._snap[0]
             keep = []
             for retire_ver, sid, bid in self._garbage:
@@ -803,6 +989,10 @@ class ParameterCube:
                 else:
                     keep.append((retire_ver, sid, bid))
             self._garbage = keep
+        # versioned replica snapshots age out with the same min-pin rule
+        # as retired blocks (writer-driven; readers never prune)
+        for srv in self.servers:
+            srv.prune_snapshots(min_pinned)
         for sid, bid in freed:
             block = self.servers[sid].blocks[bid]
             if not isinstance(block, _Block):

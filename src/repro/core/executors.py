@@ -16,6 +16,7 @@
 from __future__ import annotations
 
 import heapq
+import logging
 import queue
 import threading
 import time
@@ -25,6 +26,18 @@ from typing import Any, Callable, Optional
 
 from repro.core.sedp import Event, Plan, StageProcessor
 from repro.serve.batcher import MicroBatcher
+
+log = logging.getLogger(__name__)
+
+
+def _stamp_deadline(ev: Event, born_at: float):
+    """Ingress deadline stamping: a request carrying a ``deadline_s``
+    budget gets its absolute deadline fixed on the executor clock the
+    moment it enters the pipeline."""
+    if ev.deadline_at is None:
+        budget = ev.meta.get("deadline_s")
+        if budget is not None:
+            ev.deadline_at = born_at + float(budget)
 
 
 @dataclass
@@ -36,6 +49,10 @@ class StageStats:
     max_depth: int = 0        # deepest the stage's channel ever got
     overflows: int = 0        # enqueue attempts that found the channel full
     dropped: int = 0          # events shed AT this channel (overflow policy)
+    expired: int = 0          # events past their deadline at dispatch — shed
+    errors: int = 0           # events whose stage op raised (error-terminal)
+    degraded: int = 0         # events this stage served off the ladder's
+    #                           non-primary tiers (replica/stale/default)
 
     @property
     def avg_batch(self):
@@ -50,6 +67,8 @@ class RunReport:
     results: list = field(default_factory=list)
     offered: int = 0          # events injected at the source
     dropped: int = 0          # events shed by overflow policy (never finish)
+    expired: int = 0          # deadline-expired events (finish timed-out)
+    errors: int = 0           # events terminated by a stage-op exception
 
     @property
     def throughput(self):
@@ -106,6 +125,11 @@ class ExecContext:
     def now(self) -> float:
         return self.executor._now()
 
+    def total_expired(self) -> int:
+        """Deadline expirations across every stage so far — the expiry-rate
+        shedding signal (``QuotaController`` folds its growth into quota)."""
+        return sum(st.expired for st in self.executor.stats.values())
+
 
 # --------------------------------------------------------------- Async
 
@@ -148,21 +172,56 @@ class AsyncExecutor:
                 1e-4, mb.deadline() - time.monotonic()))
             batch = None
             try:
-                batch = mb.offer(ch.get(timeout=timeout))
+                ev = ch.get(timeout=timeout)
+                batch = mb.offer(ev, deadline_at=ev.deadline_at)
             except queue.Empty:
                 pass
             if batch is None:
                 batch = mb.poll()
             if batch is None:
                 continue
+            if self._gen != gen:
+                return       # a newer run() started: don't touch its state
+            # deadline gate at dispatch: an expired event short-circuits to
+            # a timed-out terminal instead of occupying this stage (and
+            # everything downstream of it)
+            now = time.monotonic()
+            expired = [e for e in batch if e.deadline_at is not None
+                       and now > e.deadline_at]
+            if expired:
+                st = self.stats[sp.name]
+                st.expired += len(expired)
+                for e in expired:
+                    e.meta["timed_out"] = True
+                    e.meta["_terminal"] = True
+                self._emit(sp.name, expired, gen)
+                batch = [e for e in batch if not e.meta.get("timed_out")]
+                if not batch:
+                    continue
             t0 = time.monotonic()
-            out = sp.op(batch, self.ctx) or []
+            try:
+                out = sp.op(batch, self.ctx) or []
+                failed = False
+            except Exception as e:  # noqa: BLE001 — a poisoned op must
+                # become an error-terminal response, never a dead worker
+                log.exception("stage %r op raised; failing its batch "
+                              "terminally", sp.name)
+                failed = True
+                out = list(batch)
+                for ev in out:
+                    ev.meta["error"] = f"{type(e).__name__}: {e}"
+                    ev.meta["_terminal"] = True
             if self._gen != gen:
                 return       # a newer run() started: don't touch its state
             st = self.stats[sp.name]
             st.events += len(batch)
             st.batches += 1
             st.busy_s += time.monotonic() - t0
+            if failed:
+                st.errors += len(batch)
+            for e in batch:
+                if e.meta.pop("_degraded", None):
+                    st.degraded += 1
             # ops may CREATE events (multi-tenant fanout clones) or DROP
             # them (filters): the completion count must track the actual
             # in-flight population or run() would return early / hang
@@ -195,6 +254,8 @@ class AsyncExecutor:
         for ev in events:
             targets = ([ev.route] if ev.route in succs else succs)
             ev.route = None
+            if ev.meta.pop("_terminal", False):
+                targets = []     # expired/errored: straight to the sink
             if not targets:
                 ev.done_at = time.monotonic()
                 self.out_q.put(ev)
@@ -230,6 +291,7 @@ class AsyncExecutor:
             self._pending = len(events)
         for ev in events:
             ev.born_at = time.monotonic()
+            _stamp_deadline(ev, ev.born_at)
             # bounded ingress: a full source channel pushes back on the
             # injector exactly like any other upstream
             self._put_blocking(source, ev, gen)
@@ -250,7 +312,9 @@ class AsyncExecutor:
             latencies=[ev.done_at - ev.born_at for ev in done],
             stage_stats=dict(self.stats),
             makespan_s=time.monotonic() - t_start,
-            results=done, offered=len(events))
+            results=done, offered=len(events),
+            expired=sum(st.expired for st in self.stats.values()),
+            errors=sum(st.errors for st in self.stats.values()))
         return rep
 
 
@@ -337,6 +401,7 @@ class SimExecutor:
         seq = 0
         for t, ev in arrivals:
             ev.born_at = t
+            _stamp_deadline(ev, t)
             heapq.heappush(pq, _SimItem(t, seq, "arrive", (source, ev)))
             seq += 1
         while pq:
@@ -373,7 +438,9 @@ class SimExecutor:
             stage_stats=dict(self.stats),
             makespan_s=self._clock - self._t_start,
             results=self._done, offered=len(arrivals),
-            dropped=self._dropped)
+            dropped=self._dropped,
+            expired=sum(st.expired for st in self.stats.values()),
+            errors=sum(st.errors for st in self.stats.values()))
         return rep
 
     def _try_dispatch(self, stage: str, pq, seq: int) -> int:
@@ -387,6 +454,11 @@ class SimExecutor:
                 break
             if len(q) < sp.batch_size and wait > 0.0:
                 t_flush = q[0][0] + wait
+                # the window never outwaits the tightest member's request
+                # deadline (MicroBatcher discipline on the virtual clock)
+                dls = [e.deadline_at for _, e in q if e.deadline_at is not None]
+                if dls:
+                    t_flush = min(t_flush, min(dls))
                 if t_flush > self._clock:
                     # partial batch inside its window: hold it and schedule
                     # ONE flush poll at window close
@@ -400,8 +472,35 @@ class SimExecutor:
             batch = [e for _, e in entries]
             st = self.stats[stage]
             st.queue_wait_s += sum(self._clock - t for t, _ in entries)
+            # deadline gate at dispatch: expired events finish timed-out
+            # NOW, consuming no server time here or downstream
+            expired = [e for e in batch if e.deadline_at is not None
+                       and self._clock > e.deadline_at]
+            if expired:
+                st.expired += len(expired)
+                for e in expired:
+                    e.meta["timed_out"] = True
+                    e.meta.pop("cost_s", None)
+                    e.done_at = self._clock
+                self._done.extend(expired)
+                batch = [e for e in batch if not e.meta.get("timed_out")]
+                if not batch:
+                    continue
             t0 = self._clock
-            out = sp.op(batch, self.ctx) or []
+            try:
+                out = sp.op(batch, self.ctx) or []
+            except Exception as e:  # noqa: BLE001 — error-terminal, not a
+                # wedged simulated server
+                log.exception("stage %r op raised; failing its batch "
+                              "terminally", stage)
+                st.errors += len(batch)
+                out = list(batch)
+                for ev in out:
+                    ev.meta["error"] = f"{type(e).__name__}: {e}"
+                    ev.meta["_terminal"] = True
+            for e in batch:
+                if e.meta.pop("_degraded", None):
+                    st.degraded += 1
             dt = self.service_time(sp, batch)
             for e in batch:                     # cost consumed by THIS stage
                 e.meta.pop("cost_s", None)
@@ -431,6 +530,8 @@ class SimExecutor:
         for ev in events:
             targets = ([ev.route] if ev.route in succs else succs)
             ev.route = None
+            if ev.meta.pop("_terminal", False):
+                targets = []     # expired/errored: straight to the sink
             if not targets:
                 ev.done_at = self._clock
                 self._done.append(ev)

@@ -150,11 +150,18 @@ class QuotaController:
     free capacity; → 0.02 as the downstream saturates."""
 
     def __init__(self, downstream: str = "rerank",
-                 depth_capacity: float = 64.0, alpha: float = 0.35):
+                 depth_capacity: float = 64.0, alpha: float = 0.35,
+                 expiry_weight: float = 8.0):
         self.downstream = downstream
         self.depth_capacity = depth_capacity
         self.alpha = alpha
+        # deadline-expiry shedding signal (DESIGN.md §8.4): requests dying
+        # of old age downstream are the most direct overload evidence
+        # there is — weight each fresh expiration this many queue-depth
+        # units when folding it into the quota
+        self.expiry_weight = expiry_weight
         self._q = 1.0
+        self._last_expired = 0
 
     def observe(self, ctx) -> float:
         depth = (ctx.queue_depth(self.downstream)
@@ -164,6 +171,14 @@ class QuotaController:
             util = ctx.utilization(self.downstream)
             if util > 1.0:      # demand exceeds service capacity: clamp hard
                 raw = min(raw, 1.0 / (util * util))
+        if hasattr(ctx, "total_expired"):
+            exp = ctx.total_expired()
+            d_exp = exp - self._last_expired
+            self._last_expired = exp
+            if d_exp > 0:       # requests are expiring NOW: cut quota like
+                # an equivalent queue-depth surge would
+                raw = min(raw, self.depth_capacity
+                          / (self.depth_capacity + self.expiry_weight * d_exp))
         self._q += self.alpha * (raw - self._q)
         return float(np.clip(self._q, 0.02, 1.2))
 

@@ -31,6 +31,11 @@ class Event:
     route: Optional[str] = None        # next-stage override (None = all succs)
     born_at: float = 0.0               # set by the executor clock
     done_at: float = 0.0
+    # absolute deadline on the executor clock (None = no budget). Stamped
+    # at ingress from meta["deadline_s"] (born_at + budget); every stage
+    # dispatch checks it — an expired event short-circuits to a timed-out
+    # terminal instead of occupying downstream stages (DESIGN.md §8.4)
+    deadline_at: Optional[float] = None
     meta: dict = field(default_factory=dict)
 
 

@@ -151,18 +151,32 @@ class _ServiceBase:
         raise NotImplementedError
 
     def run(self, n_requests: int = 64, executor: str = "async",
-            rate_qps: float = 500.0):
+            rate_qps: float = 500.0, deadline_s: Optional[float] = None):
         """Serve n_requests end to end. ``executor="async"`` is the real
         threaded path (bounded channels block upstream — backpressure);
         ``executor="sim"`` runs the identical DAG on the virtual clock with
-        the shedders as the bounded-channel overflow policy."""
-        reqs = self.make_requests(n_requests, seed=self.cfg.seed)
+        the shedders as the bounded-channel overflow policy.
+
+        ``deadline_s`` gives every request a latency budget: an event that
+        outlives it is shed at the next stage dispatch and finishes as a
+        timed-out terminal (``Response.timed_out``, DESIGN.md §8.4)."""
+        reqs = self.make_requests(n_requests, seed=self.cfg.seed,
+                                  deadline_s=deadline_s)
         if executor == "async":
-            return AsyncExecutor(self.plan).run(reqs)
-        if executor != "sim":
+            rep = AsyncExecutor(self.plan).run(reqs)
+        elif executor == "sim":
+            ex = SimExecutor(self.plan,
+                             overflow_policy=self._overflow_policy())
+            rep = ex.run([(i / rate_qps, ev) for i, ev in enumerate(reqs)])
+        else:
             raise ValueError(f"unknown executor {executor!r}")
-        ex = SimExecutor(self.plan, overflow_policy=self._overflow_policy())
-        return ex.run([(i / rate_qps, ev) for i, ev in enumerate(reqs)])
+        # expired/errored events short-circuit past RespondStage — give
+        # them a typed Response too so callers see ONE result surface
+        from repro.serve.stages import Response
+        for ev in rep.results:
+            if "response" not in ev.meta:
+                ev.meta["response"] = Response.from_event(ev)
+        return rep
 
 
 class InferenceService(_ServiceBase):
@@ -201,8 +215,10 @@ class InferenceService(_ServiceBase):
         """Primary group's bucket → raw-items reverse map (bounded)."""
         return self.substrate.bucket_items[self._rt.cube_groups[0][1]].buckets
 
-    def make_requests(self, n: int, seed: int = 0) -> list[Event]:
-        return make_request_events([self.model_cfg], n, seed=seed)
+    def make_requests(self, n: int, seed: int = 0,
+                      deadline_s: Optional[float] = None) -> list[Event]:
+        return make_request_events([self.model_cfg], n, seed=seed,
+                                   deadline_s=deadline_s)
 
     def _overflow_policy(self):
         return self.shedder.on_overflow if self.shedder else None
@@ -273,9 +289,11 @@ class MultiScenarioService(_ServiceBase):
         self.update_watcher = self._make_watcher()
 
     # ------------------------------------------------------------ traffic
-    def make_requests(self, n: int, seed: int = 0) -> list[Event]:
+    def make_requests(self, n: int, seed: int = 0,
+                      deadline_s: Optional[float] = None) -> list[Event]:
         return make_request_events(
-            [rt.model_cfg for rt in self.runtimes.values()], n, seed=seed)
+            [rt.model_cfg for rt in self.runtimes.values()], n, seed=seed,
+            deadline_s=deadline_s)
 
     def _overflow_policy(self):
         def policy(stage, ev, ctx):

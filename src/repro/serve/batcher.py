@@ -24,22 +24,33 @@ class MicroBatcher:
     max_wait_s: float = 0.002
     _buf: list = field(default_factory=list)
     _first_at: float = 0.0
+    _min_deadline: Optional[float] = None
 
-    def offer(self, item, now: Optional[float] = None) -> Optional[list]:
+    def offer(self, item, now: Optional[float] = None,
+              deadline_at: Optional[float] = None) -> Optional[list]:
+        """``deadline_at``: the item's absolute request deadline, when it
+        carries one — the batch's effective flush deadline becomes its
+        TIGHTEST member's (a batching window must never be the reason an
+        almost-expired request times out in the buffer)."""
         now = time.monotonic() if now is None else now
         if not self._buf:
             self._first_at = now
+            self._min_deadline = None
         self._buf.append(item)
+        if deadline_at is not None:
+            self._min_deadline = (deadline_at if self._min_deadline is None
+                                  else min(self._min_deadline, deadline_at))
         if len(self._buf) >= self.max_batch:
             return self.flush()
         return None
 
     def poll(self, now: Optional[float] = None) -> Optional[list]:
         now = time.monotonic() if now is None else now
-        # compare against first_at + wait (the same expression deadline()
-        # returns) — the subtraction form disagrees with it in the last ulp
-        # at large clock values, making the boundary poll a no-op
-        if self._buf and now >= self._first_at + self.max_wait_s:
+        # compare against deadline() (the same expression the scheduler
+        # sleeps on) — a recomputed subtraction form disagrees with it in
+        # the last ulp at large clock values, making the boundary poll a
+        # no-op
+        if self._buf and now >= self.deadline():
             return self.flush()
         return None
 
@@ -47,12 +58,17 @@ class MicroBatcher:
         if not self._buf:
             return None
         out, self._buf = self._buf, []
+        self._min_deadline = None
         return out
 
     def deadline(self) -> float:
-        """When the currently-buffered partial batch must flush (undefined
-        when empty — check ``len`` first)."""
-        return self._first_at + self.max_wait_s
+        """When the currently-buffered partial batch must flush: the
+        batching-window close, pulled earlier to the tightest member's
+        request deadline (undefined when empty — check ``len`` first)."""
+        window = self._first_at + self.max_wait_s
+        if self._min_deadline is not None:
+            return min(window, self._min_deadline)
+        return window
 
     def __len__(self) -> int:
         return len(self._buf)

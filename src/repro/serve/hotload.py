@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import logging
 import os
+import random
 import threading
 from dataclasses import dataclass
 from typing import Any, Callable, List, Optional
@@ -76,14 +77,26 @@ class PollWatcher:
     no operator signal. Now each consecutive failure doubles the wait (up
     to ``max_backoff_s``), the exception is logged, and ``failures`` /
     ``last_error`` expose the state to health checks; the first success
-    resets the backoff."""
+    resets the backoff.
 
-    def __init__(self, poll_s: float = 1.0, max_backoff_s: float = 30.0):
+    ``jitter`` (default on) decorrelates the retries: a fleet of watchers
+    that all saw the same bad artifact would otherwise re-poll it in
+    LOCKSTEP at 1s, 2s, 4s, ... — a synchronized thundering herd on the
+    artifact store every power-of-two tick. Decorrelated jitter (sleep =
+    uniform(poll_s, 3 × previous sleep), capped at ``max_backoff_s``)
+    spreads them out while keeping the same growth rate and cap;
+    ``jitter_seed`` pins the sequence for deterministic tests."""
+
+    def __init__(self, poll_s: float = 1.0, max_backoff_s: float = 30.0,
+                 jitter: bool = True, jitter_seed: Optional[int] = None):
         self.poll_s = poll_s
         self.max_backoff_s = max_backoff_s
+        self.jitter = jitter
         self.failures = 0               # consecutive failures (resets on ok)
         self.total_failures = 0
         self.last_error: Optional[BaseException] = None
+        self._rng = random.Random(jitter_seed)
+        self._prev_backoff = 0.0
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
@@ -92,12 +105,20 @@ class PollWatcher:
 
     def _backoff_s(self) -> float:
         if not self.failures:
+            self._prev_backoff = 0.0
             return self.poll_s
         # cap the exponent: 2.0**1024 raises OverflowError, which would
         # escape loop() (the wait runs outside the try) and silently kill
         # the watcher thread after ~1k consecutive failures
-        return min(self.poll_s * (2.0 ** min(self.failures, 30)),
-                   self.max_backoff_s)
+        exp = min(self.poll_s * (2.0 ** min(self.failures, 30)),
+                  self.max_backoff_s)
+        if not self.jitter:
+            self._prev_backoff = exp
+            return exp
+        prev = self._prev_backoff if self._prev_backoff > 0 else self.poll_s
+        hi = max(self.poll_s, min(self.max_backoff_s, prev * 3.0))
+        self._prev_backoff = self._rng.uniform(self.poll_s, hi)
+        return self._prev_backoff
 
     def start(self):
         def loop():
@@ -106,15 +127,18 @@ class PollWatcher:
                     self.check_once()
                     self.failures = 0
                     self.last_error = None
+                    wait = self._backoff_s()
                 except Exception as e:  # noqa: BLE001 — keep serving
                     self.failures += 1
                     self.total_failures += 1
                     self.last_error = e
+                    # sample the (jittered) backoff ONCE per tick: the
+                    # logged wait must be the wait actually slept
+                    wait = self._backoff_s()
                     log.warning(
                         "%s poll failed (attempt %d, retry in %.1fs): %s",
-                        type(self).__name__, self.failures,
-                        self._backoff_s(), e)
-                self._stop.wait(self._backoff_s())
+                        type(self).__name__, self.failures, wait, e)
+                self._stop.wait(wait)
         self._thread = threading.Thread(target=loop, daemon=True)
         self._thread.start()
 
@@ -130,8 +154,8 @@ class ModelMonitor(PollWatcher):
 
     def __init__(self, watch_dir: str, buffer: DoubleBuffer,
                  loader: Callable[[str], Any], poll_s: float = 1.0,
-                 max_backoff_s: float = 30.0):
-        super().__init__(poll_s=poll_s, max_backoff_s=max_backoff_s)
+                 max_backoff_s: float = 30.0, **kw):
+        super().__init__(poll_s=poll_s, max_backoff_s=max_backoff_s, **kw)
         self.watch_dir = watch_dir
         self.buffer = buffer
         self.loader = loader

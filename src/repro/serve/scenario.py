@@ -574,11 +574,17 @@ class PipelineBuilder:
 # ------------------------------------------------------------ request gen
 
 def make_request_events(model_cfgs, n: int, seed: int = 0,
-                        n_candidates: int = 64) -> list[Event]:
+                        n_candidates: int = 64,
+                        deadline_s: Optional[float] = None) -> list[Event]:
     """Synthetic typed Requests covering the UNION of the given model
     configs' feature fields — one request stream that every scenario in a
     multi-scenario service can consume (each pipeline reads only the
-    fields its config names)."""
+    fields its config names).
+
+    ``deadline_s`` attaches a per-request latency budget
+    (``meta["deadline_s"]``): the executor stamps an absolute deadline at
+    ingress and sheds the event at any later dispatch once it expires
+    (DESIGN.md §8.4)."""
     from repro.data import synthetic
     rng = np.random.default_rng(seed)
     user_fields: dict = {}
@@ -611,5 +617,8 @@ def make_request_events(model_cfgs, n: int, seed: int = 0,
             hist=hist[i] if hist is not None else None,
             candidates=[(j, float(rng.random()))
                         for j in range(n_candidates)])
-        evs.append(Event(payload=req))
+        ev = Event(payload=req)
+        if deadline_s is not None:
+            ev.meta["deadline_s"] = float(deadline_s)
+        evs.append(ev)
     return evs

@@ -19,11 +19,15 @@ stage class serves DIN, DIEN and retrieval scenarios alike.
 """
 from __future__ import annotations
 
+import threading
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Optional
 
 import numpy as np
 
+from repro.core.cube import (TIER_DEFAULT, TIER_PRIMARY, TIER_REPLICA,
+                             TIER_STALE_CACHE)
 from repro.sparse.hashing import hash_bucket_np
 
 # ---------------------------------------------------------------- payloads
@@ -119,6 +123,14 @@ class Response:
     generation: Optional[int] = None
     cube_version: Optional[int] = None
     from_cache: bool = False
+    # graceful-degradation ladder rung this answer was served from
+    # (DESIGN.md §8.5): 0 primary, 1 versioned replica, 2 stale-cache
+    # row, 3 default embedding. 0 also for cache hits (they bypass the
+    # cube stage entirely).
+    degraded_tier: int = 0
+    # the request blew its deadline budget: the event was short-circuited
+    # to the sink without a score (DESIGN.md §8.4)
+    timed_out: bool = False
 
     @classmethod
     def from_event(cls, ev) -> "Response":
@@ -129,7 +141,9 @@ class Response:
                    score=get("score"), topk=get("topk"),
                    generation=get("generation"),
                    cube_version=get("cube_version"),
-                   from_cache=("score" in p and "generation" not in p))
+                   from_cache=("score" in p and "generation" not in p),
+                   degraded_tier=int(get("degraded_tier", 0) or 0),
+                   timed_out=bool(ev.meta.get("timed_out")))
 
 
 # ------------------------------------------------------------- stage base
@@ -257,24 +271,66 @@ class CubeFetchStage(Stage):
     property). Known relaxation (DESIGN.md §7.3): the cube publishes a
     multi-group delta batch one group at a time, so a pin landing between
     those publishes resolves adjacent groups at adjacent versions — each
-    internally coherent, not batch-atomic across groups."""
+    internally coherent, not batch-atomic across groups.
+
+    Graceful degradation (DESIGN.md §8.5): the cube resolves misses via
+    ``lookup_ex``, which walks the ladder healthy-primary → versioned
+    replica (bit-identical at the pinned version) → TIER_DEFAULT when no
+    holder is reachable. This stage inserts one more rung between those
+    last two: a bounded stale-row side buffer (most recent authoritative
+    row seen per key, ANY version) answers TIER_DEFAULT keys as
+    TIER_STALE_CACHE before falling back to the default embedding. The
+    event's worst rung is stamped into ``payload["degraded_tier"]`` (→
+    ``Response.degraded_tier``) and counted in ``StageStats.degraded``
+    via the ``_degraded`` meta marker."""
     name = "cube"
     requires = ("hashed",)
-    provides = ("cube_rows", "cube_rows_all", "cube_version")
+    provides = ("cube_rows", "cube_rows_all", "cube_version",
+                "degraded_tier")
     batch_size = 8
     parallelism = 2
 
-    def __init__(self, rt):
+    def __init__(self, rt, stale_cap: int = 4096):
         self.rt = rt
+        # stale-row side buffer: cache_key → last authoritative row. LRU-
+        # bounded; deliberately NOT invalidated by deltas (its whole point
+        # is answering when nothing current is reachable — staleness is
+        # the contract, and the tier stamp declares it to the caller).
+        self.stale_cap = stale_cap
+        self._stale: OrderedDict = OrderedDict()
+        self._stale_lock = threading.Lock()
 
-    def _fetch_group(self, group: int, keys: list, pv) -> dict:
+    # ------------------------------------------- stale-row side buffer
+    def _stale_get(self, ck):
+        with self._stale_lock:
+            row = self._stale.get(ck)
+            if row is not None:
+                self._stale.move_to_end(ck)
+            return row
+
+    def _stale_put(self, sub, group: int, rows: dict):
+        if not rows:
+            return
+        with self._stale_lock:
+            for k, r in rows.items():
+                ck = sub.cache_key(group, k)
+                self._stale[ck] = r
+                self._stale.move_to_end(ck)
+            while len(self._stale) > self.stale_cap:
+                self._stale.popitem(last=False)
+
+    def _fetch_group(self, group: int, keys: list, pv
+                     ) -> tuple[dict, dict]:
         """Resolve one group's hashed keys at the pinned version; returns
-        key → row for every key (cached rows included)."""
+        (key → row, key → degradation tier) for every key (cached rows
+        included, tier 0)."""
         sub = self.rt.substrate
         cache_keys = [sub.cache_key(group, k) for k in keys]
         fetched: dict = {}
+        tiers: dict = {}
         cached = sub.cube_cache.get_many(cache_keys)
         by_key = {k: c[0] for k, c in zip(keys, cached) if c is not None}
+        tier_by_key = {k: TIER_PRIMARY for k in by_key}
         miss = sorted({k for k, c in zip(keys, cached) if c is None})
         if miss:
             pending = np.asarray(miss, np.int64)
@@ -286,6 +342,7 @@ class CubeFetchStage(Stage):
                 for k, r, f in zip(pending.tolist(), hrows, hfound):
                     if f:
                         fetched[int(k)] = r
+                        tiers[int(k)] = TIER_PRIMARY
                 pending = pending[~hfound]
             if pending.size:
                 live = sub.cube.contains(group, pending, version=pv)
@@ -293,48 +350,85 @@ class CubeFetchStage(Stage):
                     dim = (sub.cube.row_shape(group) or (4,))[0]
                     zero = np.zeros(dim, np.float32)
                     for k in pending[~live].tolist():
+                        # tombstone: the zero row IS the authoritative
+                        # answer at this version — tier 0, not degraded
                         fetched[int(k)] = zero
+                        tiers[int(k)] = TIER_PRIMARY
                     pending = pending[live]
             if pending.size:
-                rows = sub.cube.lookup(group, pending, version=pv)
+                rows, row_tiers = sub.cube.lookup_ex(group, pending,
+                                                     version=pv)
                 for i, k in enumerate(pending.tolist()):
-                    fetched[int(k)] = rows[i]
-            sub.cube_cache.put_many(
-                [sub.cache_key(group, k) for k in fetched],
-                [fetched[k][None] for k in fetched])
-            # close the cache-aside race: a delta may have published (and
-            # run its targeted invalidation) between our pinned fetch and
-            # the insert above, which would resurrect pre-delta rows as
-            # fresh entries. Drop our own inserts for exactly the keys
-            # deltas touched since the pin; a cold touched-key log forces
-            # the conservative full drop.
-            if sub.cube.version != pv.version:
-                touched = sub.updates.touched_since(pv.version)
-                own = {sub.cache_key(group, k): k for k in fetched}
-                drop = (list(own) if touched is None else
-                        [ck for ck in own if ck in touched[0]])
-                if drop:
-                    sub.cube_cache.invalidate_keys(drop)
+                    t = int(row_tiers[i])
+                    if t == TIER_DEFAULT:
+                        srow = self._stale_get(sub.cache_key(group, k))
+                        if srow is not None:
+                            fetched[k] = srow
+                            tiers[k] = TIER_STALE_CACHE
+                            continue
+                    fetched[k] = rows[i]
+                    tiers[k] = t
+            # only version-accurate rows (primary/replica — bit-identical
+            # at the pin) may enter the cube cache; stale/default rows
+            # would poison later requests with silently-wrong tier-0 hits
+            ok = {k: r for k, r in fetched.items()
+                  if tiers[k] <= TIER_REPLICA}
+            if ok:
+                sub.cube_cache.put_many(
+                    [sub.cache_key(group, k) for k in ok],
+                    [ok[k][None] for k in ok])
+                # close the cache-aside race: a delta may have published
+                # (and run its targeted invalidation) between our pinned
+                # fetch and the insert above, which would resurrect
+                # pre-delta rows as fresh entries. Drop our own inserts
+                # for exactly the keys deltas touched since the pin; a
+                # cold touched-key log forces the conservative full drop.
+                if sub.cube.version != pv.version:
+                    touched = sub.updates.touched_since(pv.version)
+                    own = {sub.cache_key(group, k): k for k in ok}
+                    drop = (list(own) if touched is None else
+                            [ck for ck in own if ck in touched[0]])
+                    if drop:
+                        sub.cube_cache.invalidate_keys(drop)
             by_key.update(fetched)
-        return by_key
+            tier_by_key.update(tiers)
+        # refresh the stale side buffer with every version-accurate row
+        # this sweep resolved (cache hits included)
+        self._stale_put(sub, group,
+                        {k: by_key[k] for k in by_key
+                         if tier_by_key[k] <= TIER_REPLICA})
+        return by_key, tier_by_key
 
     def op(self, batch, ctx):
         sub = self.rt.substrate
         primary = self.rt.cube_groups[0][0] if self.rt.cube_groups else None
+        worst = [TIER_PRIMARY] * len(batch)
         with sub.cube.pin() as pv:
             rows_all = [dict() for _ in batch]
             for fname, group, _vocab in self.rt.cube_groups:
                 keys = [int(ev.payload["hashed"][fname]) for ev in batch]
-                by_key = self._fetch_group(group, keys, pv)
-                for out, k in zip(rows_all, keys):
+                by_key, tier_by_key = self._fetch_group(group, keys, pv)
+                for i, (out, k) in enumerate(zip(rows_all, keys)):
                     out[fname] = np.asarray(by_key[k], np.float32)
-            for ev, out in zip(batch, rows_all):
+                    worst[i] = max(worst[i], tier_by_key[k])
+            for ev, out, tier in zip(batch, rows_all, worst):
                 ev.payload["cube_rows_all"] = out
                 if primary is not None:
                     # the primary group's row keeps its historical payload
                     # slot (and the packed batch's ``cube_tail``)
                     ev.payload["cube_rows"] = out[primary]
                 ev.payload["cube_version"] = pv.version
+                ev.payload["degraded_tier"] = int(tier)
+                if tier > TIER_PRIMARY:
+                    ev.meta["_degraded"] = True
+        # post-fetch deadline check: a fetch that burned the whole budget
+        # on breaker probes / slow disk marks the event now, so the NEXT
+        # dispatch sheds it before it ever occupies the model stage
+        now = ctx.now() if ctx is not None and hasattr(ctx, "now") else None
+        if now is not None:
+            for ev in batch:
+                if ev.deadline_at is not None and now >= ev.deadline_at:
+                    ev.meta["timed_out"] = True
         return batch
 
 

@@ -244,8 +244,8 @@ class DeltaWatcher(PollWatcher):
     def __init__(self, watch_dir: str, apply_fn: Callable[[DeltaBatch], int],
                  poll_s: float = 0.25, max_backoff_s: float = 10.0,
                  start_after_version: int = -1, prune_applied: bool = False,
-                 verify_checksums: bool = True):
-        super().__init__(poll_s=poll_s, max_backoff_s=max_backoff_s)
+                 verify_checksums: bool = True, **kw):
+        super().__init__(poll_s=poll_s, max_backoff_s=max_backoff_s, **kw)
         self.watch_dir = watch_dir
         self.apply_fn = apply_fn
         self.applied_version = start_after_version

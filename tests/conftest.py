@@ -13,8 +13,25 @@ try:
 except ModuleNotFoundError:
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_stubs"))
 
+import faulthandler
+
 import numpy as np
 import pytest
+
+# Per-test hang watchdog: threaded executor tests that deadlock would
+# otherwise stall the whole tier-1 run silently until the CI job timeout.
+# faulthandler dumps every thread's stack and kills the process instead,
+# pointing straight at the stuck lock. 0 disables it.
+_TEST_TIMEOUT_S = float(os.environ.get("REPRO_TEST_TIMEOUT_S", "180"))
+
+
+@pytest.fixture(autouse=True)
+def _hang_watchdog():
+    if _TEST_TIMEOUT_S > 0:
+        faulthandler.dump_traceback_later(_TEST_TIMEOUT_S, exit=True)
+    yield
+    if _TEST_TIMEOUT_S > 0:
+        faulthandler.cancel_dump_traceback_later()
 
 
 @pytest.fixture()

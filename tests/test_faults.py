@@ -1,0 +1,393 @@
+"""Failure-domain hardening (DESIGN.md §8): fault plans and injection,
+the per-server circuit breaker, versioned exact failover, the
+graceful-degradation ladder, deadline propagation and expiry shedding,
+error-terminal stage ops, and decorrelated retry backoff."""
+import numpy as np
+import pytest
+
+from repro.core.cube import (TIER_DEFAULT, TIER_PRIMARY, TIER_REPLICA,
+                             TIER_STALE_CACHE, ParameterCube)
+from repro.core.executors import AsyncExecutor, SimExecutor
+from repro.core.irm.shedding import QuotaController
+from repro.core.sedp import SEDP, Event
+from repro.faults import (BREAKER_CLOSED, BREAKER_HALF_OPEN, BREAKER_OPEN,
+                          FaultInjector, FaultPlan, HealthRegistry,
+                          ServerHealth)
+from repro.serve.batcher import MicroBatcher
+from repro.serve.hotload import PollWatcher
+
+DIM = 8
+N_IDS = 128
+GROUP = 3
+
+
+def _cube(n_servers=4, replication=2, seed=0):
+    rng = np.random.default_rng(seed)
+    cube = ParameterCube(n_servers=n_servers, replication=replication,
+                         block_rows=16, mem_block_fraction=0.5)
+    cube.load_table(GROUP,
+                    rng.standard_normal((N_IDS, DIM)).astype(np.float32))
+    return cube
+
+
+# ---------------------------------------------------------- fault plans
+
+def test_fault_plan_random_is_deterministic_in_seed():
+    a = FaultPlan.random(seed=3, n_servers=4, horizon_s=30.0,
+                         rate_per_s=0.5)
+    b = FaultPlan.random(seed=3, n_servers=4, horizon_s=30.0,
+                         rate_per_s=0.5)
+    assert a.events == b.events and len(a.events) > 0
+    c = FaultPlan.random(seed=4, n_servers=4, horizon_s=30.0,
+                         rate_per_s=0.5)
+    assert a.events != c.events
+
+
+def test_fault_plan_timeline_orders_recoveries_after_starts():
+    plan = (FaultPlan().kill(0, at=2.0, revive_at=5.0)
+            .latency_spike(1, at=5.0, duration_s=1.0, add_s=1e-3))
+    tl = plan.timeline()
+    assert [(t, ph) for t, ph, _ in tl] == [(2.0, 0), (5.0, 0), (5.0, 1),
+                                            (6.0, 1)]
+
+
+def test_fault_injector_applies_and_recovers_against_caller_clock():
+    cube = _cube()
+    plan = (FaultPlan().kill(0, at=1.0, revive_at=2.0)
+            .latency_spike(1, at=1.5, duration_s=1.0, add_s=3e-3)
+            .slow_disk(2, at=1.5, duration_s=1.0, mult=7.0))
+    inj = FaultInjector(cube, plan)
+    assert inj.poll(0.5) == 0 and cube.servers[0].alive
+    assert inj.poll(1.0) == 1 and not cube.servers[0].alive
+    inj.poll(1.6)
+    assert cube.servers[1].extra_latency_s == 3e-3
+    assert cube.servers[2].disk_latency_mult == 7.0
+    inj.poll(2.0)
+    assert cube.servers[0].alive            # revived
+    assert inj.drain() == 2                 # spike + disk recoveries
+    assert inj.exhausted
+    assert cube.servers[1].extra_latency_s == 0.0
+    assert cube.servers[2].disk_latency_mult == 1.0
+    # idempotent: polling backwards/again applies nothing
+    assert inj.poll(0.0) == 0
+
+
+# ------------------------------------------------------ circuit breaker
+
+def test_breaker_state_machine_full_cycle():
+    h = ServerHealth(failure_threshold=2, cooldown_s=1.0)
+    assert h.allow_request(0.0) and h.state == BREAKER_CLOSED
+    h.record_failure(0.0)
+    assert h.state == BREAKER_CLOSED        # below threshold
+    h.record_failure(0.1)
+    assert h.state == BREAKER_OPEN and h.opens == 1
+    assert not h.allow_request(0.5)         # cooling down: absorbed
+    assert h.skipped == 1
+    assert h.allow_request(1.2)             # half-open: ONE probe admitted
+    assert h.state == BREAKER_HALF_OPEN
+    assert not h.allow_request(1.2)         # second caller absorbed
+    h.record_failure(1.3)                   # probe failed → re-open
+    assert h.state == BREAKER_OPEN
+    assert h.allow_request(2.4)             # next half-open probe
+    h.record_success(2.5)
+    assert h.state == BREAKER_CLOSED and h.closes == 1
+    assert h.consecutive_failures == 0
+
+
+def test_breaker_routes_around_dead_server_and_recloses():
+    cube = _cube()
+    clock = {"t": 0.0}
+    reg = HealthRegistry(cube.n_servers, clock=lambda: clock["t"],
+                         failure_threshold=2, cooldown_s=1.0)
+    cube.attach_health(reg)
+    ids = np.arange(N_IDS)
+    baseline = cube.lookup(GROUP, ids)
+    cube.kill_server(1)
+    for _ in range(3):                      # probes open the breaker
+        clock["t"] += 0.01
+        np.testing.assert_array_equal(cube.lookup(GROUP, ids), baseline)
+    assert reg[1].state == BREAKER_OPEN
+    skipped0 = reg.total_skipped
+    clock["t"] += 0.01
+    cube.lookup(GROUP, ids)                 # open breaker: free reroute
+    assert reg.total_skipped > skipped0
+    cube.revive_server(1)
+    clock["t"] += 2.0                       # past cooldown: probe succeeds
+    np.testing.assert_array_equal(cube.lookup(GROUP, ids), baseline)
+    assert reg[1].state == BREAKER_CLOSED and reg[1].closes == 1
+
+
+# ------------------------------------------- versioned failover + ladder
+
+def test_failover_reads_pinned_version_not_fresher_state():
+    """The §6.2 closure: a replica must answer at the PINNED version even
+    after later deltas landed — not at its freshest local state."""
+    cube = _cube()
+    ids = np.arange(N_IDS)
+    with cube.pin() as pv:
+        want = cube.lookup(GROUP, ids, version=pv)
+        # the update plane moves on while the pin is held
+        cube.apply_delta(GROUP, ids,
+                         np.full((N_IDS, DIM), 99.0, np.float32))
+        cube.compact()
+        for sid in range(cube.n_servers):
+            cube.kill_server(sid)
+            rows, tiers = cube.lookup_ex(GROUP, ids, version=pv)
+            np.testing.assert_array_equal(rows, want)
+            assert tiers.max() <= TIER_REPLICA
+            cube.revive_server(sid)
+    assert cube.metrics.replica_rows > 0
+    # and an unpinned read sees the delta, on every replica too
+    cube.kill_server(0)
+    assert (cube.lookup(GROUP, ids) == 99.0).all()
+
+
+def test_lookup_ex_degrades_to_default_when_no_holder_is_alive():
+    cube = _cube()
+    ids = np.arange(16)
+    for sid in range(cube.n_servers):
+        cube.kill_server(sid)
+    rows, tiers = cube.lookup_ex(GROUP, ids)
+    assert (tiers == TIER_DEFAULT).all()
+    assert (rows == 0.0).all()
+    assert cube.metrics.unavailable_rows == 16
+    # strict lookup still raises — only lookup_ex walks the ladder
+    with pytest.raises(KeyError):
+        cube.lookup(GROUP, ids)
+
+
+# -------------------------------------------------- stage ladder (tier 2)
+
+@pytest.fixture(scope="module")
+def svc():
+    from repro.core.service import InferenceService, ServiceConfig
+    return InferenceService(ServiceConfig(arch_id="din", batch_size=8,
+                                          shed=False, seed=0))
+
+
+def test_cube_stage_falls_back_to_stale_rows_then_default(svc):
+    warm = svc.make_requests(6, seed=11)
+    svc.plan.stages["features"].op(warm, None)
+    svc.plan.stages["cube"].op(warm, None)
+    assert all(ev.payload["degraded_tier"] == TIER_PRIMARY for ev in warm)
+    want = {int(ev.payload["hashed"]["item_id"]):
+            ev.payload["cube_rows"].copy() for ev in warm}
+    for sid in range(svc.cube.n_servers):
+        svc.cube.kill_server(sid)
+    try:
+        # cold caches + dead fleet: the stale side buffer is the only rung
+        # left above the default embedding
+        svc.cube_cache.bump_generation()
+        again = svc.make_requests(6, seed=11)
+        svc.plan.stages["features"].op(again, None)
+        svc.plan.stages["cube"].op(again, None)
+        for ev in again:
+            assert ev.payload["degraded_tier"] == TIER_STALE_CACHE
+            assert ev.meta.get("_degraded")
+            np.testing.assert_array_equal(
+                ev.payload["cube_rows"],
+                want[int(ev.payload["hashed"]["item_id"])])
+        # keys never seen before have no stale row: default embedding
+        svc.cube_cache.bump_generation()
+        fresh = svc.make_requests(6, seed=77)
+        svc.plan.stages["features"].op(fresh, None)
+        svc.plan.stages["cube"].op(fresh, None)
+        seen = set(want)
+        for ev in fresh:
+            if int(ev.payload["hashed"]["item_id"]) in seen:
+                continue
+            assert ev.payload["degraded_tier"] == TIER_DEFAULT
+            assert (ev.payload["cube_rows"] == 0.0).all()
+    finally:
+        for sid in range(svc.cube.n_servers):
+            svc.cube.revive_server(sid)
+        svc.cube_cache.bump_generation()
+
+
+def test_response_carries_degraded_tier_and_timeout_flags():
+    from repro.serve.stages import Response
+    ev = Event(payload={"scenario": "din", "user_id": 1, "item_id": 2,
+                        "degraded_tier": TIER_STALE_CACHE})
+    ev.meta["timed_out"] = True
+    r = Response.from_event(ev)
+    assert r.degraded_tier == TIER_STALE_CACHE and r.timed_out
+    r0 = Response.from_event(Event(payload={"scenario": "din"}))
+    assert r0.degraded_tier == 0 and not r0.timed_out
+
+
+# -------------------------------------------------- poisoned ops survive
+
+def _poison_plan():
+    g = SEDP()
+    g.add_stage("ingress", lambda b, c: b, batch_size=1, parallelism=1,
+                sim_base_s=1e-5)
+
+    def work(batch, ctx):
+        for ev in batch:
+            if ev.payload.get("poison"):
+                raise RuntimeError("bad row")
+            ev.payload["worked"] = True
+            ev.meta["cost_s"] = 1e-4
+        return batch
+
+    g.add_stage("work", work, batch_size=1, parallelism=1, sim_base_s=1e-5)
+    g.add_stage("respond", lambda b, c: b, batch_size=1, sim_base_s=1e-5)
+    g.chain("ingress", "work", "respond")
+    return g.compile()
+
+
+def test_async_executor_survives_poisoned_op():
+    ex = AsyncExecutor(_poison_plan())
+    events = [Event(payload={"i": i, "poison": i % 3 == 0})
+              for i in range(12)]
+    rep = ex.run(events)
+    assert len(rep.results) == 12           # nothing lost, no dead worker
+    assert rep.errors == 4
+    assert rep.stage_stats["work"].errors == 4
+    for ev in rep.results:
+        if ev.payload["poison"]:
+            assert "RuntimeError" in ev.meta["error"]
+            assert "worked" not in ev.payload
+        else:
+            assert ev.payload["worked"] and "error" not in ev.meta
+    # the executor stays serviceable after the failures
+    rep2 = ex.run([Event(payload={"i": 0, "poison": False})])
+    assert len(rep2.results) == 1 and rep2.errors == 0
+
+
+def test_sim_executor_survives_poisoned_op():
+    ex = SimExecutor(_poison_plan())
+    events = [Event(payload={"i": i, "poison": i % 3 == 0})
+              for i in range(12)]
+    rep = ex.run([(i * 1e-3, ev) for i, ev in enumerate(events)])
+    assert len(rep.results) == 12
+    assert rep.errors == 4
+    assert all("RuntimeError" in ev.meta["error"] for ev in rep.results
+               if ev.payload["poison"])
+    assert all(ev.payload.get("worked") for ev in rep.results
+               if not ev.payload["poison"])
+
+
+# ------------------------------------------------- deadline propagation
+
+def test_sim_executor_sheds_expired_events_before_the_model_stage():
+    """Closed loop: a saturated stage queues events past their budget —
+    they finish as timed-out terminals WITHOUT consuming model service
+    time, and the expiry count feeds the quota controller."""
+    g = SEDP()
+    g.add_stage("ingress", lambda b, c: b, batch_size=1, parallelism=1,
+                sim_base_s=1e-5)
+    worked = {"n": 0}
+
+    def model(batch, ctx):
+        worked["n"] += len(batch)
+        for ev in batch:
+            ev.payload["scored"] = True
+        return batch
+
+    # 20ms/event at parallelism 1 = 50 qps of model capacity
+    g.add_stage("model", model, batch_size=1, parallelism=1,
+                sim_per_item_s=20e-3)
+    g.add_stage("respond", lambda b, c: b, batch_size=1, sim_base_s=1e-5)
+    g.chain("ingress", "model", "respond")
+    ex = SimExecutor(g.compile())
+    # 40 events in 40ms against 50 qps of capacity, each with a 50ms
+    # budget: the tail of the queue MUST expire before being served
+    events = [Event(payload={"i": i}, meta={"deadline_s": 50e-3})
+              for i in range(40)]
+    rep = ex.run([(i * 1e-3, ev) for i, ev in enumerate(events)])
+    assert len(rep.results) == 40           # every event gets a terminal
+    timed_out = [ev for ev in rep.results if ev.meta.get("timed_out")]
+    assert rep.expired == len(timed_out) > 0
+    # the bulk expires AT the model dispatch gate — those events never
+    # reach the op, consuming zero model service time (a straggler that
+    # expires one hop later, at respond, was already scored)
+    shed_at_model = rep.stage_stats["model"].expired
+    assert shed_at_model > 0
+    assert worked["n"] == 40 - shed_at_model
+    assert sum(1 for ev in timed_out
+               if "scored" not in ev.payload) == shed_at_model
+    assert all(ev.deadline_at is not None for ev in rep.results)
+
+    # the expiry rate folds into the quota as an overload signal
+    class Ctx:
+        def queue_depth(self, stage):
+            return 0
+
+        def total_expired(self):
+            return rep.expired
+
+    qc = QuotaController(depth_capacity=64.0, expiry_weight=8.0)
+    q_before = qc.value
+    q_after = qc.observe(Ctx())
+    assert q_after < q_before               # fresh expirations cut quota
+    assert qc.observe(Ctx()) >= q_after     # no NEW expiry → recovers
+
+
+def test_async_executor_stamps_and_enforces_deadlines():
+    g = SEDP()
+
+    def slow(batch, ctx):
+        import time as _t
+        _t.sleep(0.03)
+        for ev in batch:
+            ev.payload["worked"] = True
+        return batch
+
+    g.add_stage("slow", slow, batch_size=1, parallelism=1)
+    g.add_stage("respond", lambda b, c: b, batch_size=1)
+    g.chain("slow", "respond")
+    ex = AsyncExecutor(g.compile())
+    events = [Event(payload={"i": i}, meta={"deadline_s": 0.01})
+              for i in range(4)]
+    rep = ex.run(events)
+    assert len(rep.results) == 4
+    # the first event is dispatched fresh; the ones queued behind the 30ms
+    # op blow their 10ms budget at the respond dispatch gate
+    assert rep.expired > 0
+    assert all(ev.deadline_at == pytest.approx(ev.born_at + 0.01)
+               for ev in rep.results)
+    assert all(ev.meta.get("timed_out") for ev in rep.results
+               if not ev.payload.get("worked"))
+
+
+def test_micro_batcher_flushes_at_tightest_member_deadline():
+    mb = MicroBatcher(max_batch=8, max_wait_s=10e-3)
+    assert mb.offer("a", now=0.0) is None
+    assert mb.deadline() == pytest.approx(10e-3)        # window only
+    assert mb.offer("b", now=1e-3, deadline_at=4e-3) is None
+    assert mb.deadline() == pytest.approx(4e-3)         # tightest member
+    assert mb.offer("c", now=2e-3, deadline_at=6e-3) is None
+    assert mb.deadline() == pytest.approx(4e-3)         # min, not last
+    assert mb.poll(now=3.9e-3) is None
+    assert mb.poll(now=4e-3) == ["a", "b", "c"]
+    # the deadline floor resets with the buffer
+    assert mb.offer("d", now=5e-3) is None
+    assert mb.deadline() == pytest.approx(15e-3)
+
+
+# --------------------------------------------------- decorrelated jitter
+
+def test_backoff_jitter_stays_in_bounds_and_caps():
+    w = PollWatcher(poll_s=0.5, max_backoff_s=4.0, jitter_seed=42)
+    prev = 0.5
+    sleeps = []
+    for k in range(1, 12):
+        w.failures = k
+        s = w._backoff_s()
+        sleeps.append(s)
+        assert 0.5 <= s <= 4.0                          # cap always holds
+        assert s <= max(0.5, min(4.0, prev * 3.0)) + 1e-12
+        prev = s
+    # decorrelated: the sequence actually varies
+    assert len({round(s, 6) for s in sleeps}) > 3
+    # seeded: the same watcher config replays the same schedule
+    w2 = PollWatcher(poll_s=0.5, max_backoff_s=4.0, jitter_seed=42)
+    s2 = []
+    for k in range(1, 12):
+        w2.failures = k
+        s2.append(w2._backoff_s())
+    assert s2 == sleeps
+    # a success resets the decorrelation state back to poll_s
+    w.failures = 0
+    assert w._backoff_s() == 0.5 and w._prev_backoff == 0.0

@@ -269,8 +269,11 @@ def test_model_monitor_loader_fails_once_then_succeeds(tmp_path):
 
 
 def test_model_monitor_backoff_grows_and_caps():
+    # jitter=False restores the exact exponential schedule (the default
+    # decorrelated-jitter path is covered by tests/test_faults.py)
     mon = ModelMonitor("/nonexistent", DoubleBuffer(Generation(0, None)),
-                       loader=lambda p: p, poll_s=0.5, max_backoff_s=4.0)
+                       loader=lambda p: p, poll_s=0.5, max_backoff_s=4.0,
+                       jitter=False)
     assert mon._backoff_s() == 0.5
     mon.failures = 1
     assert mon._backoff_s() == 1.0
@@ -423,3 +426,93 @@ def test_op_cube_keeps_inserts_when_raced_delta_touched_other_keys(svc):
     finally:
         svc.cube_cache.put_many = real_put
     assert all(svc.cube_cache.get(k) is not None for k in keys)
+
+
+# ------------------------------------------- failover x update plane
+
+def test_failover_reads_bit_identical_under_kills_and_delta_stream(rng):
+    """Versioned failover (DESIGN.md §8.3): while deltas publish, the
+    compactor folds, AND servers die and revive mid-traffic, every pinned
+    read stays attributable to exactly one published version — replica
+    rows are bit-identical to what the primary served at the pin."""
+    from repro.core.cube import TIER_REPLICA
+    cube = _value_cube()
+    ids_all = np.arange(N_IDS)
+    published = {cube.version: 0.0}
+    stop = threading.Event()
+    first_batch = threading.Event()
+    bg_err = []
+
+    def writer():
+        try:
+            first_batch.wait(timeout=10)
+            k = 0
+            while not stop.is_set():
+                next_v = cube.version + 1
+                published[next_v] = float(next_v)
+                cube.apply_delta(0, ids_all,
+                                 np.full((N_IDS, DIM), float(next_v),
+                                         np.float32))
+                k += 1
+                if k % 5 == 0:
+                    v = cube.compact()
+                    published[v] = published[v - 1]
+                time.sleep(0.001)
+        except Exception as e:             # pragma: no cover - debug aid
+            bg_err.append(e)
+
+    def killer():
+        try:
+            first_batch.wait(timeout=10)
+            sid = 0
+            while not stop.is_set():
+                cube.kill_server(sid)      # one dead server at a time:
+                time.sleep(0.002)          # replication=2 keeps every row
+                cube.revive_server(sid)    # reachable via its replica
+                sid = (sid + 1) % cube.n_servers
+        except Exception as e:             # pragma: no cover - debug aid
+            bg_err.append(e)
+
+    def op_lookup(batch, ctx):
+        first_batch.set()
+        with cube.pin() as pv:
+            for ev in batch:
+                rows, tiers = cube.lookup_ex(0, ev.payload["ids"],
+                                             version=pv)
+                ev.payload["version"] = pv.version
+                ev.payload["values"] = np.unique(rows)
+                ev.payload["max_tier"] = int(tiers.max())
+        time.sleep(0.0005)
+        return batch
+
+    g = SEDP()
+    g.add_stage("ingress", lambda b, c: b, batch_size=4, parallelism=2)
+    g.add_stage("lookup", op_lookup, batch_size=8, parallelism=3)
+    g.add_stage("respond", lambda b, c: b, batch_size=8)
+    g.chain("ingress", "lookup", "respond")
+    plan = g.compile()
+
+    events = [Event(payload={"ids": rng.integers(0, N_IDS, 32)})
+              for _ in range(240)]
+    threads = [threading.Thread(target=writer, daemon=True),
+               threading.Thread(target=killer, daemon=True)]
+    for th in threads:
+        th.start()
+    try:
+        report = AsyncExecutor(plan).run(events)
+    finally:
+        stop.set()
+        for th in threads:
+            th.join(timeout=10)
+    assert not bg_err
+    assert len(report.results) == len(events)
+    for ev in report.results:
+        vals = ev.payload["values"]
+        # bit-identical failover: one value per response ⇒ one version,
+        # whether the rows came from the primary or a replica snapshot
+        assert vals.size == 1, f"torn failover read: values {vals}"
+        assert published[ev.payload["version"]] == float(vals[0])
+        # the ladder never fell past the versioned-replica rung
+        assert ev.payload["max_tier"] <= TIER_REPLICA
+    # the drill actually exercised the replica path
+    assert cube.metrics.replica_rows > 0
