@@ -1,10 +1,13 @@
-"""Streaming parameter-update benchmark (DESIGN.md §6) — two gates.
+"""Streaming parameter-update benchmark (DESIGN.md §6) — three gates.
 
 GATE 1 — bit-identical application. A cube that ingested a random delta
 stream (upserts of existing rows, inserts into fresh id space, deletes,
 interleaved compactions) must serve every live id BIT-IDENTICAL to a cube
 rebuilt from scratch from the final logical state, and raise KeyError for
-every deleted id — on the healthy path and under a killed primary.
+every deleted id — on the healthy path and under a killed primary. Runs
+TWICE: once with monolithic compaction, once with incremental/chunked
+compaction (``compact(max_rows_per_pass=...)``, DESIGN.md §6.6) — both
+arms must match the rebuild.
 
 GATE 2 — bounded serving-latency impact. The closed-loop AsyncExecutor
 harness (ingress → cache-fronted cube lookup → respond, parallel stage
@@ -12,11 +15,20 @@ workers, bounded channels — the same stage discipline as
 ``core/service.py``) serves identical Zipf traffic twice: a no-update
 baseline, and with a CONTINUOUS delta stream applied by an update thread
 (per-batch upserts + targeted cache invalidation through UpdateManager,
-periodic compaction). Gate: p99 with updates ≤ 1.5× the no-update p99.
-Runs are interleaved (base/upd/base/upd) and the best of each config is
-compared, to cancel container noise drift; the ratio denominator has a
+periodic CHUNKED compaction). Gate: p99 with updates ≤ 1.5× the no-update
+p99. Runs are interleaved (base/upd/base/upd) and the best of each config
+is compared, to cancel container noise drift; the ratio denominator has a
 small floor so the gate measures interference, not jitter, when both p99s
 sit in the tens of microseconds.
+
+GATE 3 — bounded compaction pause. Two identically-churned cubes compact
+the same overlay backlog, one monolithic and one chunked. The chunked arm
+must (a) actually run multiple passes, (b) stay bit-identical to the
+monolithic result, and (c) hold the writer lock for at most
+``HOLD_RATIO_MAX`` of the monolithic single-pass hold (with a small
+absolute floor so the gate measures the pause bound, not clock jitter) —
+the §6.6 contract that incremental compaction bounds the stop-the-world
+risk a full rebuild carries at scale.
 
 Usage:
     PYTHONPATH=src python benchmarks/update_bench.py            # full run
@@ -42,13 +54,16 @@ from repro.update import DeltaBatch, GroupDelta, UpdateManager
 GROUP = 0
 DIM = 16
 P99_FLOOR_S = 0.5e-3        # denominator floor: below this, p99 is jitter
+HOLD_RATIO_MAX = 0.6        # gate 3: chunked max hold vs monolithic hold
+HOLD_FLOOR_S = 5e-3         # …with an absolute floor against clock jitter
 
 
 # ------------------------------------------------------------------ gate 1
 
 def run_bit_identical(seed: int = 0, vocab: int = 20_000, rounds: int = 12,
                       round_upserts: int = 1024, round_deletes: int = 96,
-                      compact_every: int = 4) -> dict:
+                      compact_every: int = 4,
+                      max_rows_per_pass: int | None = None) -> dict:
     rng = np.random.default_rng(seed)
     cube = ParameterCube(n_servers=4, replication=2, block_rows=2048,
                          mem_block_fraction=0.5)
@@ -66,7 +81,7 @@ def run_bit_identical(seed: int = 0, vocab: int = 20_000, rounds: int = 12,
         for i in dels:
             state.pop(int(i), None)
         if (step + 1) % compact_every == 0:
-            cube.compact()
+            cube.compact(max_rows_per_pass=max_rows_per_pass)
 
     live = np.array(sorted(state), np.int64)
     want = np.stack([state[int(i)] for i in live])
@@ -109,6 +124,9 @@ def run_bit_identical(seed: int = 0, vocab: int = 20_000, rounds: int = 12,
         "rows_upserted": cube.metrics.rows_upserted,
         "rows_deleted": cube.metrics.rows_deleted,
         "compactions": cube.metrics.compactions,
+        "compact_passes": cube.metrics.compact_passes,
+        "compact_max_hold_ms": cube.metrics.compact_max_hold_s * 1e3,
+        "max_rows_per_pass": max_rows_per_pass,
         "blocks_freed": cube.metrics.blocks_freed,
         "final_version": cube.version,
         "live_ids": int(live.size),
@@ -191,7 +209,11 @@ def _closed_loop_once(seed: int, n_events: int, vocab: int,
     cube.load_table(GROUP, rng.normal(
         0, 0.01, (vocab, DIM)).astype(np.float32))
     cache = TwoTierLFUCache(64, 512)
-    mgr = UpdateManager(cube, cube_cache=cache, compact_after_blocks=512)
+    # chunked compaction on the live path: maybe_compact folds the backlog
+    # across short holds instead of one stop-the-world pass (gate 3
+    # measures the hold bound in isolation; here it defends the p99)
+    mgr = UpdateManager(cube, cube_cache=cache, compact_after_blocks=512,
+                        compact_max_rows_per_pass=4096)
     plan = _build_serving_plan(cube, cache)
     events = _make_events(np.random.default_rng(seed + 1), n_events,
                           vocab, ids_per_req)
@@ -231,6 +253,8 @@ def _closed_loop_once(seed: int, n_events: int, vocab: int,
         "throughput_qps": report.throughput,
         "deltas_during_run": n_published[0],
         "compactions": cube.metrics.compactions,
+        "compact_passes": cube.metrics.compact_passes,
+        "compact_max_hold_ms": cube.metrics.compact_max_hold_s * 1e3,
         "cache_invalidations": cache.invalidations,
         "final_version": cube.version,
     }
@@ -262,6 +286,64 @@ def run_closed_loop(seed: int = 0, n_events: int = 1500, vocab: int = 60_000,
     }
 
 
+# ------------------------------------------------------------------ gate 3
+
+def run_compaction_hold(seed: int = 0, vocab: int = 40_000, rounds: int = 10,
+                        round_upserts: int = 2048, round_deletes: int = 128,
+                        max_rows_per_pass: int = 8192) -> dict:
+    """Monolithic vs chunked compaction of the SAME overlay backlog: the
+    chunked arm must run multiple short writer-lock holds, produce
+    bit-identical routing, and bound its longest hold well under the
+    monolithic single-pass hold."""
+    def churned():
+        rng = np.random.default_rng(seed)
+        cube = ParameterCube(n_servers=4, replication=2, block_rows=2048,
+                             mem_block_fraction=1.0)
+        cube.load_table(GROUP, rng.normal(
+            0, 0.01, (vocab, DIM)).astype(np.float32))
+        cube._ensure_primary_index()
+        for _ in range(rounds):
+            ids = rng.integers(0, vocab, round_upserts)
+            rows = rng.normal(0, 0.01,
+                              (round_upserts, DIM)).astype(np.float32)
+            dels = rng.integers(0, vocab, round_deletes)
+            cube.apply_delta(GROUP, ids, rows, delete_ids=dels)
+        return cube
+
+    mono, chun = churned(), churned()
+    mono.compact()
+    chun.compact(max_rows_per_pass=max_rows_per_pass)
+    rng = np.random.default_rng(seed + 1)
+    ids = np.arange(vocab, dtype=np.int64)
+    mismatches = 0
+    lm, lc = mono.contains(GROUP, ids), chun.contains(GROUP, ids)
+    if not np.array_equal(lm, lc):
+        mismatches += 1
+    else:
+        live = ids[lm]
+        for lo in range(0, live.size, 8192):
+            sel = live[lo:lo + 8192]
+            if not np.array_equal(mono.lookup(GROUP, sel),
+                                  chun.lookup(GROUP, sel)):
+                mismatches += 1
+    mono_hold = mono.metrics.compact_max_hold_s
+    chun_hold = chun.metrics.compact_max_hold_s
+    hold_budget = max(HOLD_RATIO_MAX * mono_hold, HOLD_FLOOR_S)
+    return {
+        "max_rows_per_pass": max_rows_per_pass,
+        "mono_passes": mono.metrics.compact_passes,
+        "chunked_passes": chun.metrics.compact_passes,
+        "mono_max_hold_ms": mono_hold * 1e3,
+        "chunked_max_hold_ms": chun_hold * 1e3,
+        "hold_budget_ms": hold_budget * 1e3,
+        "hold_ratio": chun_hold / max(mono_hold, 1e-9),
+        "mismatched_batches": mismatches,
+        "overlay_blocks_left": chun.overlay_blocks,
+        "ok": (chun.metrics.compact_passes > 1 and mismatches == 0
+               and chun.overlay_blocks == 0 and chun_hold <= hold_budget),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -273,13 +355,20 @@ def main():
     if args.smoke:
         g1_kw = dict(vocab=8_000, rounds=6, round_upserts=512,
                      round_deletes=48, compact_every=3)
+        g1_chunk_rows = 1024
         g2_kw = dict(n_events=600, vocab=30_000, pairs=2)
+        g3_kw = dict(vocab=16_000, rounds=8, round_upserts=1024,
+                     round_deletes=64, max_rows_per_pass=2048)
     else:
         g1_kw = {}
+        g1_chunk_rows = 4096
         g2_kw = dict(n_events=2000, pairs=3)
+        g3_kw = {}
 
     t0 = time.time()
     g1 = run_bit_identical(seed=args.seed, **g1_kw)
+    g1c = run_bit_identical(seed=args.seed,
+                            max_rows_per_pass=g1_chunk_rows, **g1_kw)
     print(f"gate1 (bit-identical): {g1['deltas_applied']} deltas "
           f"({g1['rows_upserted']} upserts, {g1['rows_deleted']} deletes, "
           f"{g1['compactions']} compactions) → version {g1['final_version']}; "
@@ -287,6 +376,11 @@ def main():
           f"{g1['mismatched_batches']} mismatched batches, "
           f"{g1['delete_errors']} delete errors "
           f"[{time.time() - t0:.1f}s]")
+    print(f"gate1-chunked: {g1c['compactions']} compactions over "
+          f"{g1c['compact_passes']} passes "
+          f"(max hold {g1c['compact_max_hold_ms']:.2f}ms), "
+          f"{g1c['mismatched_batches']} mismatched batches, "
+          f"{g1c['delete_errors']} delete errors")
 
     t0 = time.time()
     g2 = run_closed_loop(seed=args.seed, **g2_kw)
@@ -312,23 +406,45 @@ def main():
           f"{g2['deltas_during_runs']} deltas streamed "
           f"[{time.time() - t0:.1f}s]")
 
+    t0 = time.time()
+    g3 = run_compaction_hold(seed=args.seed, **g3_kw)
+    print(f"gate3 (compaction hold): monolithic {g3['mono_max_hold_ms']:.2f}ms"
+          f" in {g3['mono_passes']} pass vs chunked "
+          f"{g3['chunked_max_hold_ms']:.2f}ms max over "
+          f"{g3['chunked_passes']} passes (budget "
+          f"{g3['hold_budget_ms']:.2f}ms, ratio {g3['hold_ratio']:.2f}) "
+          f"[{time.time() - t0:.1f}s]")
+
     os.makedirs("artifacts/bench", exist_ok=True)
     path = os.path.join("artifacts", "bench", "update_stream.json")
     with open(path, "w") as f:
         json.dump({"config": {"smoke": args.smoke, "seed": args.seed,
-                              "p99_floor_ms": P99_FLOOR_S * 1e3},
+                              "p99_floor_ms": P99_FLOOR_S * 1e3,
+                              "hold_ratio_max": HOLD_RATIO_MAX,
+                              "hold_floor_ms": HOLD_FLOOR_S * 1e3},
                    "gate1_bit_identical": g1,
-                   "gate2_closed_loop": g2}, f, indent=1)
+                   "gate1_bit_identical_chunked": g1c,
+                   "gate2_closed_loop": g2,
+                   "gate3_compaction_hold": g3}, f, indent=1)
     print(f"wrote {path}")
 
     if not args.no_assert:
         assert g1["ok"], "GATE 1 FAILED: delta-applied cube diverged from " \
             "a from-scratch rebuild"
+        assert g1c["ok"], "GATE 1 FAILED (chunked): incrementally-compacted" \
+            " cube diverged from a from-scratch rebuild"
+        assert g1c["compact_passes"] > g1c["compactions"], \
+            "GATE 1 INVALID (chunked): compaction never actually chunked"
         assert g2["deltas_during_runs"] > 0, \
             "GATE 2 INVALID: no deltas landed during the update runs"
         assert g2["p99_ratio"] <= 1.5, \
             f"GATE 2 FAILED: p99 under delta stream {g2['p99_ratio']:.2f}× " \
             f"baseline (target ≤1.5×)"
+        assert g3["ok"], \
+            f"GATE 3 FAILED: chunked max hold " \
+            f"{g3['chunked_max_hold_ms']:.2f}ms over budget " \
+            f"{g3['hold_budget_ms']:.2f}ms (or not bit-identical / " \
+            f"never chunked)"
         print("update-stream gates passed")
 
 

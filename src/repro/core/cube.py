@@ -17,15 +17,23 @@ probed against each server's *sorted signature index* with one
 fancy-index. Latency is accounted per *block touch* + per *server RPC*,
 not per row — batching is exactly what amortizes those costs.
 
-Streaming updates (DESIGN.md §6): the cube is MVCC-versioned. A delta
-batch (``apply_delta``) lands its upserts in fresh in-memory *overlay
-blocks* (plus tombstone index entries for deletes) and is published by an
-atomic swap of the ONE ``(version, sigs, srv, blk, off)`` snapshot tuple;
-blocks are append-only, so a reader that grabbed the snapshot at entry —
-or pinned a version with ``pin()`` — keeps reading exactly the state it
-started on while new versions publish underneath it. ``compact()`` folds
-accumulated overlays back into consolidated base blocks off the hot path;
-superseded blocks are freed only once no pinned reader can still see them.
+Streaming updates (DESIGN.md §6): the cube is MVCC-versioned. The publish
+unit is the WHOLE delta batch (``apply_batch``; ``apply_delta`` is the
+single-group convenience): every touched group's upserts land in fresh
+in-memory *overlay blocks* (plus tombstone index entries for deletes)
+staged under one writer-lock hold, then published by an atomic swap of
+the ONE ``(version, sigs, srv, blk, off)`` snapshot tuple — one version
+bump covering ALL groups, so a pinned reader provably sees every group of
+a multi-group batch at the same version (the DESIGN.md §7.3 cross-group
+torn-read window is closed at the cube layer). Blocks are append-only, so
+a reader that grabbed the snapshot at entry — or pinned a version with
+``pin()`` — keeps reading exactly the state it started on while new
+versions publish underneath it. ``compact()`` folds accumulated overlays
+back into consolidated base blocks off the hot path — in ONE writer-lock
+hold, or incrementally across many short holds with a
+``max_rows_per_pass`` budget (DESIGN.md §6.6) so a TB-scale fold never
+pauses the writer path for the whole rebuild; superseded blocks are freed
+only once no pinned reader can still see them.
 """
 from __future__ import annotations
 
@@ -33,6 +41,7 @@ import contextlib
 import os
 import tempfile
 import threading
+import time
 from dataclasses import dataclass
 from typing import Optional
 
@@ -80,6 +89,8 @@ class CubeMetrics:
     rows_upserted: int = 0
     rows_deleted: int = 0
     compactions: int = 0
+    compact_passes: int = 0          # writer-lock holds spent compacting
+    compact_max_hold_s: float = 0.0  # longest single compaction lock hold
     blocks_freed: int = 0
 
 
@@ -371,6 +382,11 @@ class ParameterCube:
         self._pins: dict[int, int] = {}
         self._pin_lock = threading.Lock()
         self._garbage: list[tuple[int, int, int]] = []  # (retire_ver, sid, bid)
+        # chunked compaction releases the writer lock BETWEEN passes, so a
+        # second compactor could interleave with a half-drained one — this
+        # outer lock serializes whole compactions (writers still only wait
+        # per-pass: apply_delta/apply_batch never take it)
+        self._compact_lock = threading.Lock()
         self.overlay_blocks = 0       # blocks added by deltas since compact()
         # optional circuit-breaker registry (repro.faults.HealthRegistry):
         # when attached, routing consults it before probing a server — an
@@ -757,69 +773,102 @@ class ParameterCube:
     def apply_delta(self, group: int, raw_ids: Optional[np.ndarray] = None,
                     rows: Optional[np.ndarray] = None,
                     delete_ids: Optional[np.ndarray] = None) -> int:
-        """Apply one delta batch for one feature group and publish it with an
-        atomic version bump. Upserts land in fresh in-memory overlay blocks
-        (replicated like base blocks); deletes become tombstone entries in
-        the primary index. Within one batch, deletes apply AFTER upserts.
-        Returns the newly published version. In-flight/pinned readers keep
-        the snapshot they started on — nothing is mutated in place."""
+        """Single-group convenience over :meth:`apply_batch`: one group's
+        upserts/deletes published with one atomic version bump."""
+        return self.apply_batch([(group, raw_ids, rows, delete_ids)])
+
+    def apply_batch(self, parts) -> int:
+        """Apply one delta batch — ``parts`` is an iterable of
+        ``(group, raw_ids, rows, delete_ids)`` — and publish ALL of it with
+        ONE atomic version bump. This is THE publish unit (DESIGN.md §6.6):
+        every group's upserts land in fresh in-memory overlay blocks
+        (replicated like base blocks) and deletes become tombstone entries,
+        all staged under the writer lock, then the primary snapshot swaps
+        once. A reader pinning any version therefore sees every group of
+        the batch at that same version — never group g new and group g+1
+        old (the former §7.3 cross-group torn-read window). Within one
+        batch, a group's deletes apply AFTER its upserts. Returns the newly
+        published version. In-flight/pinned readers keep the snapshot they
+        started on — nothing is mutated in place."""
+        parts = list(parts)
         with self._p_lock:
             self.reclaim()          # writer-side: free drained-pin garbage
             snap = self._ensure_primary_index()
             ver, psigs, psrv, pblk, poff = snap
+            # ---- validate EVERY part before placing ANY block: a shape
+            # error surfacing after an earlier group placed its overlays
+            # would leak replica-probeable blocks for rows that never
+            # publish — a torn state the batch API exists to rule out
+            norm: list[tuple] = []
+            shapes = dict(self._shapes)
+            for group, raw_ids, rows, delete_ids in parts:
+                ids = vals = dels = None
+                if raw_ids is not None and np.asarray(raw_ids).size:
+                    ids = np.atleast_1d(np.asarray(raw_ids)).reshape(-1)
+                    vals = np.asarray(rows)
+                    if vals.ndim != 2 or vals.shape[0] != ids.size:
+                        raise ValueError(
+                            f"rows shape {vals.shape} does not match "
+                            f"{ids.size} upsert ids")
+                    dim, dtype = shapes.get(
+                        group, (vals.shape[1], vals.dtype))
+                    if vals.shape[1] != dim:
+                        raise ValueError(
+                            f"group {group} rows are dim {dim}, delta has "
+                            f"{vals.shape[1]}")
+                    shapes[group] = (dim, dtype)
+                if delete_ids is not None and np.asarray(delete_ids).size:
+                    dels = np.atleast_1d(np.asarray(delete_ids)).reshape(-1)
+                norm.append((group, ids, vals, dels))
+            # ---- stage: overlay blocks + index entries for every group
             add_sigs: list[np.ndarray] = []
             add_srv: list[np.ndarray] = []
             add_blk: list[np.ndarray] = []
             add_off: list[np.ndarray] = []
             n_up = n_del = 0
-            if raw_ids is not None and np.asarray(raw_ids).size:
-                ids = np.atleast_1d(np.asarray(raw_ids)).reshape(-1)
-                vals = np.asarray(rows)
-                if vals.ndim != 2 or vals.shape[0] != ids.size:
-                    raise ValueError(
-                        f"rows shape {vals.shape} does not match "
-                        f"{ids.size} upsert ids")
-                dim, dtype = self._shapes.get(
-                    group, (vals.shape[1], vals.dtype))
-                if vals.shape[1] != dim:
-                    raise ValueError(
-                        f"group {group} rows are dim {dim}, delta has "
-                        f"{vals.shape[1]}")
-                self._shapes[group] = (dim, dtype)
-                if self._dim is None:
-                    self._dim, self._dtype = dim, dtype
-                vals = vals.astype(dtype, copy=False)
-                sigs = signature_np(group, ids)
-                shard = (sigs % np.uint64(self.n_servers)).astype(np.int64)
-                order = np.argsort(shard, kind="stable")
-                sigs, vals, shard = sigs[order], vals[order], shard[order]
-                bounds = np.searchsorted(shard, np.arange(self.n_servers + 1))
-                for sid in range(self.n_servers):
-                    lo, hi = bounds[sid], bounds[sid + 1]
-                    if lo == hi:
-                        continue
-                    s_sigs, s_rows = sigs[lo:hi], vals[lo:hi]
-                    # overlay blocks are memory-resident: fresh rows are hot
-                    for r in range(self.replication):
-                        bid = self.servers[(sid + r) % self.n_servers] \
-                            .add_block(s_sigs, s_rows, on_disk=False)
-                        if r == 0:
-                            add_sigs.append(s_sigs)
-                            add_srv.append(np.full(s_sigs.size, sid, np.int32))
-                            add_blk.append(np.full(s_sigs.size, bid, np.int32))
-                            add_off.append(
-                                np.arange(s_sigs.size, dtype=np.int32))
-                    self.overlay_blocks += self.replication
-                n_up = ids.size
-            if delete_ids is not None and np.asarray(delete_ids).size:
-                dels = np.atleast_1d(np.asarray(delete_ids)).reshape(-1)
-                d_sigs = signature_np(group, dels)
-                add_sigs.append(d_sigs)
-                add_srv.append(np.full(d_sigs.size, -1, np.int32))
-                add_blk.append(np.full(d_sigs.size, -1, np.int32))
-                add_off.append(np.full(d_sigs.size, -1, np.int32))
-                n_del = dels.size
-            if not add_sigs:                       # empty delta: still a bump
+            for group, ids, vals, dels in norm:
+                if ids is not None:
+                    dim, dtype = self._shapes.get(
+                        group, (vals.shape[1], vals.dtype))
+                    self._shapes[group] = (dim, dtype)
+                    if self._dim is None:
+                        self._dim, self._dtype = dim, dtype
+                    vals = vals.astype(dtype, copy=False)
+                    sigs = signature_np(group, ids)
+                    shard = (sigs % np.uint64(self.n_servers)) \
+                        .astype(np.int64)
+                    order = np.argsort(shard, kind="stable")
+                    sigs, vals, shard = sigs[order], vals[order], shard[order]
+                    bounds = np.searchsorted(shard,
+                                             np.arange(self.n_servers + 1))
+                    for sid in range(self.n_servers):
+                        lo, hi = bounds[sid], bounds[sid + 1]
+                        if lo == hi:
+                            continue
+                        s_sigs, s_rows = sigs[lo:hi], vals[lo:hi]
+                        # overlay blocks are memory-resident: fresh rows
+                        # are hot
+                        for r in range(self.replication):
+                            bid = self.servers[(sid + r) % self.n_servers] \
+                                .add_block(s_sigs, s_rows, on_disk=False)
+                            if r == 0:
+                                add_sigs.append(s_sigs)
+                                add_srv.append(
+                                    np.full(s_sigs.size, sid, np.int32))
+                                add_blk.append(
+                                    np.full(s_sigs.size, bid, np.int32))
+                                add_off.append(
+                                    np.arange(s_sigs.size, dtype=np.int32))
+                        self.overlay_blocks += self.replication
+                    n_up += ids.size
+                if dels is not None:
+                    d_sigs = signature_np(group, dels)
+                    add_sigs.append(d_sigs)
+                    add_srv.append(np.full(d_sigs.size, -1, np.int32))
+                    add_blk.append(np.full(d_sigs.size, -1, np.int32))
+                    add_off.append(np.full(d_sigs.size, -1, np.int32))
+                    n_del += dels.size
+            if not add_sigs:                       # empty batch: still a bump
                 self._snap = (ver + 1, psigs, psrv, pblk, poff)
                 self.metrics.deltas_applied += 1
                 return ver + 1
@@ -827,7 +876,8 @@ class ParameterCube:
             dsrv = np.concatenate(add_srv)
             dblk = np.concatenate(add_blk)
             doff = np.concatenate(add_off)
-            # last-wins dedup WITHIN the delta (upserts precede tombstones)
+            # last-wins dedup WITHIN the batch (per group, upserts precede
+            # tombstones; cross-group signatures never collide by key)
             dsigs, dsrv, dblk, doff = _merge_last_wins(
                 dsigs, dsrv, dblk, doff)
             # STREAMING merge into the sorted base: a delta touches a tiny
@@ -864,15 +914,42 @@ class ParameterCube:
             return ver + 1
 
     # ---------------------------------------------------------- compaction
-    def compact(self) -> int:
+    def compact(self, max_rows_per_pass: Optional[int] = None) -> int:
         """Fold overlay blocks (and tombstones) back into consolidated base
-        blocks, off the hot path: gather every live row from the current
-        snapshot, redistribute into fresh block_rows-sized blocks with the
-        same placement policy as load_table, install fresh per-server
-        indexes, and publish with a version bump. Every pre-compaction block
-        is retired; its storage is freed once no reader pins an older
-        version. Returns the published version."""
+        blocks, off the hot path. ``max_rows_per_pass=None`` is the
+        monolithic fold: one writer-lock hold rebuilds every block — fine
+        at bench scale, a stop-the-world pause risk at TB scale. With a
+        budget, the fold is INCREMENTAL (DESIGN.md §6.6): each pass drains
+        whole source blocks up to ~``max_rows_per_pass`` primary rows
+        under one short lock hold and publishes its own version bump;
+        between passes, pinned readers keep serving and delta batches
+        land freely. Either way, every pre-compaction block is retired and
+        its storage freed once no reader pins an older version; per-pass
+        lock holds are recorded in ``metrics.compact_max_hold_s`` (the
+        bench gate for the pause bound). Returns the final published
+        version."""
+        # serialize whole compactions: chunked mode releases the writer
+        # lock between passes, and a second compactor interleaving with a
+        # half-drained one would retire each other's fresh blocks
+        with self._compact_lock:
+            if max_rows_per_pass is None:
+                return self._compact_monolithic()
+            return self._compact_chunked(max(1, int(max_rows_per_pass)))
+
+    def _hold_finished(self, t0: float):
+        """Record one compaction writer-lock hold (call BEFORE release)."""
+        hold = time.monotonic() - t0
+        self.metrics.compact_passes += 1
+        self.metrics.compact_max_hold_s = max(
+            self.metrics.compact_max_hold_s, hold)
+
+    def _compact_monolithic(self) -> int:
+        """One-pass fold: gather every live row from the current snapshot,
+        redistribute into fresh block_rows-sized blocks with the same
+        placement policy as load_table, install fresh per-server indexes,
+        and publish with a version bump."""
         with self._p_lock:
+            t_hold = time.monotonic()
             snap = self._ensure_primary_index()
             ver, psigs, psrv, pblk, poff = snap
             new_ver = ver + 1
@@ -971,6 +1048,174 @@ class ParameterCube:
             # reclaim under the writer lock (RLock): slot reuse must not
             # race a concurrent writer's add_block
             self.reclaim()
+            self._hold_finished(t_hold)
+        return new_ver
+
+    def _compact_chunked(self, max_rows_per_pass: int) -> int:
+        """Incremental fold. Plan: snapshot the set of pre-compaction
+        blocks once; each pass re-homes the live primary entries of a few
+        source blocks (≈``max_rows_per_pass`` rows, always ≥1 whole block)
+        into fresh consolidated blocks and re-points the primary snapshot
+        at them — the rows are bit-identical, so a reader pinned at ANY
+        intermediate version reads the same values whichever copy its
+        index routes to. The final pass rebuilds each server's index
+        without entries routing to pre-compaction blocks, drops tombstones
+        whose pre-delete rows no index can reach any more, retires every
+        pre-compaction block, and publishes. Overlay blocks created by
+        deltas landing BETWEEN passes are left for the next compaction —
+        they are not in the plan's retire set."""
+        with self._p_lock:
+            self._ensure_primary_index()
+            with self._pin_lock:
+                already = {(s, b) for _, s, b in self._garbage}
+            # every live block right now — old base + overlays, replica
+            # copies included — is the retire set; (sid, bid) identifies
+            # a copy, and sid<<32|bid matches the primary's routing code
+            initial = {(sid, bid)
+                       for sid, srv_ in enumerate(self.servers)
+                       for bid, b in enumerate(srv_.blocks)
+                       if isinstance(b, _Block) and (sid, bid) not in already}
+            init_codes = np.sort(np.fromiter(
+                ((sid << 32) | bid for sid, bid in initial),
+                np.int64, len(initial))) if initial else np.empty(0, np.int64)
+            overlay_start = self.overlay_blocks
+
+        while True:
+            with self._p_lock:
+                t_hold = time.monotonic()
+                ver, psigs, psrv, pblk, poff = self._ensure_primary_index()
+                live = psrv >= 0
+                comp = np.where(
+                    live, (psrv.astype(np.int64) << 32) | pblk, -1)
+                in_src = np.isin(comp, init_codes) if init_codes.size \
+                    else np.zeros(comp.shape, bool)
+                if not in_src.any():
+                    final_ver = self._compact_finish(
+                        ver, psigs, psrv, pblk, poff, initial, overlay_start)
+                    self._hold_finished(t_hold)
+                    return final_ver
+                # group the remaining source entries by source block and
+                # drain whole blocks until the pass budget is spent
+                spos = np.flatnonzero(in_src)
+                order = np.argsort(comp[spos], kind="stable")
+                spos = spos[order]
+                scomp = comp[spos]
+                starts = np.concatenate(
+                    ([0], np.flatnonzero(scomp[1:] != scomp[:-1]) + 1,
+                     [scomp.size]))
+                take = 1
+                while (take < starts.size - 1
+                       and starts[take] < max_rows_per_pass):
+                    take += 1
+                chosen = spos[:starts[take]]
+                cstarts = starts[:take + 1]
+                # gather the chosen entries once per source block, bucketed
+                # into (dim, dtype) families — consolidated blocks are
+                # single-family (block shapes differ across feature groups)
+                families: dict[tuple, list] = {}
+                ccomp, csigs, coff = comp[chosen], psigs[chosen], poff[chosen]
+                for lo, hi in zip(cstarts[:-1], cstarts[1:]):
+                    c = int(ccomp[lo])
+                    block = self.servers[c >> 32].blocks[c & 0xFFFFFFFF]
+                    fam = (block.view.shape[1], block.view.dtype)
+                    families.setdefault(fam, []).append(
+                        (csigs[lo:hi], block.view[coff[lo:hi]]))
+                # re-place per family; fresh_index=False registers every
+                # copy in its server's pending index, so replica failover
+                # at this pass's version resolves the moved rows
+                moved: list[tuple[np.ndarray, int, int]] = []
+                for (dim, dtype), parts in families.items():
+                    fsigs = np.concatenate([p[0] for p in parts])
+                    frows = np.concatenate([p[1] for p in parts])
+                    shard = (fsigs % np.uint64(self.n_servers)) \
+                        .astype(np.int64)
+                    order = np.argsort(shard, kind="stable")
+                    fsigs, frows, shard = (fsigs[order], frows[order],
+                                           shard[order])
+                    bounds = np.searchsorted(
+                        shard, np.arange(self.n_servers + 1))
+                    for sid in range(self.n_servers):
+                        lo, hi = bounds[sid], bounds[sid + 1]
+                        if lo == hi:
+                            continue
+                        primary, _ = self._place_shard(
+                            sid, fsigs[lo:hi], frows[lo:hi],
+                            fresh_index=False)
+                        moved.extend((blk_s, sid, bid)
+                                     for blk_s, bid in primary)
+                # re-point the drained entries: their sigs are unchanged,
+                # so this is a pure overwrite of copied routing arrays
+                msigs = np.concatenate([s for s, _, _ in moved])
+                msrv = np.concatenate([np.full(s.size, sid, np.int32)
+                                       for s, sid, _ in moved])
+                mblk = np.concatenate([np.full(s.size, b, np.int32)
+                                       for s, _, b in moved])
+                moff = np.concatenate([np.arange(s.size, dtype=np.int32)
+                                       for s, _, _ in moved])
+                morder = np.argsort(msigs, kind="stable")
+                msigs = msigs[morder]
+                pos = np.searchsorted(psigs, msigs)
+                nsrv, nblk, noff = psrv.copy(), pblk.copy(), poff.copy()
+                nsrv[pos] = msrv[morder]
+                nblk[pos] = mblk[morder]
+                noff[pos] = moff[morder]
+                for srv_ in self.servers:
+                    srv_.publish_version(ver + 1)
+                self._snap = (ver + 1, psigs, nsrv, nblk, noff)
+                self._hold_finished(t_hold)
+            # lock released: readers pin, deltas land, then the next pass
+
+    def _compact_finish(self, ver, psigs, psrv, pblk, poff,
+                        initial: set, overlay_start: int) -> int:
+        """Last chunked pass (caller holds the writer lock, no source
+        entries left): rebuild per-server indexes without retired routes,
+        clear unreachable tombstones, retire the plan's blocks, publish."""
+        new_ver = ver + 1
+        retired_by_sid: dict[int, set] = {}
+        for sid, bid in initial:
+            retired_by_sid.setdefault(sid, set()).add(bid)
+        # install each server's folded index minus entries routing to a
+        # block this compaction retires — after this, no replica probe at
+        # ≥ new_ver can reach a pre-compaction block (older pinned
+        # versions keep their snapshots, and their blocks stay allocated
+        # until those pins drain)
+        for sid, srv_ in enumerate(self.servers):
+            isigs, iblk, ioff = srv_._ensure_index()
+            dead = retired_by_sid.get(sid)
+            if dead and isigs.size:
+                keep = ~np.isin(iblk, np.fromiter(dead, np.int64, len(dead)))
+                isigs, iblk, ioff = isigs[keep], iblk[keep], ioff[keep]
+            srv_.install_index(isigs, iblk, ioff)
+        # a tombstone must survive as long as ANY server's current index
+        # still holds the pre-delete row (dropping it early would let the
+        # replica path resurrect the deleted value); after the filter
+        # above, that is exactly "the sig still appears in some index" —
+        # e.g. a concurrent delta upserted-then-re-deleted it, leaving the
+        # row in a fresh overlay block this compaction does not retire
+        tomb = psrv == -1
+        if tomb.any():
+            tsigs = psigs[tomb]
+            reachable = np.zeros(tsigs.size, bool)
+            for srv_ in self.servers:
+                isigs = srv_._index[0]
+                if isigs.size:
+                    pos = np.searchsorted(isigs, tsigs)
+                    pos = np.minimum(pos, isigs.size - 1)
+                    reachable |= isigs[pos] == tsigs
+            drop = tomb.copy()
+            drop[tomb] = ~reachable
+            if drop.any():
+                keep = ~drop
+                psigs, psrv = psigs[keep], psrv[keep]
+                pblk, poff = pblk[keep], poff[keep]
+        for srv_ in self.servers:
+            srv_.publish_version(new_ver)
+        self._snap = (new_ver, psigs, psrv, pblk, poff)
+        with self._pin_lock:
+            self._garbage.extend((new_ver, sid, bid) for sid, bid in initial)
+        self.overlay_blocks = max(0, self.overlay_blocks - overlay_start)
+        self.metrics.compactions += 1
+        self.reclaim()
         return new_ver
 
     def reclaim(self):

@@ -47,7 +47,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
     mesh_name = "x".join(str(s) for s in mesh.devices.shape)
     rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
            "n_devices": n_dev, "ok": False}
-    t0 = time.time()
+    t0 = time.monotonic()
     try:
         with runtime.use_mesh(mesh):
             cell = build_cell(arch_id, shape_name, mesh)
@@ -55,10 +55,10 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
                            for k, v in cell.meta.items()}
             jitted = cell.jitted(mesh)
             lowered = jitted.lower(*cell.args)
-            rec["t_lower_s"] = round(time.time() - t0, 2)
-            t1 = time.time()
+            rec["t_lower_s"] = round(time.monotonic() - t0, 2)
+            t1 = time.monotonic()
             compiled = lowered.compile()
-            rec["t_compile_s"] = round(time.time() - t1, 2)
+            rec["t_compile_s"] = round(time.monotonic() - t1, 2)
 
             mem = compiled.memory_analysis()
             rec["memory"] = {
@@ -100,7 +100,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
     except Exception as e:  # noqa: BLE001 — record and continue the sweep
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-3000:]
-    rec["t_total_s"] = round(time.time() - t0, 2)
+    rec["t_total_s"] = round(time.monotonic() - t0, 2)
 
     os.makedirs(out_dir, exist_ok=True)
     path = f"{out_dir}/{arch_id}__{shape_name}__{mesh_name}.json"
@@ -122,7 +122,7 @@ def run_all(multi_pod: bool, out_dir: str, only=None, timeout=3600):
                    "--out", out_dir]
             if multi_pod:
                 cmd.append("--multi-pod")
-            t0 = time.time()
+            t0 = time.monotonic()
             try:
                 p = subprocess.run(cmd, capture_output=True, text=True,
                                    timeout=timeout)
@@ -130,7 +130,7 @@ def run_all(multi_pod: bool, out_dir: str, only=None, timeout=3600):
                 tail = (p.stdout + p.stderr)[-400:] if not ok else ""
             except subprocess.TimeoutExpired:
                 ok, tail = False, "TIMEOUT"
-            results.append((arch.arch_id, shape.name, ok, round(time.time() - t0, 1)))
+            results.append((arch.arch_id, shape.name, ok, round(time.monotonic() - t0, 1)))
             print(f"[{'OK' if ok else 'FAIL'}] {arch.arch_id} × {shape.name} "
                   f"({results[-1][3]}s) {tail}", flush=True)
     n_ok = sum(1 for r in results if r[2])

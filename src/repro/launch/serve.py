@@ -57,7 +57,7 @@ def serve_lm(args):
     decode = jax.jit(lambda p, c, t: transformer.decode_step(p, c, t, cfg))
     last = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
 
-    t0 = time.time()
+    t0 = time.monotonic()
     steps = 0
     while batcher.active_mask.any() and steps < 32:
         logits, cache = decode(buf.active.payload, cache, last)
@@ -66,7 +66,7 @@ def serve_lm(args):
         batcher.step_complete(eos)
         steps += 1
     print(f"decoded {steps} steps for {args.requests} requests "
-          f"({(time.time()-t0)/max(1,steps)*1e3:.1f} ms/step, "
+          f"({(time.monotonic()-t0)/max(1,steps)*1e3:.1f} ms/step, "
           f"slot utilization {batcher.utilization:.2f}, "
           f"completed {len(batcher.completed)})")
 

@@ -93,14 +93,14 @@ def main():
 
         pipe = Prefetcher(lambda s: synthetic.lm_batch(rng, cfg, batch, seq),
                           depth=2)
-        t0 = time.time()
+        t0 = time.monotonic()
         step = start_step
         for step in range(start_step, start_step + args.steps):
             tokens = jnp.asarray(next(pipe)["tokens"])
             params, opt_state, loss = jitted(params, opt_state, tokens)
             if step % 10 == 0:
                 print(f"step {step:5d} loss {float(loss):.4f} "
-                      f"({(time.time()-t0)/max(1,step-start_step+1):.2f}s/step)",
+                      f"({(time.monotonic()-t0)/max(1,step-start_step+1):.2f}s/step)",
                       flush=True)
             if step and step % args.ckpt_every == 0:
                 ckpt.save(params, step)

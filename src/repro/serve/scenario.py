@@ -216,6 +216,7 @@ class ServingSubstrate:
                  n_servers: int = 4, replication: int = 2,
                  block_rows: int = 4096, head_slots: int = 0,
                  compact_after_blocks: int = 64,
+                 compact_max_rows_per_pass: Optional[int] = None,
                  reverse_map_items: int = 65536, seed: int = 0):
         self.tail_dim = tail_dim
         self.cube_cache_ratio = cube_cache_ratio
@@ -234,7 +235,8 @@ class ServingSubstrate:
             self.cube, cube_cache=self.cube_cache,
             query_cache=self.query_cache, head=head,
             qcache_items_fn=self.items_for_buckets,
-            compact_after_blocks=compact_after_blocks)
+            compact_after_blocks=compact_after_blocks,
+            compact_max_rows_per_pass=compact_max_rows_per_pass)
 
     # ---------------------------------------------------------- groups
     def cache_key(self, group: int, key: int):

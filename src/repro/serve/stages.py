@@ -266,12 +266,12 @@ class CubeFetchStage(Stage):
     check drops exactly the cache entries a racing delta touched.
 
     Pinning once for the whole group sweep gives every group's rows on
-    one event a single version attribution: within each group, the rows
-    are exactly the pinned version's (the per-group no-torn-reads
-    property). Known relaxation (DESIGN.md §7.3): the cube publishes a
-    multi-group delta batch one group at a time, so a pin landing between
-    those publishes resolves adjacent groups at adjacent versions — each
-    internally coherent, not batch-atomic across groups.
+    one event a single version attribution: the cube publishes a
+    multi-group delta batch as ONE atomic snapshot swap
+    (``apply_batch``, DESIGN.md §6.6), so the single pin resolves EVERY
+    group at exactly the pinned version — batch-atomic across groups,
+    not merely coherent within each (the §7.3 cross-group relaxation is
+    closed).
 
     Graceful degradation (DESIGN.md §8.5): the cube resolves misses via
     ``lookup_ex``, which walks the ladder healthy-primary → versioned
@@ -373,16 +373,27 @@ class CubeFetchStage(Stage):
             # would poison later requests with silently-wrong tier-0 hits
             ok = {k: r for k, r in fetched.items()
                   if tiers[k] <= TIER_REPLICA}
+            if ok and sub.cube.version != pv.version:
+                # a delta already published since the pin: filter the
+                # known-stale keys out BEFORE inserting — an insert-then-
+                # drop would expose them to concurrent readers for the
+                # window between put_many and the drop. A cold touched-key
+                # log forces the conservative skip-all.
+                touched = sub.updates.touched_since(pv.version)
+                ok = ({} if touched is None else
+                      {k: r for k, r in ok.items()
+                       if sub.cache_key(group, k) not in touched[0]})
             if ok:
                 sub.cube_cache.put_many(
                     [sub.cache_key(group, k) for k in ok],
                     [ok[k][None] for k in ok])
-                # close the cache-aside race: a delta may have published
-                # (and run its targeted invalidation) between our pinned
-                # fetch and the insert above, which would resurrect
-                # pre-delta rows as fresh entries. Drop our own inserts
-                # for exactly the keys deltas touched since the pin; a
-                # cold touched-key log forces the conservative full drop.
+                # close the remaining cache-aside race: a delta may have
+                # published (and run its targeted invalidation) between
+                # the pre-insert check and the insert above, which would
+                # resurrect pre-delta rows as fresh entries. Drop our own
+                # inserts for exactly the keys deltas touched since the
+                # pin; a cold touched-key log forces the conservative
+                # full drop.
                 if sub.cube.version != pv.version:
                     touched = sub.updates.touched_since(pv.version)
                     own = {sub.cache_key(group, k): k for k in ok}

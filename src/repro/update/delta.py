@@ -104,9 +104,20 @@ def write_delta(log_dir: str, batch: DeltaBatch) -> str:
     point). Returns the delta directory."""
     path = delta_path(log_dir, batch.version)
     os.makedirs(path, exist_ok=True)
-    # a re-emit of this version (the corrupt-delta recovery path) may
-    # carry fewer groups: drop leftovers so the directory always matches
-    # the manifest exactly (verify_delta rejects unmanifested files)
+    # a re-emit of this version (the corrupt-delta recovery path) must
+    # UNPUBLISH first: remove DONE — so a watcher polling mid-rewrite
+    # sees an unpublished directory, not a published one whose npz files
+    # are being replaced under it — then the stale manifest (a torn
+    # rewrite must fail verification, not pass against old sums)
+    done = os.path.join(path, "DONE")
+    if os.path.exists(done):
+        os.remove(done)
+    manifest = os.path.join(path, _CHECKSUMS)
+    if os.path.exists(manifest):
+        os.remove(manifest)
+    # the re-emit may carry fewer groups: drop leftovers so the directory
+    # always matches the manifest exactly (verify_delta rejects
+    # unmanifested files)
     want = {f"group_{g.group}.npz" for g in batch.groups}
     for fn in os.listdir(path):
         if fn.startswith("group_") and fn.endswith(".npz") and fn not in want:
@@ -171,13 +182,17 @@ def verify_delta(path: str) -> bool:
 
 def read_delta(path: str) -> DeltaBatch:
     version = int(os.path.basename(path).split("_")[-1])
+    # sort by PARSED group id, not filename: lexical order puts
+    # group_10.npz before group_2.npz, so at ≥10 groups the apply order
+    # would diverge from group numbering
+    names = [(int(fn[len("group_"):-len(".npz")]), fn)
+             for fn in os.listdir(path)
+             if fn.startswith("group_") and fn.endswith(".npz")]
     groups = []
-    for fn in sorted(os.listdir(path)):
-        if not (fn.startswith("group_") and fn.endswith(".npz")):
-            continue
+    for gid, fn in sorted(names):
         with np.load(os.path.join(path, fn)) as z:
             groups.append(GroupDelta(
-                group=int(fn[len("group_"):-len(".npz")]),
+                group=gid,
                 ids=z["ids"], rows=z["rows"], delete_ids=z["delete_ids"],
                 item_ids=z["item_ids"] if "item_ids" in z else None))
     return DeltaBatch(version=version, groups=groups)
@@ -206,12 +221,30 @@ def list_deltas(log_dir: str, after_version: int = -1
 
 class DeltaEmitter:
     """Training-side convenience: stamps monotonically increasing versions
-    onto batches and writes them to the log directory."""
+    onto batches and writes them to the log directory.
 
-    def __init__(self, log_dir: str, start_version: int = 0):
+    Restarted on an existing log (``start_version=None``, the default) it
+    scans the directory and resumes at ``max(existing) + 1`` — the old
+    resume-at-0 default silently rewrote already-published delta
+    directories in place, corrupting any watcher mid-stream. The scan
+    counts every ``delta_*`` directory, published or not: a torn emit
+    (no DONE) still owns its version; re-using it would race the crashed
+    writer's leftovers. Pass an explicit ``start_version`` to override
+    (replay/testing)."""
+
+    def __init__(self, log_dir: str, start_version: Optional[int] = None):
         self.log_dir = log_dir
-        self.next_version = start_version
         os.makedirs(log_dir, exist_ok=True)
+        if start_version is None:
+            existing = [-1]
+            for d in os.listdir(log_dir):
+                if d.startswith(_PREFIX):
+                    try:
+                        existing.append(int(d.split("_")[-1]))
+                    except ValueError:
+                        pass
+            start_version = max(existing) + 1
+        self.next_version = start_version
 
     def emit(self, groups: List[GroupDelta]) -> DeltaBatch:
         batch = DeltaBatch(version=self.next_version, groups=groups)

@@ -2,14 +2,16 @@
 out (DESIGN.md §6).
 
 Apply order per batch — chosen so no reader can observe a NEW cache entry
-over OLD cube rows, or OLD cache rows attributed to a NEW version:
+over OLD cube rows, or OLD cache rows attributed to a NEW version. Every
+step runs at BATCH granularity (all groups together, DESIGN.md §6.6):
 
   1. caches      — targeted ``invalidate_keys`` / ``invalidate_items`` of
-                   exactly the touched keys/items, BEFORE the publish
-                   (LFU counts persist);
-  2. cube        — ``ParameterCube.apply_delta`` publishes the rows with an
-                   atomic version bump (pinned/in-flight readers keep their
-                   snapshot);
+                   exactly the touched keys/items of EVERY group, BEFORE
+                   the publish (LFU counts persist);
+  2. cube        — ``ParameterCube.apply_batch`` publishes ALL groups'
+                   rows with ONE atomic version bump (pinned/in-flight
+                   readers keep their snapshot — and a pin taken at any
+                   instant sees every group at the same version);
   3. HBM head    — in-place donated-buffer scatter for the touched
                    signatures currently resident; deletes demote;
   4. caches      — the same targeted invalidation AGAIN, post-publish.
@@ -21,7 +23,10 @@ attribution); pass 4 plus the serving ops' cache-aside guards remove any
 entry a racing reader re-inserted around the publish itself. A request
 racing the apply therefore either reads the old rows coherently (old
 cache + old pinned version) or misses and refetches; it can never
-cache-hit its way to a torn mix.
+cache-hit its way to a torn mix. Because the bracket spans the WHOLE
+batch, the per-version touched-key log carries one entry per batch —
+the serving ops' guards see all groups' touched keys under the single
+published version, matching the cube's batch-atomic swap.
 
 The manager is also the DoubleBuffer ``on_swap`` subscriber: a whole-
 generation hot swap bumps the caches' model version — the fix for the
@@ -80,6 +85,7 @@ class UpdateManager:
                  cache_key_fn: Callable = _default_cache_key_fn,
                  qcache_items_fn: Optional[Callable] = None,
                  compact_after_blocks: int = 256,
+                 compact_max_rows_per_pass: Optional[int] = None,
                  swap_invalidates_cube_cache: bool = False):
         self.cube = cube
         self.cube_cache = cube_cache
@@ -98,6 +104,11 @@ class UpdateManager:
         # themselves is only correct when the two spaces coincide.
         self.qcache_items_fn = qcache_items_fn
         self.compact_after_blocks = compact_after_blocks
+        # None → monolithic one-pass compaction; an int bounds the rows
+        # moved per writer-lock hold (incremental compaction, DESIGN.md
+        # §6.6) so maybe_compact never stalls concurrent delta appliers
+        # or reader pin churn for a full-rebuild pause
+        self.compact_max_rows_per_pass = compact_max_rows_per_pass
         # a dense-generation hot swap does NOT change cube rows (those only
         # move via apply_delta, already invalidated key-by-key) — wiping
         # the warm ~84%-hit cube cache on every swap buys no coherence and
@@ -145,14 +156,22 @@ class UpdateManager:
                         raise ValueError(
                             f"delta v{batch.version} group {g.group}: dim "
                             f"{rows.shape[1]} != cube dim {shape[0]}")
+            # fold every group's touched key/item sets FIRST so the whole
+            # batch shares ONE invalidation bracket around ONE cube publish
+            parts = []        # (group, ids, rows, dels) per group, in order
+            keys: list = []
+            items_set: set = set()
             for g in batch.groups:
                 ids = np.atleast_1d(np.asarray(g.ids)).reshape(-1)
                 dels = np.atleast_1d(np.asarray(g.delete_ids)).reshape(-1)
+                parts.append((g.group, ids,
+                              np.asarray(g.rows) if ids.size else None,
+                              dels))
                 touched = np.concatenate([ids, dels]) if dels.size else ids
-                keys = (self.cache_key_fn(g.group, touched)
-                        if touched.size else [])
+                if touched.size:
+                    keys.extend(self.cache_key_fn(g.group, touched))
                 if self.qcache_items_fn is not None:
-                    items = set(self.qcache_items_fn(g.group, touched))
+                    items_set |= set(self.qcache_items_fn(g.group, touched))
                     # the training side may ship the raw item ids alongside
                     # the delta (GroupDelta.item_ids): union them in so
                     # invalidation no longer depends on the serving side
@@ -160,63 +179,69 @@ class UpdateManager:
                     # before an item's first request still invalidates any
                     # warm-started query-cache entry for it
                     if g.item_ids is not None:
-                        items |= {int(i)
-                                  for i in np.atleast_1d(g.item_ids)}
-                    items = list(items)
+                        items_set |= {int(i)
+                                      for i in np.atleast_1d(g.item_ids)}
                 else:
-                    items = [int(i) for i in g.touched_item_ids()]
-                # FIRST invalidation pass, BEFORE the cube publish. The
-                # old invalidate-after-publish order had a torn-attribution
-                # window: a reader pinning the NEW version could probe the
-                # cache before the invalidation landed and cache-hit a
-                # pre-delta row, stamping old rows with the new version.
-                # Invalidating first closes it — a reader that re-inserts
-                # after this pass is inserting rows that are still current
-                # (nothing has published yet), and the SECOND pass below
-                # plus the serving ops' own cache-aside guards cover every
-                # insert that races the publish itself.
-                if self.cube_cache is not None and keys:
-                    self.stats.cube_keys_invalidated += \
-                        self.cube_cache.invalidate_keys(keys)
-                if self.query_cache is not None and items:
-                    self.stats.query_entries_invalidated += \
-                        self.query_cache.invalidate_items(items)
-                v_after = self.cube.apply_delta(
-                    g.group, ids if ids.size else None,
-                    np.asarray(g.rows) if ids.size else None,
-                    delete_ids=dels if dels.size else None)
-                # log BEFORE the post-publish invalidation: the serving-
-                # side guards read this concurrently — appended after, a
-                # guard checking in the window between invalidate and
-                # append would see an empty span and keep a just-
-                # resurrected stale entry. Appended first, it can only
-                # over-report (harmless drop).
-                self._touched_log.append(
-                    (v_after, frozenset(keys), frozenset(items)))
-                while len(self._touched_log) > self._touched_cap:
-                    self._touched_floor = self._touched_log.popleft()[0]
+                    items_set |= {int(i) for i in g.touched_item_ids()}
+            items = list(items_set)
+            # FIRST invalidation pass, BEFORE the cube publish — once for
+            # the whole batch. The old invalidate-after-publish order had
+            # a torn-attribution window: a reader pinning the NEW version
+            # could probe the cache before the invalidation landed and
+            # cache-hit a pre-delta row, stamping old rows with the new
+            # version. Invalidating first closes it — a reader that
+            # re-inserts after this pass is inserting rows that are still
+            # current (nothing has published yet), and the SECOND pass
+            # below plus the serving ops' own cache-aside guards cover
+            # every insert that races the publish itself.
+            if self.cube_cache is not None and keys:
+                self.stats.cube_keys_invalidated += \
+                    self.cube_cache.invalidate_keys(keys)
+            if self.query_cache is not None and items:
+                self.stats.query_entries_invalidated += \
+                    self.query_cache.invalidate_items(items)
+            # ONE atomic publish covering every group: a reader pinning at
+            # any instant sees either no group or all groups at the batch
+            # version — the §7.3 cross-group torn window cannot open
+            v_after = self.cube.apply_batch(
+                [(grp, ids if ids.size else None, rows,
+                  dels if dels.size else None)
+                 for grp, ids, rows, dels in parts])
+            # log BEFORE the post-publish invalidation: the serving-side
+            # guards read this concurrently — appended after, a guard
+            # checking in the window between invalidate and append would
+            # see an empty span and keep a just-resurrected stale entry.
+            # Appended first, it can only over-report (harmless drop).
+            # ONE entry per batch, at the single published version.
+            self._touched_log.append(
+                (v_after, frozenset(keys), frozenset(items)))
+            while len(self._touched_log) > self._touched_cap:
+                self._touched_floor = self._touched_log.popleft()[0]
+            # SECOND invalidation pass, AFTER the publish (and before the
+            # head scatter — the head never reads the caches, so earlier
+            # is strictly a smaller stale window): catches entries a
+            # concurrent reader re-inserted during the publish window
+            # whose own cache-aside guard ran before the new version
+            # became visible to it.
+            if self.cube_cache is not None and keys:
+                self.stats.cube_keys_invalidated += \
+                    self.cube_cache.invalidate_keys(keys)
+            if self.query_cache is not None and items:
+                self.stats.query_entries_invalidated += \
+                    self.query_cache.invalidate_items(items)
+            for grp, ids, rows, dels in parts:
                 if self.head is not None:
                     if ids.size:
                         self.stats.head_rows_updated += self.head.update_rows(
-                            g.group, ids, np.asarray(g.rows))
+                            grp, ids, rows)
                     if dels.size:
-                        self.head.demote(g.group, dels)
+                        self.head.demote(grp, dels)
                         # keep the policy's membership view in sync — a
                         # drifted resident set undercounts free slots and
                         # wastes hysteresis evictions on already-gone keys
-                        if g.group in self._resident_ids:
-                            self._resident_ids[g.group] -= \
+                        if grp in self._resident_ids:
+                            self._resident_ids[grp] -= \
                                 {int(i) for i in dels}
-                # SECOND invalidation pass, AFTER the publish: catches
-                # entries a concurrent reader re-inserted during the
-                # publish window whose own cache-aside guard ran before
-                # the new version became visible to it.
-                if self.cube_cache is not None and keys:
-                    self.stats.cube_keys_invalidated += \
-                        self.cube_cache.invalidate_keys(keys)
-                if self.query_cache is not None and items:
-                    self.stats.query_entries_invalidated += \
-                        self.query_cache.invalidate_items(items)
                 self.stats.rows_upserted += int(ids.size)
                 self.stats.rows_deleted += int(dels.size)
             self.stats.deltas_applied += 1
@@ -301,6 +326,6 @@ class UpdateManager:
         readers keep their pinned snapshots throughout."""
         if self.cube.overlay_blocks < self.compact_after_blocks:
             return False
-        self.cube.compact()
+        self.cube.compact(max_rows_per_pass=self.compact_max_rows_per_pass)
         self.stats.compactions += 1
         return True

@@ -1,0 +1,475 @@
+"""Batch-atomic cube publish + incremental compaction (DESIGN.md §6.6).
+
+Contracts under test:
+
+  * ``apply_batch`` publishes EVERY group of a delta batch in ONE atomic
+    snapshot swap — a pin taken at any instant observes all groups at the
+    same version (the §7.3 cross-group torn window cannot open);
+  * a validation failure anywhere in the batch leaves the cube untouched
+    (no group published, no overlay blocks leaked);
+  * ``compact(max_rows_per_pass=...)`` folds overlays across multiple
+    short writer-lock holds, bit-identical to the monolithic pass, with
+    pinned readers live (and bit-stable) throughout;
+  * the delta log satellites: numeric group ordering in ``read_delta``,
+    emitter restart resuming past existing versions, and the re-emit
+    recovery path unpublishing (DONE removed) before rewriting.
+
+The two torn-read hunters at the bottom are the tentpole's acceptance
+test (ISSUE 7): ≥1k pinned multi-group reads racing a live multi-group
+delta + chunked-compaction stream must observe zero cross-group version
+mismatches.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.cube import ParameterCube
+from repro.core.executors import AsyncExecutor, SimExecutor
+from repro.core.sedp import SEDP, Event
+from repro.update import DeltaBatch, GroupDelta, UpdateManager
+from repro.update.delta import (DeltaEmitter, DeltaIntegrityError,
+                                DeltaWatcher, list_deltas, read_delta,
+                                verify_delta, write_delta)
+
+DIM = 4
+N_IDS = 192
+N_GROUPS = 3
+
+
+def _multi_group_value_cube(n_groups=N_GROUPS):
+    """Cube holding ``n_groups`` feature groups whose every row is filled
+    with the value of the batch that published it — torn reads (within a
+    group OR across groups) are detectable by value."""
+    cube = ParameterCube(n_servers=4, replication=2, block_rows=32)
+    for g in range(n_groups):
+        cube.load_table(g, np.zeros((N_IDS, DIM), np.float32),
+                        raw_ids=np.arange(N_IDS, dtype=np.int64))
+    cube._ensure_primary_index()           # fold the build
+    return cube
+
+
+def _batch_parts(value, n_groups=N_GROUPS, ids=None):
+    ids = np.arange(N_IDS, dtype=np.int64) if ids is None else ids
+    return [(g, ids, np.full((ids.size, DIM), float(value), np.float32),
+             None) for g in range(n_groups)]
+
+
+# ------------------------------------------------------------- apply_batch
+
+def test_apply_batch_one_bump_covers_all_groups():
+    cube = _multi_group_value_cube()
+    v0 = cube.version
+    v1 = cube.apply_batch(_batch_parts(5.0))
+    assert v1 == v0 + 1                    # ONE bump for three groups
+    for g in range(N_GROUPS):
+        rows = cube.lookup(g, np.arange(N_IDS, dtype=np.int64))
+        assert np.all(rows == 5.0)
+    # upserts + deletes mixed across groups, still one bump
+    v2 = cube.apply_batch([
+        (0, None, None, np.arange(4, dtype=np.int64)),
+        (1, np.array([7], np.int64),
+         np.full((1, DIM), 9.0, np.float32), np.array([8], np.int64)),
+        (2, np.array([0], np.int64),
+         np.full((1, DIM), 9.0, np.float32), None)])
+    assert v2 == v1 + 1
+    assert not cube.contains(0, np.arange(4, dtype=np.int64)).any()
+    assert not cube.contains(1, np.array([8], np.int64))[0]
+    assert cube.lookup(1, np.array([7], np.int64))[0, 0] == 9.0
+    assert cube.lookup(2, np.array([0], np.int64))[0, 0] == 9.0
+
+
+def test_apply_batch_empty_batch_still_bumps_once():
+    cube = _multi_group_value_cube()
+    v0 = cube.version
+    assert cube.apply_batch([]) == v0 + 1
+    assert cube.apply_batch([(0, None, None, None)]) == v0 + 2
+
+
+def test_apply_delta_is_single_group_batch():
+    cube = _multi_group_value_cube()
+    v0 = cube.version
+    ids = np.arange(8, dtype=np.int64)
+    v1 = cube.apply_delta(0, ids, np.full((8, DIM), 3.0, np.float32))
+    assert v1 == v0 + 1
+    assert np.all(cube.lookup(0, ids) == 3.0)
+
+
+def test_apply_batch_validation_failure_publishes_nothing():
+    """A malformed group ANYWHERE in the batch must leave the cube exactly
+    as it was: no version bump, no group applied, no overlay blocks
+    leaked (a leaked replica-registered block would hold rows that never
+    published — probeable through failover)."""
+    cube = _multi_group_value_cube()
+    v0, overlays0 = cube.version, cube.overlay_blocks
+    ids = np.arange(8, dtype=np.int64)
+    good = (0, ids, np.full((8, DIM), 4.0, np.float32), None)
+    bad_dim = (1, ids, np.full((8, DIM + 1), 4.0, np.float32), None)
+    with pytest.raises(ValueError):
+        cube.apply_batch([good, bad_dim])  # good group FIRST: must not land
+    assert cube.version == v0
+    assert cube.overlay_blocks == overlays0
+    assert np.all(cube.lookup(0, ids) == 0.0)   # group 0 unchanged
+    bad_count = (1, ids, np.full((7, DIM), 4.0, np.float32), None)
+    with pytest.raises(ValueError):
+        cube.apply_batch([good, bad_count])
+    assert cube.version == v0 and cube.overlay_blocks == overlays0
+
+
+# --------------------------------------------------- incremental compaction
+
+def _churn(cube, seed=11, rounds=6):
+    rng = np.random.default_rng(seed)
+    for r in range(rounds):
+        parts = []
+        for g in range(N_GROUPS):
+            ids = rng.choice(N_IDS, 40, replace=False).astype(np.int64)
+            rows = rng.standard_normal((40, DIM)).astype(np.float32)
+            dels = rng.choice(N_IDS, 5, replace=False).astype(np.int64)
+            parts.append((g, ids, rows, dels))
+        cube.apply_batch(parts)
+
+
+def test_chunked_compaction_bit_identical_to_monolithic():
+    a, b = _multi_group_value_cube(), _multi_group_value_cube()
+    _churn(a), _churn(b)
+    a.compact()                            # monolithic
+    b.compact(max_rows_per_pass=100)       # chunked
+    assert a.metrics.compact_passes == 1
+    assert b.metrics.compact_passes > 2    # actually ran incrementally
+    assert a.overlay_blocks == 0 and b.overlay_blocks == 0
+    ids = np.arange(N_IDS, dtype=np.int64)
+    for g in range(N_GROUPS):
+        la, lb = a.contains(g, ids), b.contains(g, ids)
+        np.testing.assert_array_equal(la, lb)
+        np.testing.assert_array_equal(a.lookup(g, ids[la]),
+                                      b.lookup(g, ids[lb]))
+
+
+def test_chunked_compaction_records_bounded_holds():
+    cube = _multi_group_value_cube()
+    _churn(cube)
+    assert cube.metrics.compact_max_hold_s == 0.0
+    cube.compact(max_rows_per_pass=64)
+    assert cube.metrics.compactions == 1
+    assert cube.metrics.compact_passes > 1
+    assert cube.metrics.compact_max_hold_s > 0.0
+
+
+def test_chunked_compaction_deleted_rows_stay_deleted():
+    """Tombstone cleanup must not resurrect: a row deleted pre-compaction
+    stays absent after the chunked fold, through the failover path too."""
+    cube = _multi_group_value_cube()
+    dels = np.arange(0, 20, dtype=np.int64)
+    cube.apply_batch([(g, None, None, dels) for g in range(N_GROUPS)])
+    # upsert-then-re-delete: the freshest state is a tombstone whose row
+    # still sits in an overlay block — cleanup must keep it dead
+    cube.apply_batch([(0, np.array([3], np.int64),
+                       np.full((1, DIM), 8.0, np.float32), None)])
+    cube.apply_batch([(0, None, None, np.array([3], np.int64))])
+    cube.compact(max_rows_per_pass=48)
+    for g in range(N_GROUPS):
+        assert not cube.contains(g, dels).any(), g
+    live = np.arange(20, N_IDS, dtype=np.int64)
+    for g in range(N_GROUPS):
+        assert cube.contains(g, live).all(), g
+
+
+def test_chunked_compaction_pinned_reader_stays_bit_identical():
+    cube = _multi_group_value_cube()
+    _churn(cube, seed=3)
+    ids = np.arange(N_IDS, dtype=np.int64)
+    with cube.pin() as pv:
+        live = ids[cube.contains(0, ids, version=pv)]
+        before = cube.lookup(0, live, version=pv)
+        cube.compact(max_rows_per_pass=64)     # folds while pv is live
+        after = cube.lookup(0, live, version=pv)
+        np.testing.assert_array_equal(before, after)
+    cube.reclaim()
+    assert cube.overlay_blocks == 0
+
+
+def test_chunked_compaction_everything_deleted_compacts_to_empty():
+    cube = _multi_group_value_cube()
+    ids = np.arange(N_IDS, dtype=np.int64)
+    cube.apply_batch([(g, None, None, ids) for g in range(N_GROUPS)])
+    cube.compact(max_rows_per_pass=64)
+    for g in range(N_GROUPS):
+        assert not cube.contains(g, ids).any()
+    assert cube._snap[1].size == 0         # no live entries, no tombstones
+
+
+def test_manager_uses_chunked_compaction_knob():
+    cube = _multi_group_value_cube()
+    mgr = UpdateManager(cube, compact_after_blocks=1,
+                        compact_max_rows_per_pass=48)
+    ids = np.arange(N_IDS, dtype=np.int64)
+    mgr.apply(DeltaBatch(0, [
+        GroupDelta(group=g, ids=ids,
+                   rows=np.full((N_IDS, DIM), 2.0, np.float32))
+        for g in range(N_GROUPS)]))
+    assert mgr.maybe_compact()
+    assert cube.overlay_blocks == 0
+    assert cube.metrics.compact_passes > 1  # the knob reached the cube
+
+
+def test_manager_touched_log_one_entry_per_batch():
+    cube = _multi_group_value_cube()
+    mgr = UpdateManager(cube)
+    ids = np.arange(6, dtype=np.int64)
+    mgr.apply(DeltaBatch(0, [
+        GroupDelta(group=g, ids=ids,
+                   rows=np.full((6, DIM), 1.0, np.float32))
+        for g in range(N_GROUPS)]))
+    assert len(mgr._touched_log) == 1      # batch granularity, not per-group
+    logged_v, keys, _ = mgr._touched_log[0]
+    assert logged_v == cube.version        # logged at the CUBE batch version
+    got = mgr.touched_since(logged_v - 1)
+    assert got is not None
+    # all three groups' keys live under the SINGLE batch version
+    assert {(g, int(i)) for g in (1, 2) for i in ids} <= got[0]
+    assert {int(i) for i in ids} <= got[0]  # group 0 keys by bare id
+
+
+# ---------------------------------------------------- delta log satellites
+
+def test_read_delta_orders_groups_numerically(tmp_path):
+    """12 groups: lexical filename order (group_10 < group_2) must not
+    leak into apply order."""
+    n = 12
+    batch = DeltaBatch(0, [
+        GroupDelta(group=g, ids=np.array([g], np.int64),
+                   rows=np.full((1, DIM), float(g), np.float32))
+        for g in range(n)])
+    path = write_delta(str(tmp_path), batch)
+    got = read_delta(path)
+    assert [g.group for g in got.groups] == list(range(n))
+    for g in got.groups:
+        assert g.rows[0, 0] == float(g.group)
+
+
+def test_emitter_restart_resumes_past_existing_versions(tmp_path):
+    log_dir = str(tmp_path)
+    first = DeltaEmitter(log_dir)
+    assert first.next_version == 0         # fresh dir still starts at 0
+    ids = np.array([1], np.int64)
+    rows = np.full((1, DIM), 1.0, np.float32)
+    for _ in range(3):
+        first.emit([GroupDelta(group=0, ids=ids, rows=rows)])
+    sums_before = {v: open(os.path.join(p, "CHECKSUMS")).read()
+                   for v, p in list_deltas(log_dir)}
+    restarted = DeltaEmitter(log_dir)      # the mid-stream restart
+    assert restarted.next_version == 3     # max(existing) + 1, NOT 0
+    restarted.emit([GroupDelta(group=0, ids=ids,
+                               rows=np.full((1, DIM), 9.0, np.float32))])
+    published = list_deltas(log_dir)
+    assert [v for v, _ in published] == [0, 1, 2, 3]
+    for v, p in published[:3]:             # the old stream is untouched
+        assert open(os.path.join(p, "CHECKSUMS")).read() == sums_before[v]
+    assert DeltaEmitter(log_dir, start_version=0).next_version == 0
+
+
+def test_emitter_restart_skips_torn_unpublished_version(tmp_path):
+    log_dir = str(tmp_path)
+    DeltaEmitter(log_dir).emit([GroupDelta(
+        group=0, ids=np.array([1], np.int64),
+        rows=np.full((1, DIM), 1.0, np.float32))])
+    # a crashed emit: directory exists, never published (no DONE)
+    os.makedirs(os.path.join(log_dir, f"delta_{5:012d}"))
+    assert DeltaEmitter(log_dir).next_version == 6
+
+
+def test_reemit_unpublishes_before_rewriting(tmp_path, monkeypatch):
+    """The corrupt-delta recovery path: while the npz files are being
+    rewritten, the stale DONE marker and manifest must already be gone —
+    a watcher polling mid-rewrite sees an unpublished delta, never a
+    published one with half-replaced content."""
+    log_dir = str(tmp_path)
+    ids = np.array([1, 2], np.int64)
+    batch = DeltaBatch(0, [GroupDelta(
+        group=0, ids=ids, rows=np.full((2, DIM), 1.0, np.float32))])
+    path = write_delta(log_dir, batch)
+    assert os.path.exists(os.path.join(path, "DONE"))
+    seen = []
+    real_savez = np.savez
+
+    def spy(file, **kw):
+        seen.append((os.path.exists(os.path.join(path, "DONE")),
+                     os.path.exists(os.path.join(path, "CHECKSUMS"))))
+        return real_savez(file, **kw)
+
+    monkeypatch.setattr(np, "savez", spy)
+    write_delta(log_dir, batch)            # the re-emit
+    assert seen and all(s == (False, False) for s in seen)
+    assert verify_delta(path)              # republished coherently
+    assert os.path.exists(os.path.join(path, "DONE"))
+
+
+def test_watcher_racing_reemit_applies_only_coherent_content(tmp_path,
+                                                            monkeypatch):
+    """End-to-end re-emit race: corrupt a published delta (watcher skips
+    it), then re-emit with FEWER groups while a watcher polls mid-rewrite
+    — the mid-rewrite poll applies nothing (unpublished), and the final
+    poll applies exactly the re-emitted content."""
+    log_dir = str(tmp_path)
+    ids = np.array([1, 2], np.int64)
+    write_delta(log_dir, DeltaBatch(0, [
+        GroupDelta(group=g, ids=ids,
+                   rows=np.full((2, DIM), 1.0, np.float32))
+        for g in range(2)]))
+    path = os.path.join(log_dir, f"delta_{0:012d}")
+    with open(os.path.join(path, "group_1.npz"), "ab") as f:
+        f.write(b"bitrot")                 # corrupt AFTER publish
+    applied = []
+    watcher = DeltaWatcher(log_dir, apply_fn=lambda b: applied.append(b))
+    with pytest.raises(DeltaIntegrityError):
+        watcher.check_once()               # corrupt → skipped, not applied
+    assert not applied and watcher.integrity_failures == 1
+
+    real_savez = np.savez
+
+    def racing_poll(file, **kw):
+        # the watcher polls WHILE the re-emit rewrites: the delta is
+        # unpublished (DONE gone) so nothing may be applied
+        assert watcher.check_once() is False
+        return real_savez(file, **kw)
+
+    monkeypatch.setattr(np, "savez", racing_poll)
+    reemit = DeltaBatch(0, [GroupDelta(
+        group=0, ids=ids, rows=np.full((2, DIM), 7.0, np.float32))])
+    write_delta(log_dir, reemit)
+    monkeypatch.setattr(np, "savez", real_savez)
+    assert watcher.check_once() is True
+    assert len(applied) == 1
+    assert [g.group for g in applied[0].groups] == [0]   # stale group gone
+    assert np.all(applied[0].groups[0].rows == 7.0)
+
+
+# ------------------------------------------------------- torn-read hunters
+
+def _hunter_expected(published, pin_version):
+    vs = [v for v in published if v <= pin_version]
+    return published[max(vs)] if vs else None
+
+
+def test_cross_group_torn_read_hunter_async(rng):
+    """THE tentpole acceptance test (ISSUE 7): concurrent pinned readers
+    hammer lookups across 3 feature groups on AsyncExecutor while a
+    writer streams multi-group delta batches and CHUNKED compactions.
+    Every pin must observe all groups at one single version — ≥1k pinned
+    multi-group reads, zero cross-group mismatches."""
+    cube = _multi_group_value_cube()
+    published = {cube.version: 0.0}        # delta-publish version → value
+    stop = threading.Event()
+    first_batch = threading.Event()
+    writer_err = []
+    pins_checked = [0]
+
+    def writer():
+        try:
+            first_batch.wait(timeout=10)
+            k = 0
+            while not stop.is_set():
+                next_v = cube.version + 1
+                published[next_v] = float(next_v)   # record BEFORE publish
+                got = cube.apply_batch(_batch_parts(float(next_v)))
+                assert got == next_v
+                k += 1
+                if k % 5 == 0:
+                    # chunked: several intermediate versions publish, all
+                    # carrying the same values — _hunter_expected resolves
+                    # them to the latest delta at or below the pin
+                    cube.compact(max_rows_per_pass=64)
+                time.sleep(0.001)
+        except Exception as e:             # pragma: no cover - debug aid
+            writer_err.append(e)
+
+    def op_lookup(batch, ctx):
+        first_batch.set()
+        for ev in batch:
+            ids = ev.payload["ids"]
+            with cube.pin() as pv:         # ONE pin spanning all groups
+                per_group = [np.unique(cube.lookup(g, ids, version=pv))
+                             for g in range(N_GROUPS)]
+                ev.payload["version"] = pv.version
+            ev.payload["values"] = np.unique(np.concatenate(per_group))
+            pins_checked[0] += 1
+        return batch
+
+    g = SEDP()
+    g.add_stage("ingress", lambda b, c: b, batch_size=4, parallelism=2)
+    g.add_stage("lookup", op_lookup, batch_size=8, parallelism=3)
+    g.add_stage("respond", lambda b, c: b, batch_size=8)
+    g.chain("ingress", "lookup", "respond")
+    plan = g.compile()
+
+    events = [Event(payload={"ids": rng.integers(0, N_IDS, 32)})
+              for _ in range(1100)]
+    th = threading.Thread(target=writer, daemon=True)
+    th.start()
+    try:
+        report = AsyncExecutor(plan).run(events)
+    finally:
+        stop.set()
+        th.join(timeout=10)
+    assert not writer_err
+    assert len(report.results) == len(events)
+    assert pins_checked[0] >= 1000
+    seen_versions = set()
+    for ev in report.results:
+        vals = ev.payload["values"]
+        # all rows of ALL groups under one pin share ONE value ⇒ the pin
+        # observed every group at a single version — no cross-group tear
+        assert vals.size == 1, f"cross-group torn read: values {vals}"
+        ver = ev.payload["version"]
+        assert _hunter_expected(published, ver) == float(vals[0])
+        seen_versions.add(ver)
+    assert len(seen_versions) >= 2, seen_versions
+
+
+def test_cross_group_torn_read_hunter_sim():
+    """SimExecutor variant: the virtual-clock executor is single-threaded,
+    so the stream is driven from a stage op — a batch publish + a chunked
+    compaction land BETWEEN pins, and every pin must still see all groups
+    at one value."""
+    cube = _multi_group_value_cube()
+    published = {cube.version: 0.0}
+    calls = [0]
+
+    def op_lookup(batch, ctx):
+        calls[0] += 1
+        if calls[0] % 3 == 0:              # stream mid-run, from the op
+            next_v = cube.version + 1
+            published[next_v] = float(next_v)
+            cube.apply_batch(_batch_parts(float(next_v)))
+            if calls[0] % 9 == 0:
+                cube.compact(max_rows_per_pass=64)
+        for ev in batch:
+            ids = ev.payload["ids"]
+            with cube.pin() as pv:
+                vals = np.unique(np.concatenate(
+                    [cube.lookup(g, ids, version=pv)
+                     for g in range(N_GROUPS)]))
+            ev.payload["version"] = pv.version
+            ev.payload["values"] = np.unique(vals)
+        return batch
+
+    g = SEDP()
+    g.add_stage("lookup", op_lookup, batch_size=4)
+    g.add_stage("respond", lambda b, c: b, batch_size=4)
+    g.chain("lookup", "respond")
+    rng = np.random.default_rng(5)
+    arrivals = [(i * 1e-3, Event(payload={"ids": rng.integers(0, N_IDS, 16)}))
+                for i in range(120)]
+    report = SimExecutor(g.compile()).run(arrivals)
+    assert len(report.results) == len(arrivals)
+    seen = set()
+    for ev in report.results:
+        vals = ev.payload["values"]
+        assert vals.size == 1, f"cross-group torn read: {vals}"
+        assert _hunter_expected(published, ev.payload["version"]) == \
+            float(vals[0])
+        seen.add(ev.payload["version"])
+    assert len(seen) >= 2

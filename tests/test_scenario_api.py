@@ -285,9 +285,10 @@ def test_multi_group_no_torn_reads_under_live_delta_stream():
             dv = svc.updates.stats.last_version + 1
             while not stop.is_set():
                 v0 = svc.cube.version
-                # record BEFORE publish: group g's apply bumps to v0+1+g
+                # record BEFORE publish: the WHOLE batch publishes
+                # atomically — both groups land at v0+1 in ONE bump
                 published[0][v0 + 1] = x
-                published[1][v0 + 2] = x
+                published[1][v0 + 1] = x
                 svc.updates.apply(DeltaBatch(dv, [
                     GroupDelta(group=0, ids=ids, rows=np.full(
                         (vocab, 4), x, np.float32)),
@@ -334,6 +335,16 @@ def test_multi_group_no_torn_reads_under_live_delta_stream():
                     f"group {group} rows show {vals[0]} but version {pv} "
                     f"published {exp}")
                 checked += 1
+            # CROSS-GROUP atomicity (batch publish): one pin ⇒ both
+            # groups observed at the SAME value/version — the §7.3
+            # window where adjacent groups sat at adjacent versions
+            # cannot open under apply_batch
+            g0 = np.unique(p["cube_rows_all"]["item_id"])
+            g1 = np.unique(p["cube_rows_all"]["item_cat"])
+            if expected(0, pv) is not None and expected(1, pv) is not None:
+                assert float(g0[0]) == float(g1[0]), (
+                    f"cross-group torn read at version {pv}: "
+                    f"group 0 = {g0[0]}, group 1 = {g1[0]}")
             seen_versions.add(pv)
     assert checked > 0
     assert len(seen_versions) >= 2, seen_versions   # stream landed mid-run
