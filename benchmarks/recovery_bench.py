@@ -1,0 +1,388 @@
+"""Recovery drill: crash-safe restart from durable snapshots (DESIGN.md §9).
+
+Two cells, two gates:
+
+  * **Kill-and-restart drill** — a serving node (substrate + delta watcher
+    + periodic ``CubeSnapshotter``) and a never-crashed twin consume the
+    same delta log. The node is killed at the worst instants via armed
+    ``repro.faults`` crash points — mid-delta-emit (torn, no DONE),
+    mid-snapshot-publish (torn snapshot, recovery must fall back to the
+    previous valid one), and mid-compaction-pass (partial in-memory fold
+    discarded) — then recovered from ``newest valid snapshot + delta-log
+    replay``. Gates: the recovered cube is BIT-IDENTICAL to the twin at
+    the same delta cursor for every group (all-id lookups compared), and
+    recovery completes within the RTO bound.
+  * **Warm-up availability** — a real ``InferenceService`` is snapshotted
+    with a pending delta suffix, "crashed", and rebooted with
+    ``recover=True`` + live updates (background replay). Gates: during
+    warm-up EVERY request is answered (zero errors/timeouts) and every
+    cube-served answer is stamped down the degradation ladder
+    (``degraded_tier ≥ TIER_STALE_CACHE``); once the watcher catches up,
+    ``recovering`` clears and cube-served answers return to tier 0.
+
+Usage:
+    PYTHONPATH=src python benchmarks/recovery_bench.py            # full run
+    PYTHONPATH=src python benchmarks/recovery_bench.py --smoke    # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.cube import TIER_DEFAULT, TIER_PRIMARY, TIER_STALE_CACHE
+from repro.faults import SimulatedCrash, arm, disarm_all
+from repro.serve.scenario import ServingSubstrate, SubstrateDeltaWatcher
+from repro.update import (CubeSnapshotter, DeltaEmitter, GroupDelta,
+                          latest_valid_snapshot, list_deltas, list_snapshots)
+
+GROUPS = [("item_id", 1000), ("cat", 500)]
+TAIL_DIM = 4
+UPSERTS = 192
+DELETES = 8
+RTO_BOUND_S = 10.0
+
+# identical config on node and twin — small blocks + a tight compaction
+# trigger so every drill step exercises overlay blocks, compaction passes
+# and (on the node) periodic snapshots
+NODE_KW = dict(cube_cache_ratio=0.05, tail_dim=TAIL_DIM, n_servers=4,
+               replication=2, block_rows=128, compact_after_blocks=2,
+               compact_max_rows_per_pass=64, seed=7)
+
+CRASH_CASES = {
+    # crash the training-side emitter between npz writes and the DONE
+    # marker: a torn (unpublished) delta the log must hide from every reader
+    "torn_emit": "delta.pre_done",
+    # crash the snapshot writer before its CHECKSUMS manifest: recovery
+    # must skip the torn snapshot and fall back to the previous valid one
+    "torn_snapshot": "snapshot.pre_manifest",
+    # crash between compaction passes: a partially-folded in-memory cube
+    # dies; the on-disk snapshot + log must rebuild the exact state
+    "mid_compaction": "cube.compact_pass",
+}
+
+
+def build_node() -> ServingSubstrate:
+    sub = ServingSubstrate(**NODE_KW)
+    for name, vocab in GROUPS:
+        sub.group_for(name, vocab)
+    return sub
+
+
+def make_groups(rng) -> list:
+    out = []
+    for gid, (_name, vocab) in enumerate(GROUPS):
+        ids = rng.choice(vocab, UPSERTS, replace=False)
+        rows = rng.standard_normal((UPSERTS, TAIL_DIM)).astype(np.float32)
+        dels = rng.choice(vocab, DELETES, replace=False)
+        out.append(GroupDelta(group=gid, ids=ids, rows=rows,
+                              delete_ids=dels))
+    return out
+
+
+def cubes_equal(x: ServingSubstrate, y: ServingSubstrate) -> bool:
+    """All-id lookup comparison per group: rows must match bit for bit
+    (non-strict lookup so tombstones compare as zeros instead of raising).
+    Tiers must match too, except the one compaction-timing-dependent
+    label: a deleted id reads as an authoritative zero-row tombstone
+    (tier 0) until compaction folds it away, then as an absent signature
+    (TIER_DEFAULT) — same zero row either way, so the label may skew
+    between a node that compacted and one that has not yet."""
+    for gid, (_name, vocab) in enumerate(GROUPS):
+        ids = np.arange(vocab)
+        rx, tx = x.cube.lookup_ex(gid, ids)
+        ry, ty = y.cube.lookup_ex(gid, ids)
+        if not np.array_equal(rx, ry):
+            return False
+        diff = tx != ty
+        if diff.any():
+            zeros = ~rx[diff].any(axis=1)
+            pair = (np.isin(tx[diff], (TIER_PRIMARY, TIER_DEFAULT))
+                    & np.isin(ty[diff], (TIER_PRIMARY, TIER_DEFAULT)))
+            if not (zeros & pair).all():
+                return False
+    return True
+
+
+# ---------------------------------------------------------------- cell 1
+
+def run_drill(case: str, steps: int = 10, crash_at: int = 5,
+              every_deltas: int = 3, seed: int = 0) -> dict:
+    """One kill-and-restart drill: stream ``steps`` delta batches into a
+    snapshotting node and a never-crashed twin, crash the node at step
+    ``crash_at`` via the case's armed crash point, recover a fresh node
+    from disk, finish the stream on both, and compare bit for bit."""
+    tmp = tempfile.mkdtemp(prefix=f"recovery_{case}_")
+    log_dir = os.path.join(tmp, "deltas")
+    snap_dir = os.path.join(tmp, "snaps")
+    disarm_all()
+    try:
+        a = build_node()                      # the node that will crash
+        b = build_node()                      # the never-crashed twin
+        snap = CubeSnapshotter(a, snap_dir, every_deltas=every_deltas,
+                               keep=2, delta_log_dir=log_dir)
+        wa = SubstrateDeltaWatcher(a, log_dir, snapshotter=snap)
+        # the twin shares the log: its cursor must floor the delta GC
+        wb = snap.register_watcher(
+            SubstrateDeltaWatcher(b, log_dir, prune_applied=False))
+        em = DeltaEmitter(log_dir)
+        rng = np.random.default_rng(seed)
+
+        crashed = False
+        lost_groups = None
+        step = 0
+        while step < steps and not crashed:
+            groups = make_groups(rng)
+            if case == "torn_emit" and step == crash_at:
+                arm(CRASH_CASES[case])
+                try:
+                    em.emit(groups)
+                except SimulatedCrash:
+                    crashed = True
+                    lost_groups = groups      # the emit that never published
+                finally:
+                    disarm_all()
+                assert crashed, "torn_emit crash point never fired"
+                break
+            em.emit(groups)
+            if case in ("torn_snapshot", "mid_compaction") \
+                    and step == crash_at:
+                # at_hit=2 for compaction: one pass folds, THEN the crash —
+                # a genuinely partial in-memory compaction dies with the node
+                arm(CRASH_CASES[case],
+                    at_hit=2 if case == "mid_compaction" else 1)
+                try:
+                    wa.check_once()
+                except SimulatedCrash:
+                    crashed = True
+                finally:
+                    disarm_all()
+                assert crashed, f"{case} crash point never fired"
+                wb.check_once()               # the twin never crashes
+                break
+            wa.check_once()
+            wb.check_once()
+            step += 1
+        assert crashed, f"drill {case} finished without crashing"
+
+        torn_deltas = sum(
+            1 for d in os.listdir(log_dir) if d.startswith("delta_")
+            and not os.path.exists(os.path.join(log_dir, d, "DONE")))
+        torn_snaps = sum(1 for _v, _p, pub in list_snapshots(snap_dir)
+                         if not pub)
+        snap_meta_path = latest_valid_snapshot(snap_dir)
+        assert snap_meta_path is not None, \
+            f"{case}: no valid snapshot to recover from"
+        with open(os.path.join(snap_meta_path, "meta.json")) as f:
+            snapshot_cursor = int(json.load(f)["delta_version"])
+
+        # ---- the crash: discard the node's in-memory state entirely
+        del a, wa, snap
+
+        t0 = time.monotonic()
+        c = ServingSubstrate.recover(snap_dir, update_dir=log_dir,
+                                     replay=True, **NODE_KW)
+        rto_s = time.monotonic() - t0
+        assert not c.recovering, "inline replay left the node recovering"
+        wc = SubstrateDeltaWatcher(c, log_dir, prune_applied=False)
+
+        # training side restarts too: a fresh emitter must resume PAST the
+        # torn directory (the crashed writer's version is burned, never
+        # reused) and re-emit the lost payload
+        em2 = DeltaEmitter(log_dir)
+        if lost_groups is not None:
+            em2.emit(lost_groups)
+        for _ in range(step + 1, steps):
+            em2.emit(make_groups(rng))
+        wc.check_once()
+        wb.check_once()
+
+        identical = cubes_equal(c, b)
+        cursor_c = c.updates.stats.last_version
+        cursor_b = b.updates.stats.last_version
+        return {
+            "case": case, "crash_point": CRASH_CASES[case],
+            "steps": steps, "crash_at": crash_at,
+            "torn_deltas_on_disk": torn_deltas,
+            "torn_snapshots_on_disk": torn_snaps,
+            "snapshot_cursor": snapshot_cursor,
+            "recovered_cursor": int(cursor_c),
+            "twin_cursor": int(cursor_b),
+            "deltas_replayed_at_boot": int(cursor_c) - snapshot_cursor
+            - (steps - step - 1) - (1 if lost_groups is not None else 0),
+            "rto_s": rto_s,
+            "bit_identical": bool(identical
+                                  and cursor_c == cursor_b),
+            "ok": bool(identical and cursor_c == cursor_b
+                       and rto_s <= RTO_BOUND_S),
+        }
+    finally:
+        disarm_all()
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+# ---------------------------------------------------------------- cell 2
+
+def run_warmup(n_requests: int = 64, applied: int = 4, pending: int = 3,
+               seed: int = 0) -> dict:
+    """Warm-up availability: snapshot a real service mid-stream, leave a
+    pending delta suffix, reboot with ``recover=True`` + live updates, and
+    measure serving during AND after the degraded warm-up window."""
+    from repro.core.service import InferenceService, ServiceConfig
+    tmp = tempfile.mkdtemp(prefix="recovery_warmup_")
+    upd = os.path.join(tmp, "deltas")
+    sd = os.path.join(tmp, "snaps")
+    try:
+        cfg = ServiceConfig(arch_id="din", seed=seed, snapshot_dir=sd,
+                            live_updates=True, update_dir=upd,
+                            snapshot_every_deltas=max(applied, 1))
+        svc = InferenceService(cfg)
+        groups = svc._rt.cube_groups          # [(field, gid, vocab), ...]
+        tail = svc.substrate.tail_dim
+        em = DeltaEmitter(upd)
+        rng = np.random.default_rng(seed)
+
+        def emit_one():
+            em.emit([GroupDelta(
+                group=g, ids=rng.choice(v, min(64, v), replace=False),
+                rows=rng.standard_normal((min(64, v), tail)
+                                         ).astype(np.float32))
+                for _f, g, v in groups])
+
+        for _ in range(applied):
+            emit_one()
+        svc.update_watcher.check_once()
+        assert svc.snapshotter.snapshot(force=True) is not None
+        for _ in range(pending):              # the suffix replay must cover
+            emit_one()
+        del svc                               # the crash
+
+        from dataclasses import replace
+        t0 = time.monotonic()
+        svc2 = InferenceService(replace(cfg, recover=True))
+        boot_s = time.monotonic() - t0
+        assert svc2.substrate.recovering, \
+            "reboot with a pending suffix must start in warm-up"
+        target = svc2.substrate.recovery_target
+
+        def serve(tag):
+            rep = svc2.run(n_requests=n_requests, executor="async")
+            resp = [ev.meta["response"] for ev in rep.results]
+            cube_served = [r for r in resp if not r.from_cache
+                           and not r.timed_out]
+            tiers = [r.degraded_tier for r in cube_served]
+            return {
+                "phase": tag, "offered": rep.offered,
+                "answered": len([r for r in resp if not r.timed_out]),
+                "errors": rep.errors, "timed_out": rep.expired,
+                "cube_served": len(cube_served),
+                "cache_hits": len(resp) - len(cube_served),
+                "min_tier": int(min(tiers)) if tiers else -1,
+                "max_tier": int(max(tiers)) if tiers else -1,
+            }
+
+        warm = serve("warmup")
+        assert svc2.substrate.recovering, \
+            "warm-up ended without the watcher running"
+        svc2.update_watcher.check_once()      # background replay catches up
+        assert not svc2.substrate.recovering
+        after = serve("caught_up")
+        svc2.stop_updates()
+        cursor = svc2.substrate.updates.stats.last_version
+        return {
+            "boot_s": boot_s, "recovery_target": int(target),
+            "final_cursor": int(cursor), "warmup": warm, "caught_up": after,
+            "ok": bool(
+                warm["errors"] == 0 and warm["timed_out"] == 0
+                and warm["answered"] == warm["offered"]
+                and warm["cube_served"] > 0
+                and warm["min_tier"] >= TIER_STALE_CACHE
+                and after["errors"] == 0
+                and after["cube_served"] > 0
+                and after["max_tier"] == TIER_PRIMARY),
+        }
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+# ------------------------------------------------------------------ main
+
+def run_all(steps: int, n_requests: int, seed: int = 0) -> dict:
+    drills = [run_drill(case, steps=steps, seed=seed)
+              for case in CRASH_CASES]
+    warmup = run_warmup(n_requests=n_requests, seed=seed)
+    summary = {
+        "cases": len(drills),
+        "bit_identical_all": all(d["bit_identical"] for d in drills),
+        "rto_max_s": max(d["rto_s"] for d in drills),
+        "rto_bound_s": RTO_BOUND_S,
+        "warmup_available": warmup["warmup"]["answered"]
+        == warmup["warmup"]["offered"] and warmup["warmup"]["errors"] == 0,
+        "warmup_degraded_floor": warmup["warmup"]["min_tier"],
+        "ok": all(d["ok"] for d in drills) and warmup["ok"],
+    }
+    return {"drills": drills, "warmup": warmup, "summary": summary}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-assert", action="store_true")
+    args = ap.parse_args()
+    steps = 8 if args.smoke else 12
+    n_requests = 32 if args.smoke else 96
+
+    out = run_all(steps=steps, n_requests=n_requests, seed=args.seed)
+    for d in out["drills"]:
+        print(f"  {d['case']:>15}: torn(deltas={d['torn_deltas_on_disk']} "
+              f"snaps={d['torn_snapshots_on_disk']}) "
+              f"snapshot@v{d['snapshot_cursor']} → "
+              f"recovered@v{d['recovered_cursor']} "
+              f"(twin@v{d['twin_cursor']}) rto={d['rto_s']*1e3:.0f}ms "
+              f"bit_identical={d['bit_identical']}")
+    w = out["warmup"]
+    print(f"  warm-up: boot={w['boot_s']:.2f}s "
+          f"target=v{w['recovery_target']} "
+          f"answered={w['warmup']['answered']}/{w['warmup']['offered']} "
+          f"errors={w['warmup']['errors']} "
+          f"tiers=[{w['warmup']['min_tier']},{w['warmup']['max_tier']}] → "
+          f"caught-up tiers=[{w['caught_up']['min_tier']},"
+          f"{w['caught_up']['max_tier']}]")
+    s = out["summary"]
+    print("recovery summary: "
+          + " ".join(f"{k}={v:.3f}" if isinstance(v, float) else f"{k}={v}"
+                     for k, v in s.items()))
+
+    os.makedirs("artifacts/bench", exist_ok=True)
+    path = os.path.join("artifacts", "bench", "recovery.json")
+    with open(path, "w") as f:
+        json.dump({"config": {"steps": steps, "n_requests": n_requests,
+                              "seed": args.seed, "smoke": args.smoke},
+                   **out}, f, indent=1)
+    print(f"wrote {path}")
+
+    if not args.no_assert:
+        assert s["bit_identical_all"], \
+            f"recovered cube diverged from the never-crashed twin: " \
+            f"{out['drills']}"
+        assert s["rto_max_s"] <= RTO_BOUND_S, \
+            f"recovery blew the RTO bound: {s['rto_max_s']:.2f}s"
+        assert s["warmup_available"], \
+            f"requests errored during warm-up: {w['warmup']}"
+        assert s["warmup_degraded_floor"] >= TIER_STALE_CACHE, \
+            f"warm-up served below the stale-cache floor: {w['warmup']}"
+        assert w["caught_up"]["max_tier"] == TIER_PRIMARY, \
+            f"tiers never returned to primary after catch-up: " \
+            f"{w['caught_up']}"
+        assert s["ok"], f"recovery drill failed: {s}"
+        print("recovery drill assertions passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -92,6 +92,17 @@ def main() -> None:
                ch_drill["p99_nondegraded_ms"]
                / max(ch_base["p99_nondegraded_ms"], 1e-9)))
 
+    from benchmarks import recovery_bench
+
+    t0 = time.time()
+    rec = recovery_bench.run_all(steps=8 if quick else 12,
+                                 n_requests=32 if quick else 96)
+    record("recovery_drill", rec, us=(time.time() - t0) * 1e6,
+           derived="bit_identical={} rto_max={:.0f}ms warmup_floor=tier{}".format(
+               rec["summary"]["bit_identical_all"],
+               rec["summary"]["rto_max_s"] * 1e3,
+               rec["summary"]["warmup_degraded_floor"]))
+
     from benchmarks import update_bench
 
     t0 = time.time()

@@ -47,6 +47,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.faults.crash import crash_point
 from repro.sparse.hashing import signature_np
 
 # serving-tier codes for lookup_ex (DESIGN.md §8.3): the graceful-
@@ -1081,6 +1082,13 @@ class ParameterCube:
             overlay_start = self.overlay_blocks
 
         while True:
+            # recovery-drill abort boundary (DESIGN.md §9): a crash here —
+            # after some passes re-homed rows and published intermediate
+            # versions — loses only IN-MEMORY state; compaction never
+            # touches the durable snapshot/delta artifacts, so a restarted
+            # node replays the same deltas onto uncompacted blocks and
+            # serves the identical rows
+            crash_point("cube.compact_pass")
             with self._p_lock:
                 t_hold = time.monotonic()
                 ver, psigs, psrv, pblk, poff = self._ensure_primary_index()

@@ -16,7 +16,7 @@ constraint |L* − L̂| ≤ ε (Eq. 2).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -151,7 +151,9 @@ class QuotaController:
 
     def __init__(self, downstream: str = "rerank",
                  depth_capacity: float = 64.0, alpha: float = 0.35,
-                 expiry_weight: float = 8.0):
+                 expiry_weight: float = 8.0,
+                 warmup_fn: Optional[Callable[[], bool]] = None,
+                 warmup_quota: float = 0.25):
         self.downstream = downstream
         self.depth_capacity = depth_capacity
         self.alpha = alpha
@@ -160,6 +162,16 @@ class QuotaController:
         # there is — weight each fresh expiration this many queue-depth
         # units when folding it into the quota
         self.expiry_weight = expiry_weight
+        # recovery warm-up clamp (DESIGN.md §9): while ``warmup_fn()`` is
+        # truthy (the substrate is replaying its delta log), admitted
+        # quota is capped at ``warmup_quota`` regardless of how idle the
+        # downstream looks — a just-restarted node serving from a cold
+        # cache must not take full load before replay catches up. The
+        # EWMA keeps integrating the real signal underneath, so the clamp
+        # lifting is a step back to the true quota, not a cold restart of
+        # the controller.
+        self.warmup_fn = warmup_fn
+        self.warmup_quota = warmup_quota
         self._q = 1.0
         self._last_expired = 0
 
@@ -180,7 +192,10 @@ class QuotaController:
                 raw = min(raw, self.depth_capacity
                           / (self.depth_capacity + self.expiry_weight * d_exp))
         self._q += self.alpha * (raw - self._q)
-        return float(np.clip(self._q, 0.02, 1.2))
+        q = float(np.clip(self._q, 0.02, 1.2))
+        if self.warmup_fn is not None and self.warmup_fn():
+            q = min(q, self.warmup_quota)
+        return q
 
     @property
     def value(self) -> float:

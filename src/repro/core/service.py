@@ -60,6 +60,15 @@ class ServiceConfig:
     # bound on the per-group bucket → raw-items reverse map (entries over
     # the cap are invalidated-and-forgotten — over-invalidation is safe)
     reverse_map_items: int = 65536
+    # crash safety (DESIGN.md §9): periodic durable cube snapshots + the
+    # snapshot-then-replay restart path. ``recover=True`` boots from the
+    # newest valid snapshot under ``snapshot_dir`` when one exists (cold
+    # boot otherwise); with live updates configured, replay streams
+    # through the watcher while the service serves degraded.
+    snapshot_dir: Optional[str] = None
+    snapshot_every_deltas: int = 8
+    snapshot_keep: int = 2
+    recover: bool = False
 
     def to_scenario_spec(self) -> ScenarioSpec:
         """The ServiceConfig → ScenarioSpec migration mapping (DESIGN.md
@@ -72,12 +81,13 @@ class ServiceConfig:
             cand_buckets=self.cand_buckets, seed=self.seed)
 
     def make_substrate(self) -> ServingSubstrate:
-        return ServingSubstrate(
+        kw = dict(
             cube_cache_ratio=self.cube_cache_ratio,
             query_window_s=self.query_window_s,
             head_slots=self.head_slots,
             compact_after_blocks=self.compact_after_blocks,
             reverse_map_items=self.reverse_map_items, seed=self.seed)
+        return _recover_or_build(self, kw)
 
 
 @dataclass
@@ -99,6 +109,27 @@ class MultiServiceConfig:
     compact_after_blocks: int = 64
     head_slots: int = 0
     reverse_map_items: int = 65536
+    # crash safety (DESIGN.md §9) — same contract as ServiceConfig
+    snapshot_dir: Optional[str] = None
+    snapshot_every_deltas: int = 8
+    snapshot_keep: int = 2
+    recover: bool = False
+
+
+def _recover_or_build(cfg, substrate_kw: dict) -> ServingSubstrate:
+    """Boot a substrate per config: from the newest valid snapshot when
+    ``cfg.recover`` asks for it and one exists, cold otherwise. With live
+    updates configured, replay is left to the watcher (the service serves
+    degraded while the suffix streams in); without one, the pending deltas
+    replay inline so the substrate is caught up on return."""
+    if getattr(cfg, "recover", False) and cfg.snapshot_dir:
+        from repro.update.snapshot import latest_valid_snapshot
+        if latest_valid_snapshot(cfg.snapshot_dir) is not None:
+            return ServingSubstrate.recover(
+                cfg.snapshot_dir, update_dir=cfg.update_dir,
+                replay=not (cfg.live_updates and cfg.update_dir),
+                **substrate_kw)
+    return ServingSubstrate(**substrate_kw)
 
 
 class _ServiceBase:
@@ -127,11 +158,41 @@ class _ServiceBase:
 
     # ------------------------------------------------------ live updates
     def _make_watcher(self):
+        self.snapshotter = None
+        if getattr(self.cfg, "snapshot_dir", None):
+            from repro.update.snapshot import CubeSnapshotter
+            self.snapshotter = CubeSnapshotter(
+                self.substrate, self.cfg.snapshot_dir,
+                every_deltas=self.cfg.snapshot_every_deltas,
+                keep=self.cfg.snapshot_keep,
+                delta_log_dir=getattr(self.cfg, "update_dir", None))
         if getattr(self.cfg, "live_updates", False) and self.cfg.update_dir:
             return SubstrateDeltaWatcher(
                 self.substrate, self.cfg.update_dir,
-                poll_s=self.cfg.update_poll_s)
+                poll_s=self.cfg.update_poll_s,
+                snapshotter=self.snapshotter)
         return None
+
+    # ------------------------------------------------- graceful shutdown
+    def shutdown(self):
+        """Planned restart (DESIGN.md §9): quiesce the update watcher and
+        take a final snapshot at the quiescent cursor, so the next boot
+        with ``recover=True`` replays ZERO deltas. Returns the snapshot
+        path (None when nothing advanced since the last snapshot, or no
+        snapshotter is configured)."""
+        self.stop_updates()
+        if self.snapshotter is not None:
+            return self.snapshotter.graceful_shutdown()
+        return None
+
+    def install_shutdown_hook(self, chain: bool = True):
+        """SIGTERM → :meth:`shutdown` (preemption notice → final
+        snapshot), chaining to the previous handler like the training
+        side's emergency checkpoint hook."""
+        if self.snapshotter is None:
+            raise RuntimeError("no snapshotter configured "
+                               "(set snapshot_dir)")
+        return self.snapshotter.install_sigterm_hook(chain=chain)
 
     def start_updates(self):
         """Start the live-update stage (requires cfg.live_updates +
@@ -255,11 +316,11 @@ class MultiScenarioService(_ServiceBase):
                          else get_scenario(s))
         if not specs:
             raise ValueError("MultiScenarioService needs ≥1 scenario")
-        self.substrate = ServingSubstrate(
+        self.substrate = _recover_or_build(cfg, dict(
             cube_cache_ratio=cfg.cube_cache_ratio,
             query_window_s=cfg.query_window_s, head_slots=cfg.head_slots,
             compact_after_blocks=cfg.compact_after_blocks,
-            reverse_map_items=cfg.reverse_map_items, seed=cfg.seed)
+            reverse_map_items=cfg.reverse_map_items, seed=cfg.seed))
         builder = PipelineBuilder(self.substrate, max_queue=cfg.max_queue,
                                   batch_wait_s=cfg.batch_wait_s)
         builder.add_ingress("ingress")

@@ -11,7 +11,12 @@ model the router consults before paying for a probe.
     (closed → open → half-open with probe requests). ``ParameterCube``
     consults it before routing so a dead server is skipped without paying
     the failed-probe RPC once the breaker opens.
+  * ``crash_point`` / ``arm`` / ``SimulatedCrash`` — whole-process crash
+    simulation for recovery drills (DESIGN.md §9): named abort points in
+    durable-write paths that a drill arms to produce torn on-disk states.
 """
+from repro.faults.crash import (SimulatedCrash, arm, crash_point,
+                                disarm_all)
 from repro.faults.health import (BREAKER_CLOSED, BREAKER_HALF_OPEN,
                                  BREAKER_OPEN, HealthRegistry, ServerHealth)
 from repro.faults.plan import FaultEvent, FaultInjector, FaultPlan
@@ -20,4 +25,5 @@ __all__ = [
     "FaultEvent", "FaultInjector", "FaultPlan",
     "ServerHealth", "HealthRegistry",
     "BREAKER_CLOSED", "BREAKER_OPEN", "BREAKER_HALF_OPEN",
+    "SimulatedCrash", "arm", "crash_point", "disarm_all",
 ]

@@ -13,14 +13,30 @@ import numpy as np
 
 def serve_recsys(args):
     from repro.core.service import InferenceService, ServiceConfig
-    svc = InferenceService(ServiceConfig(arch_id=args.arch
-                                         if args.arch != "smollm-135m"
-                                         else "din"))
+    cfg = ServiceConfig(
+        arch_id=args.arch if args.arch != "smollm-135m" else "din",
+        # crash safety (DESIGN.md §9): --snapshot-dir enables periodic
+        # durable snapshots + SIGTERM final-snapshot; --recover boots from
+        # the newest valid snapshot and replays the delta log
+        snapshot_dir=args.snapshot_dir, recover=args.recover,
+        live_updates=bool(args.update_dir), update_dir=args.update_dir)
+    svc = InferenceService(cfg)
+    if svc.snapshotter is not None:
+        svc.install_shutdown_hook()
+    if svc.update_watcher is not None:
+        svc.start_updates()
+    if args.recover and svc.substrate.recovering:
+        print(f"recovering: serving degraded until delta replay reaches "
+              f"v{svc.substrate.recovery_target}")
     rep = svc.run(n_requests=args.requests)
     print(f"served {len(rep.results)} requests; "
           f"avg {rep.avg_latency*1e3:.2f} ms, p99 "
           f"{rep.latency_percentile(0.99)*1e3:.2f} ms; "
           f"query-cache hit {100*svc.query_cache.stats.hit_ratio:.1f}%")
+    if svc.snapshotter is not None:
+        path = svc.shutdown()
+        if path:
+            print(f"final snapshot: {path}")
 
 
 def serve_lm(args):
@@ -77,6 +93,14 @@ def main():
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="recsys: durable cube snapshots here (enables "
+                         "periodic snapshot + SIGTERM final snapshot)")
+    ap.add_argument("--recover", action="store_true",
+                    help="recsys: boot from the newest valid snapshot and "
+                         "replay the delta log (cold boot if none)")
+    ap.add_argument("--update-dir", default=None,
+                    help="recsys: tail this delta log (live updates)")
     args = ap.parse_args()
     if args.mode == "recsys":
         serve_recsys(args)

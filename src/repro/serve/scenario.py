@@ -173,6 +173,13 @@ class BoundedReverseMap:
                 out.extend(self.buckets.get(int(h), ()))
         return out
 
+    def export(self) -> dict:
+        """Locked deep copy of bucket → items, for snapshot persistence
+        (DESIGN.md §9: persisted reverse maps make warm-start invalidation
+        exact after a restart)."""
+        with self._lock:
+            return {b: set(s) for b, s in self.buckets.items()}
+
     def maybe_prune(self) -> list:
         """Evict down to ``max_items * (1 - prune_fraction)`` once over the
         cap; returns the raw items whose mappings were dropped (the caller
@@ -217,16 +224,26 @@ class ServingSubstrate:
                  block_rows: int = 4096, head_slots: int = 0,
                  compact_after_blocks: int = 64,
                  compact_max_rows_per_pass: Optional[int] = None,
-                 reverse_map_items: int = 65536, seed: int = 0):
+                 reverse_map_items: int = 65536, seed: int = 0,
+                 _cube: Optional[ParameterCube] = None):
         self.tail_dim = tail_dim
         self.cube_cache_ratio = cube_cache_ratio
         self.head_slots = head_slots
         self.reverse_map_items = reverse_map_items
         self.query_cache = QueryCache(window_s=query_window_s)
         self.cube_cache = TwoTierLFUCache(0, 0)
-        self.cube = ParameterCube(n_servers=n_servers,
-                                  replication=replication,
-                                  block_rows=block_rows)
+        # ``_cube`` is the recovery path's injection point (a cube rebuilt
+        # from a snapshot replaces the fresh one) — :meth:`recover` is the
+        # public surface
+        self.cube = _cube if _cube is not None else ParameterCube(
+            n_servers=n_servers, replication=replication,
+            block_rows=block_rows)
+        # warm-up state (DESIGN.md §9): while True, CubeFetchStage floors
+        # every fetch at the stale-cache degradation tier and the quota
+        # controllers shed against the warm-up quota; cleared once delta
+        # replay reaches ``recovery_target``
+        self.recovering = False
+        self.recovery_target = -1
         self._rng = np.random.default_rng(seed)
         self._groups: dict[tuple[str, int], int] = {}
         self.bucket_items: dict[int, BoundedReverseMap] = {}
@@ -268,6 +285,115 @@ class ServingSubstrate:
                 for gid in self._groups.values()}
         return g
 
+    def _register_recovered_group(self, field_name: str, vocab: int,
+                                  gid: int):
+        """Everything :meth:`group_for` does EXCEPT loading the tail table
+        and drawing from the rng: the recovered cube already holds the
+        rows (base table + every applied delta), and re-drawing would both
+        clobber them and desync the rng stream. Groups must be re-
+        registered in their original (dense) id order."""
+        key = (field_name, int(vocab))
+        if self._groups.get(key) == gid:
+            return
+        if gid != len(self._groups):
+            raise ValueError(
+                f"recovered group {key} id {gid} out of order "
+                f"(expected {len(self._groups)})")
+        self._groups[key] = gid
+        mem, disk = capacity_from_ratio(int(vocab) * self.tail_dim,
+                                        self.cube_cache_ratio)
+        self.cube_cache.mem.capacity += mem
+        self.cube_cache.disk.capacity += disk
+        self.bucket_items[gid] = BoundedReverseMap(
+            max_items=self.reverse_map_items,
+            counts_fn=lambda b, g=gid: self._lfu_count(g, b))
+        if self.updates.head is not None:
+            cap = max(1, self.head_slots // len(self._groups))
+            self.updates.policies = {
+                g: PromoteDemotePolicy(capacity=cap)
+                for g in self._groups.values()}
+
+    @classmethod
+    def recover(cls, snapshot_dir: str, update_dir: Optional[str] = None,
+                replay: bool = True, **kw) -> "ServingSubstrate":
+        """Restart path (DESIGN.md §9): newest valid snapshot → cube
+        rebuild → delta-log replay from ``snapshot_version + 1``. The
+        returned substrate serves immediately — ``recovering`` stays True
+        (degraded tiers + warm-up quota) until the delta cursor reaches
+        the log head observed at recovery time.
+
+        ``replay=True`` replays the pending suffix inline (bounded RTO:
+        the caller knows the cube is caught up on return); ``replay=False``
+        leaves the suffix to a ``SubstrateDeltaWatcher`` resumed at the
+        snapshot cursor — the service serves degraded while replay streams
+        in the background. Caches start cold; persisted reverse maps (aux
+        state) make warm-start invalidation exact when available.
+
+        Raises FileNotFoundError when no valid snapshot exists — cold
+        boot is the caller's fallback, not an implicit default."""
+        from repro.update.delta import list_deltas
+        from repro.update.snapshot import (latest_valid_snapshot,
+                                           load_aux_state,
+                                           load_cube_snapshot)
+        path = latest_valid_snapshot(snapshot_dir)
+        if path is None:
+            raise FileNotFoundError(
+                f"no valid snapshot under {snapshot_dir}")
+        cube, meta = load_cube_snapshot(path)
+        kw.setdefault("tail_dim", int(meta.get("extra", {})
+                                      .get("tail_dim", 4)))
+        sub = cls(_cube=cube, **kw)
+        for f, v, g in sorted(meta["groups"], key=lambda t: t[2]):
+            sub._register_recovered_group(f, int(v), int(g))
+        delta_ver = int(meta["delta_version"])
+        aux = load_aux_state(path)
+        if aux is not None:
+            sub.updates.restore_state(delta_ver, aux["touched"],
+                                      aux["touched_floor"])
+            for g, buckets in aux["reverse_maps"].items():
+                rmap = sub.bucket_items.get(g)
+                if rmap is not None:
+                    for b, items in buckets.items():
+                        for item in items:
+                            rmap.add(b, item)
+        else:
+            sub.updates.restore_state(delta_ver)
+        sub.recovering = True
+        sub.recovery_target = delta_ver
+        if update_dir is not None:
+            pending = list_deltas(update_dir, after_version=delta_ver)
+            if pending:
+                sub.recovery_target = pending[-1][0]
+            if replay:
+                sub.replay_update_log(update_dir)
+        if sub.updates.stats.last_version >= sub.recovery_target:
+            sub.finish_recovery()
+        return sub
+
+    def replay_update_log(self, update_dir: str) -> int:
+        """Apply every published delta past the current cursor, strictly
+        in version order (the recovery replay — same ``read_delta`` /
+        ``apply`` path as live tailing, same idempotence under re-offer).
+        Clears ``recovering`` once the cursor reaches the recovery target.
+        Returns the number of deltas applied."""
+        from repro.update.delta import list_deltas, read_delta, verify_delta
+        n = 0
+        for _ver, path in list_deltas(
+                update_dir,
+                after_version=self.updates.stats.last_version):
+            verify_delta(path)
+            self.updates.apply(read_delta(path))
+            n += 1
+        if (self.recovering
+                and self.updates.stats.last_version
+                >= self.recovery_target):
+            self.finish_recovery()
+        return n
+
+    def finish_recovery(self):
+        """Replay caught up: leave warm-up mode (full tiers, full quota)."""
+        self.recovering = False
+
     @property
     def groups(self) -> dict[tuple[str, int], int]:
         return dict(self._groups)
@@ -287,15 +413,33 @@ class ServingSubstrate:
 class SubstrateDeltaWatcher(DeltaWatcher):
     """The live-update stage of a substrate: tail the delta log, apply
     through the shared UpdateManager, then run the off-hot-path
-    maintenance a fresh batch warrants — overlay compaction and the
-    per-group promote/demote pass."""
+    maintenance a fresh batch warrants — overlay compaction, the
+    per-group promote/demote pass, and (when a ``snapshotter`` is wired)
+    the periodic durable snapshot.
 
-    def __init__(self, substrate: ServingSubstrate, update_dir: str, **kw):
-        # the substrate is its delta log's only consumer → prune applied
-        # deltas so the log directory (and each poll's scan) stays bounded
-        kw.setdefault("prune_applied", True)
+    With a snapshotter, ``prune_applied`` is forced OFF: recovery must
+    find the delta suffix past the newest snapshot on disk, so retention
+    moves to the snapshotter's GC (which floors pruning on this watcher's
+    cursor). The cursor starts at the substrate's delta cursor — on a
+    recovered substrate the watcher resumes exactly where replay left
+    off."""
+
+    def __init__(self, substrate: ServingSubstrate, update_dir: str,
+                 snapshotter=None, **kw):
+        if snapshotter is not None:
+            kw["prune_applied"] = False
+        else:
+            # the substrate is its delta log's only consumer → prune
+            # applied deltas so the log directory (and each poll's scan)
+            # stays bounded
+            kw.setdefault("prune_applied", True)
+        kw.setdefault("start_after_version",
+                      substrate.updates.stats.last_version)
         super().__init__(update_dir, substrate.updates.apply, **kw)
         self._sub = substrate
+        self.snapshotter = snapshotter
+        if snapshotter is not None:
+            snapshotter.register_watcher(self)
 
     def check_once(self) -> bool:
         applied = super().check_once()
@@ -303,6 +447,12 @@ class SubstrateDeltaWatcher(DeltaWatcher):
             self._sub.updates.maybe_compact()
             if self._sub.updates.head is not None:
                 self._sub.updates.rebalance_all()
+            if self.snapshotter is not None:
+                self.snapshotter.maybe_snapshot()
+        if (self._sub.recovering
+                and self._sub.updates.stats.last_version
+                >= self._sub.recovery_target):
+            self._sub.finish_recovery()
         return applied
 
 
@@ -535,10 +685,14 @@ class PipelineBuilder:
         if spec.cube_fetch:
             stages.append(CubeFetchStage(rt))
         if spec.shed:
+            # warmup_fn ties the controller to the substrate's recovery
+            # state: while replay catches up, admission is clamped to the
+            # warm-up quota (serve degraded, not saturated)
             rt.shedder = shedder or OnlineShedder(
                 self.shed_dnn(seed=spec.seed), downstream=terminal_name,
-                controller=QuotaController(terminal_name,
-                                           depth_capacity=64.0))
+                controller=QuotaController(
+                    terminal_name, depth_capacity=64.0,
+                    warmup_fn=lambda: self.substrate.recovering))
             stages.append(ShedStage(rt.shedder))
         stages.append(terminal)
         names = [prefix + st.name for st in stages]

@@ -422,6 +422,14 @@ class CubeFetchStage(Stage):
                 for i, (out, k) in enumerate(zip(rows_all, keys)):
                     out[fname] = np.asarray(by_key[k], np.float32)
                     worst[i] = max(worst[i], tier_by_key[k])
+            # recovery warm-up (DESIGN.md §9): while the substrate is
+            # replaying its delta log, every row it serves may predate the
+            # log head — honest answers, stale attribution. Floor the tier
+            # at TIER_STALE_CACHE so responses declare it (the service
+            # serves degraded rather than failing), without masking a
+            # ladder rung that is already worse.
+            if getattr(sub, "recovering", False):
+                worst = [max(t, TIER_STALE_CACHE) for t in worst]
             for ev, out, tier in zip(batch, rows_all, worst):
                 ev.payload["cube_rows_all"] = out
                 if primary is not None:

@@ -30,6 +30,7 @@ and retried after backoff, preserving version order — never half-applied.
 from __future__ import annotations
 
 import hashlib
+import json
 import logging
 import os
 import shutil
@@ -38,6 +39,7 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
+from repro.faults.crash import crash_point
 from repro.serve.hotload import PollWatcher
 
 log = logging.getLogger(__name__)
@@ -132,8 +134,10 @@ def write_delta(log_dir: str, batch: DeltaBatch) -> str:
         fn = f"group_{g.group}.npz"
         np.savez(os.path.join(path, fn), **kw)
         sums.append(f"{_sha256(os.path.join(path, fn))}  {fn}")
+    crash_point("delta.pre_manifest")
     with open(os.path.join(path, _CHECKSUMS), "w") as f:
         f.write("\n".join(sums) + "\n")
+    crash_point("delta.pre_done")
     with open(os.path.join(path, "DONE"), "w"):
         pass
     return path
@@ -251,6 +255,89 @@ class DeltaEmitter:
         write_delta(self.log_dir, batch)
         self.next_version += 1
         return batch
+
+
+class CheckpointDiffEmitter:
+    """Training-side bridge from whole checkpoints to the delta log
+    (ROADMAP item 5's emitter — until now only tests and benches emitted
+    deltas): row-diff the embedding tables of two ``train/checkpoint.py``
+    checkpoints into ONE ``DeltaBatch`` — upserts for changed and new
+    rows, tombstones for ids the new table dropped — and publish it via
+    :class:`DeltaEmitter`.
+
+    ``table_groups`` maps checkpoint leaf names (``tree_paths`` form, e.g.
+    ``"params/embed/table"``) to cube group ids. Row index IS the raw id —
+    the same convention ``ServingSubstrate`` loads tables under — so a
+    grown table contributes ``[len(old), len(new))`` as new ids and a
+    shrunk one tombstones ``[len(new), len(old))``. Leaves are read
+    straight from the manifest (DONE-gated), never through the jax restore
+    path: the emitter runs beside training and only needs host arrays."""
+
+    def __init__(self, log_dir: str, table_groups: dict,
+                 start_version: Optional[int] = None):
+        self.emitter = DeltaEmitter(log_dir, start_version=start_version)
+        self.table_groups = dict(table_groups)
+
+    def _load_tables(self, ckpt_path: str) -> dict:
+        if not os.path.exists(os.path.join(ckpt_path, "DONE")):
+            raise FileNotFoundError(
+                f"checkpoint {ckpt_path} incomplete (no DONE)")
+        with open(os.path.join(ckpt_path, "manifest.json")) as f:
+            manifest = json.load(f)
+        want = set(self.table_groups)
+        out = {}
+        for rec in manifest["leaves"]:
+            if rec["name"] in want:
+                out[rec["name"]] = np.load(
+                    os.path.join(ckpt_path, rec["file"]))
+        missing = sorted(want - set(out))
+        if missing:
+            raise KeyError(
+                f"checkpoint {ckpt_path} has no leaves {missing} "
+                f"(available: {[r['name'] for r in manifest['leaves']]})")
+        return out
+
+    def diff(self, old_path: Optional[str],
+             new_path: str) -> List[GroupDelta]:
+        """GroupDeltas turning ``old_path``'s tables into ``new_path``'s.
+        ``old_path=None`` is the bootstrap diff: every row an upsert.
+        Tables with no changed rows produce no GroupDelta."""
+        new = self._load_tables(new_path)
+        old = self._load_tables(old_path) if old_path is not None else {}
+        groups = []
+        for name in sorted(self.table_groups, key=self.table_groups.get):
+            gid = self.table_groups[name]
+            b = np.asarray(new[name])
+            if b.ndim != 2:
+                raise ValueError(f"{name}: embedding table must be 2-D, "
+                                 f"got shape {b.shape}")
+            a = np.asarray(old[name]) if name in old else None
+            if a is None:
+                ids = np.arange(b.shape[0], dtype=np.int64)
+                dels = np.empty(0, np.int64)
+            else:
+                n = min(a.shape[0], b.shape[0])
+                changed = (np.flatnonzero((a[:n] != b[:n]).any(axis=1))
+                           if n else np.empty(0, np.int64))
+                grown = np.arange(n, b.shape[0], dtype=np.int64)
+                ids = np.concatenate([changed.astype(np.int64), grown])
+                dels = np.arange(b.shape[0], a.shape[0], dtype=np.int64)
+            if ids.size or dels.size:
+                rows = (b[ids] if ids.size
+                        else np.empty((0, b.shape[1]), b.dtype))
+                groups.append(GroupDelta(group=gid, ids=ids, rows=rows,
+                                         delete_ids=dels))
+        return groups
+
+    def emit_diff(self, old_path: Optional[str],
+                  new_path: str) -> Optional[DeltaBatch]:
+        """Diff and publish. Returns the emitted batch, or None when the
+        checkpoints' tables are identical (no version burned — an empty
+        delta would still cost every watcher a verify+apply cycle)."""
+        groups = self.diff(old_path, new_path)
+        if not groups:
+            return None
+        return self.emitter.emit(groups)
 
 
 class DeltaWatcher(PollWatcher):

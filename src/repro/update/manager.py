@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import threading
 from collections import deque
+from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Callable, Optional
 
@@ -247,6 +248,46 @@ class UpdateManager:
             self.stats.deltas_applied += 1
             self.stats.last_version = batch.version
             return batch.version
+
+    @contextmanager
+    def pinned_capture(self):
+        """Atomic capture for the snapshotter (DESIGN.md §9): under the
+        apply lock — so no delta batch is mid-flight — pin the cube and
+        read the delta cursor + touched-key log, then RELEASE the lock and
+        yield. Serialization happens outside the lock under the pin: the
+        pin keeps every captured block and versioned server index alive
+        against reclaim/compaction while appliers keep publishing.
+
+        Yields ``(pinned_version, (last_version, touched_log,
+        touched_floor))``. The lock is plain (non-reentrant); nothing
+        inside the critical section may call back into the manager."""
+        from repro.core.cube import PinnedVersion
+        with self._lock:
+            snap = self.cube._pin_current()
+            state = (self.stats.last_version, list(self._touched_log),
+                     self._touched_floor)
+        try:
+            yield PinnedVersion(snap), state
+        finally:
+            self.cube._pin_release(snap[0])
+
+    def restore_state(self, last_version: int, touched_log=None,
+                      touched_floor: Optional[int] = None):
+        """Recovery-side inverse of ``pinned_capture``: position the delta
+        cursor (replay resumes at ``last_version + 1``; older versions hit
+        the idempotence skip) and rehydrate the touched-key log. With no
+        persisted aux state the floor snaps to ``last_version`` so
+        ``touched_since`` answers None — conservative invalidation —
+        instead of a falsely-empty span for pre-snapshot versions."""
+        with self._lock:
+            self.stats.last_version = int(last_version)
+            self._touched_log.clear()
+            if touched_log:
+                self._touched_log.extend(
+                    (int(v), frozenset(ks), frozenset(its))
+                    for v, ks, its in touched_log)
+            self._touched_floor = int(
+                last_version if touched_floor is None else touched_floor)
 
     def touched_since(self, version: int):
         """(cube_keys, item_keys) touched by deltas published at versions >

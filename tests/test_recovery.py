@@ -1,0 +1,408 @@
+"""Crash-safe restart (DESIGN.md §9): durable cube snapshots, torn-state
+detection, delta-log replay, retention/GC, checkpoint-diff emission and
+the graceful-shutdown fast path."""
+import json
+import os
+import signal
+import types
+
+import numpy as np
+import pytest
+
+from repro.core.cube import TIER_DEFAULT, TIER_PRIMARY, ParameterCube
+from repro.faults import SimulatedCrash, arm, disarm_all
+from repro.serve.scenario import ServingSubstrate, SubstrateDeltaWatcher
+from repro.update import (CheckpointDiffEmitter, CubeSnapshotter,
+                          DeltaEmitter, GroupDelta, SnapshotIntegrityError,
+                          latest_valid_snapshot, list_deltas, list_snapshots,
+                          load_aux_state, load_cube_snapshot,
+                          verify_snapshot)
+
+GROUPS = [("item_id", 200), ("cat", 100)]
+TAIL_DIM = 4
+NODE_KW = dict(cube_cache_ratio=0.05, tail_dim=TAIL_DIM, n_servers=4,
+               replication=2, block_rows=64, compact_after_blocks=2,
+               seed=3)
+
+
+@pytest.fixture(autouse=True)
+def _disarm_crash_points():
+    yield
+    disarm_all()
+
+
+def build_node() -> ServingSubstrate:
+    sub = ServingSubstrate(**NODE_KW)
+    for name, vocab in GROUPS:
+        sub.group_for(name, vocab)
+    return sub
+
+
+def make_groups(rng, upserts=48, deletes=4):
+    out = []
+    for gid, (_name, vocab) in enumerate(GROUPS):
+        out.append(GroupDelta(
+            group=gid, ids=rng.choice(vocab, upserts, replace=False),
+            rows=rng.standard_normal((upserts, TAIL_DIM)).astype(np.float32),
+            delete_ids=rng.choice(vocab, deletes, replace=False)))
+    return out
+
+
+def cube_state(cube) -> list:
+    """All-id (rows, tiers) per group — the bit-identity comparison key."""
+    out = []
+    for gid, (_name, vocab) in enumerate(GROUPS):
+        rows, tiers = cube.lookup_ex(gid, np.arange(vocab))
+        out.append((rows, tiers))
+    return out
+
+
+def assert_cubes_equal(x, y):
+    for (rx, tx), (ry, ty) in zip(cube_state(x), cube_state(y)):
+        np.testing.assert_array_equal(rx, ry)
+        # tiers must match except the one compaction-timing-dependent
+        # label: a deleted id is an authoritative zero-row tombstone
+        # (tier 0) until compaction folds it away, then an absent
+        # signature (TIER_DEFAULT) — same zero row either way
+        diff = tx != ty
+        if diff.any():
+            zeros = ~rx[diff].any(axis=1)
+            deleted_pair = (np.isin(tx[diff], (TIER_PRIMARY, TIER_DEFAULT))
+                            & np.isin(ty[diff],
+                                      (TIER_PRIMARY, TIER_DEFAULT)))
+            assert (zeros & deleted_pair).all(), \
+                f"tier mismatch beyond tombstone labeling: " \
+                f"{tx[diff]} vs {ty[diff]}"
+
+
+def stream(emitter, watcher, rng, n):
+    for _ in range(n):
+        emitter.emit(make_groups(rng))
+        watcher.check_once()
+
+
+# ------------------------------------------------------------- roundtrip
+
+def test_snapshot_roundtrip_bit_identical(tmp_path, rng):
+    sub = build_node()
+    log, sd = str(tmp_path / "log"), str(tmp_path / "snaps")
+    snap = CubeSnapshotter(sub, sd, every_deltas=100, delta_log_dir=log)
+    w = SubstrateDeltaWatcher(sub, log, snapshotter=snap)
+    stream(DeltaEmitter(log), w, rng, 5)
+    sub.cube.compact()                        # folded overlays must survive
+    path = snap.snapshot(force=True)
+    assert path is not None and verify_snapshot(path)
+
+    cube, meta = load_cube_snapshot(path)
+    assert meta["delta_version"] == 4
+    assert sorted(tuple(g) for g in meta["groups"]) == \
+        sorted((f, v, g) for (f, v), g in sub.groups.items())
+    assert_cubes_equal(cube, sub.cube)
+    # aux state rode along: reverse maps + touched log for warm start
+    aux = load_aux_state(path)
+    assert aux is not None and aux["touched_floor"] >= -1
+
+
+def test_snapshot_same_cursor_is_noop_unless_forced(tmp_path, rng):
+    sub = build_node()
+    sd = str(tmp_path / "snaps")
+    snap = CubeSnapshotter(sub, sd, every_deltas=1)
+    assert snap.snapshot() is None            # no deltas yet: cursor -1
+    assert snap.snapshot(force=True) is not None
+    assert snap.snapshot() is None            # cursor unchanged → no-op
+    assert snap.snapshots_taken == 1
+
+
+# ------------------------------------------------------------ torn states
+
+def _two_snapshots(tmp_path, rng):
+    sub = build_node()
+    log, sd = str(tmp_path / "log"), str(tmp_path / "snaps")
+    snap = CubeSnapshotter(sub, sd, every_deltas=100, keep=5,
+                           delta_log_dir=log)
+    w = SubstrateDeltaWatcher(sub, log, snapshotter=snap)
+    em = DeltaEmitter(log)
+    stream(em, w, rng, 3)
+    p1 = snap.snapshot(force=True)            # snap at cursor 2
+    stream(em, w, rng, 3)
+    p2 = snap.snapshot(force=True)            # snap at cursor 5
+    return sub, log, sd, p1, p2
+
+
+def test_missing_done_falls_back_to_previous(tmp_path, rng):
+    _sub, _log, sd, p1, p2 = _two_snapshots(tmp_path, rng)
+    os.remove(os.path.join(p2, "DONE"))
+    with pytest.raises(SnapshotIntegrityError, match="unpublished"):
+        verify_snapshot(p2)
+    assert latest_valid_snapshot(sd) == p1
+
+
+def test_corrupt_content_falls_back_to_previous(tmp_path, rng):
+    _sub, _log, sd, p1, p2 = _two_snapshots(tmp_path, rng)
+    with open(os.path.join(p2, "primary.npz"), "r+b") as f:
+        f.seek(100)
+        b = f.read(1)
+        f.seek(100)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(SnapshotIntegrityError, match="sha256 mismatch"):
+        verify_snapshot(p2)
+    assert latest_valid_snapshot(sd) == p1
+
+
+def test_corrupt_checksums_manifest_falls_back(tmp_path, rng):
+    _sub, _log, sd, p1, p2 = _two_snapshots(tmp_path, rng)
+    manifest = os.path.join(p2, "CHECKSUMS")
+    lines = open(manifest).read().splitlines()
+    lines[0] = "0" * 64 + lines[0][64:]       # clobber the first digest
+    with open(manifest, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    with pytest.raises(SnapshotIntegrityError):
+        verify_snapshot(p2)
+    assert latest_valid_snapshot(sd) == p1
+
+
+def test_unmanifested_file_rejected(tmp_path, rng):
+    _sub, _log, sd, p1, p2 = _two_snapshots(tmp_path, rng)
+    with open(os.path.join(p2, "server_99.npz"), "w") as f:
+        f.write("stray")
+    with pytest.raises(SnapshotIntegrityError, match="not in"):
+        verify_snapshot(p2)
+    assert latest_valid_snapshot(sd) == p1
+
+
+def test_crash_between_publish_and_aux_degrades_to_cold(tmp_path, rng):
+    """A crash after DONE but before aux publish leaves a VALID snapshot
+    whose caches merely start cold — recovery must use it, not skip it."""
+    sub = build_node()
+    log, sd = str(tmp_path / "log"), str(tmp_path / "snaps")
+    snap = CubeSnapshotter(sub, sd, every_deltas=100, delta_log_dir=log)
+    w = SubstrateDeltaWatcher(sub, log, snapshotter=snap)
+    stream(DeltaEmitter(log), w, rng, 4)
+    arm("snapshot.pre_aux")
+    with pytest.raises(SimulatedCrash):
+        snap.snapshot(force=True)
+    disarm_all()
+    path = latest_valid_snapshot(sd)
+    assert path is not None and verify_snapshot(path)
+    assert load_aux_state(path) is None       # aux torn → cold caches
+
+    rec = ServingSubstrate.recover(sd, update_dir=log, **NODE_KW)
+    assert not rec.recovering                 # nothing left to replay
+    assert rec.updates.stats.last_version == 3
+    assert_cubes_equal(rec.cube, sub.cube)
+
+
+def test_torn_snapshot_write_unpublishes_previous_attempt(tmp_path, rng):
+    """A crashed snapshot rewrite at the same version must never leave the
+    OLD markers over NEW partial files — the dir reads as unpublished."""
+    sub = build_node()
+    sd = str(tmp_path / "snaps")
+    snap = CubeSnapshotter(sub, sd, every_deltas=100)
+    stream(DeltaEmitter(str(tmp_path / "log")),
+           SubstrateDeltaWatcher(sub, str(tmp_path / "log"),
+                                 snapshotter=snap), rng, 2)
+    p = snap.snapshot(force=True)
+    arm("snapshot.pre_manifest")
+    with pytest.raises(SimulatedCrash):
+        snap.snapshot(force=True)             # same-cursor rewrite crashes
+    disarm_all()
+    assert not os.path.exists(os.path.join(p, "DONE"))
+    assert latest_valid_snapshot(sd) is None
+
+
+# --------------------------------------------------------------- recovery
+
+def test_recover_while_deltas_arriving(tmp_path, rng):
+    """Restart with a pending suffix: boot degraded from the snapshot,
+    stream the late deltas through a resumed watcher, converge bit-
+    identical with a never-crashed twin."""
+    a, b = build_node(), build_node()
+    log, sd = str(tmp_path / "log"), str(tmp_path / "snaps")
+    snap = CubeSnapshotter(a, sd, every_deltas=100, delta_log_dir=log)
+    wa = SubstrateDeltaWatcher(a, log, snapshotter=snap)
+    wb = snap.register_watcher(
+        SubstrateDeltaWatcher(b, log, prune_applied=False))
+    em = DeltaEmitter(log)
+    for _ in range(4):
+        em.emit(make_groups(rng))
+        wa.check_once()
+        wb.check_once()
+    snap.snapshot(force=True)                 # durable at cursor 3
+    for _ in range(3):                        # the suffix "a" never applied
+        em.emit(make_groups(rng))
+        wb.check_once()
+    del a, wa                                 # the crash
+
+    c = ServingSubstrate.recover(sd, update_dir=log, replay=False,
+                                 **NODE_KW)
+    assert c.recovering and c.recovery_target == 6
+    assert c.updates.stats.last_version == 3  # booted at the snapshot
+    wc = SubstrateDeltaWatcher(c, log, prune_applied=False)
+    assert wc.applied_version == 3            # watcher resumes at cursor
+    wc.check_once()                           # late deltas stream in
+    assert not c.recovering
+    assert c.updates.stats.last_version == 6
+    assert_cubes_equal(c.cube, b.cube)
+
+
+def test_recover_replays_inline_and_restores_reverse_maps(tmp_path, rng):
+    sub = build_node()
+    log, sd = str(tmp_path / "log"), str(tmp_path / "snaps")
+    snap = CubeSnapshotter(sub, sd, every_deltas=100, delta_log_dir=log)
+    w = SubstrateDeltaWatcher(sub, log, snapshotter=snap)
+    em = DeltaEmitter(log)
+    stream(em, w, rng, 3)
+    sub.bucket_items[0].add(7, 70)            # warm reverse-map state
+    sub.bucket_items[1].add(9, 90)
+    snap.snapshot(force=True)
+    stream(em, w, rng, 2)                     # pending suffix
+
+    rec = ServingSubstrate.recover(sd, update_dir=log, replay=True,
+                                   **NODE_KW)
+    assert not rec.recovering                 # inline replay caught up
+    assert rec.updates.stats.last_version == 4
+    assert_cubes_equal(rec.cube, sub.cube)
+    assert 70 in rec.bucket_items[0].items_for([7])
+    assert 90 in rec.bucket_items[1].items_for([9])
+
+
+def test_recover_without_snapshot_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ServingSubstrate.recover(str(tmp_path / "none"), **NODE_KW)
+
+
+# ---------------------------------------------------------- retention / GC
+
+def test_retention_keeps_k_and_gcs_delta_log(tmp_path, rng):
+    sub = build_node()
+    log, sd = str(tmp_path / "log"), str(tmp_path / "snaps")
+    snap = CubeSnapshotter(sub, sd, every_deltas=1, keep=2,
+                           delta_log_dir=log)
+    w = SubstrateDeltaWatcher(sub, log, snapshotter=snap)
+    stream(DeltaEmitter(log), w, rng, 4)      # snapshot after every delta
+    vers = [v for v, _p, pub in list_snapshots(sd) if pub]
+    assert vers == [2, 3]                     # keep=2 newest
+    # deltas ≤ oldest retained snapshot (v2) are baked in → pruned;
+    # the watcher cursor (3) does not hold anything back here
+    assert [v for v, _ in list_deltas(log)] == [3]
+    assert snap.deltas_pruned == 3
+
+
+def test_delta_gc_never_outruns_registered_watcher(tmp_path, rng):
+    sub = build_node()
+    log, sd = str(tmp_path / "log"), str(tmp_path / "snaps")
+    snap = CubeSnapshotter(sub, sd, every_deltas=1, keep=2,
+                           delta_log_dir=log)
+    w = SubstrateDeltaWatcher(sub, log, snapshotter=snap)
+    laggard = types.SimpleNamespace(applied_version=0,
+                                    stop=lambda: None)
+    snap.register_watcher(laggard)            # a replica still at cursor 0
+    stream(DeltaEmitter(log), w, rng, 4)
+    # snapshots still rotate, but the delta floor is the laggard's cursor
+    assert [v for v, _p, pub in list_snapshots(sd) if pub] == [2, 3]
+    assert [v for v, _ in list_deltas(log)] == [1, 2, 3]
+
+
+# ------------------------------------------------------ graceful shutdown
+
+def test_graceful_shutdown_zero_replay(tmp_path, rng):
+    sub = build_node()
+    log, sd = str(tmp_path / "log"), str(tmp_path / "snaps")
+    snap = CubeSnapshotter(sub, sd, every_deltas=100, delta_log_dir=log)
+    w = SubstrateDeltaWatcher(sub, log, snapshotter=snap)
+    stream(DeltaEmitter(log), w, rng, 5)
+    path = snap.graceful_shutdown()           # quiesce + final snapshot
+    assert path is not None
+    with open(os.path.join(path, "meta.json")) as f:
+        assert json.load(f)["delta_version"] == 4
+
+    rec = ServingSubstrate.recover(sd, update_dir=log, **NODE_KW)
+    assert not rec.recovering                 # zero deltas replayed
+    assert rec.updates.stats.last_version == 4
+    assert_cubes_equal(rec.cube, sub.cube)
+
+
+def test_sigterm_hook_takes_final_snapshot(tmp_path, rng):
+    sub = build_node()
+    log, sd = str(tmp_path / "log"), str(tmp_path / "snaps")
+    snap = CubeSnapshotter(sub, sd, every_deltas=100, delta_log_dir=log)
+    w = SubstrateDeltaWatcher(sub, log, snapshotter=snap)
+    stream(DeltaEmitter(log), w, rng, 3)
+    prev = signal.getsignal(signal.SIGTERM)
+    try:
+        handler = snap.install_sigterm_hook(chain=False)
+        assert signal.getsignal(signal.SIGTERM) is handler
+        handler(signal.SIGTERM, None)         # the preemption notice
+    finally:
+        signal.signal(signal.SIGTERM, prev)
+    assert latest_valid_snapshot(sd) is not None
+    assert snap.last_snapshot_version == 2
+
+
+# ----------------------------------------------------- checkpoint diffing
+
+def _save_ckpt(path, table, extra=0.0):
+    from repro.train import checkpoint
+    tree = {"embed": {"table": table},
+            "dense": {"w": np.full((3, 3), extra, np.float32)}}
+    checkpoint.save(str(path), tree, step=0)
+    return str(path)
+
+
+def test_checkpoint_diff_emitter_rows(tmp_path, rng):
+    t1 = rng.standard_normal((10, TAIL_DIM)).astype(np.float32)
+    t2 = t1.copy()
+    t2[3] += 1.0                              # changed row
+    t2 = np.vstack([t2, rng.standard_normal((2, TAIL_DIM))
+                    .astype(np.float32)])     # grown rows 10, 11
+    c1 = _save_ckpt(tmp_path / "c1", t1)
+    c2 = _save_ckpt(tmp_path / "c2", t2, extra=5.0)  # non-table leaf noise
+    em = CheckpointDiffEmitter(str(tmp_path / "log"), {"embed/table": 0})
+
+    groups = em.diff(c1, c2)
+    assert len(groups) == 1 and groups[0].group == 0
+    np.testing.assert_array_equal(groups[0].ids, [3, 10, 11])
+    np.testing.assert_array_equal(groups[0].rows, t2[[3, 10, 11]])
+    assert groups[0].delete_ids.size == 0
+
+    shrunk = em.diff(c2, c1)                  # rows 10, 11 dropped
+    np.testing.assert_array_equal(shrunk[0].ids, [3])
+    np.testing.assert_array_equal(shrunk[0].delete_ids, [10, 11])
+
+    boot = em.diff(None, c1)                  # bootstrap: all upserts
+    np.testing.assert_array_equal(boot[0].ids, np.arange(10))
+
+    assert em.emit_diff(c1, c1) is None       # identical → no version burned
+    batch = em.emit_diff(c1, c2)
+    assert batch is not None and batch.version == 0
+
+    cube = ParameterCube(n_servers=2, replication=1, block_rows=32)
+    cube.load_table(0, t1)
+    for g in batch.groups:
+        cube.apply_delta(0, g.ids, g.rows, delete_ids=g.delete_ids)
+    np.testing.assert_array_equal(cube.lookup(0, np.arange(12)), t2)
+
+
+def test_checkpoint_diff_emitter_missing_leaf(tmp_path, rng):
+    c1 = _save_ckpt(tmp_path / "c1",
+                    rng.standard_normal((4, TAIL_DIM)).astype(np.float32))
+    em = CheckpointDiffEmitter(str(tmp_path / "log"), {"nope/table": 0})
+    with pytest.raises(KeyError, match="nope/table"):
+        em.diff(None, c1)
+
+
+# ------------------------------------------------------------ warm-up knobs
+
+def test_quota_controller_warmup_clamp():
+    from repro.core.irm.shedding import QuotaController
+    flag = {"on": True}
+    qc = QuotaController("t", warmup_fn=lambda: flag["on"],
+                         warmup_quota=0.25)
+    ctx = object()                            # no queues → raw quota 1.0
+    for _ in range(10):
+        assert qc.observe(ctx) <= 0.25        # clamped during warm-up
+    flag["on"] = False
+    q = 0.0
+    for _ in range(30):
+        q = qc.observe(ctx)
+    assert q > 0.25                           # clamp lifts with the flag
