@@ -1,0 +1,119 @@
+"""Metrics-snapshot regression differ (DESIGN.md §10.5).
+
+Diffs the deterministic registry snapshot that ``obs_bench.py`` writes
+(``artifacts/bench/metrics_snapshot.json``) against the committed baseline
+(``benchmarks/baselines/metrics_snapshot.json``) and exits nonzero when
+any latency histogram's p99 regressed by more than ``--threshold``
+(default 20%). Because the snapshot cell runs on the virtual clock with a
+seeded workload, any drift at all is a code-behavior change — scalar
+drifts (counters, stage stats) are printed as a diff table but only p99
+regressions and vanished series fail the gate.
+
+After an INTENTIONAL serving-loop change, refresh the baseline:
+
+    PYTHONPATH=src python benchmarks/obs_bench.py --smoke
+    PYTHONPATH=src python benchmarks/compare_metrics.py --write-baseline
+
+Usage (CI):
+    PYTHONPATH=src python benchmarks/compare_metrics.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+CURRENT = os.path.join("artifacts", "bench", "metrics_snapshot.json")
+BASELINE = os.path.join("benchmarks", "baselines", "metrics_snapshot.json")
+
+
+def _is_histogram(v) -> bool:
+    return isinstance(v, dict) and "p99" in v
+
+
+def compare(base: dict, cur: dict, threshold: float) -> tuple[list, list]:
+    """Returns (failures, drifts): failures break the gate, drifts are
+    informational scalar/percentile changes."""
+    failures, drifts = [], []
+    if base.get("config") != cur.get("config"):
+        failures.append(f"config mismatch: baseline {base.get('config')} "
+                        f"vs current {cur.get('config')} — snapshots are "
+                        f"not comparable")
+        return failures, drifts
+    bm, cm = base["metrics"], cur["metrics"]
+    for key, bv in sorted(bm.items()):
+        cv = cm.get(key)
+        if cv is None:
+            failures.append(f"series vanished: {key}")
+            continue
+        if _is_histogram(bv):
+            if not _is_histogram(cv):
+                failures.append(f"series changed type: {key}")
+                continue
+            b99, c99 = float(bv["p99"]), float(cv["p99"])
+            if b99 > 0 and c99 > b99 * (1 + threshold):
+                failures.append(
+                    f"p99 regression: {key} {b99 * 1e3:.3f}ms -> "
+                    f"{c99 * 1e3:.3f}ms ({c99 / b99:.2f}x, gate "
+                    f"<={1 + threshold:.2f}x)")
+            elif cv != bv:
+                drifts.append(f"{key}: p50 {bv['p50']:.6g}->{cv['p50']:.6g} "
+                              f"p99 {b99:.6g}->{c99:.6g} "
+                              f"count {bv['count']}->{cv['count']}")
+        elif cv != bv:
+            drifts.append(f"{key}: {bv} -> {cv}")
+    for key in sorted(set(cm) - set(bm)):
+        drifts.append(f"new series: {key}")
+    return failures, drifts
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default=CURRENT)
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="max tolerated relative p99 increase (0.20 = +20%%)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="promote the current snapshot to be the baseline")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.current):
+        print(f"no current snapshot at {args.current} — run "
+              f"benchmarks/obs_bench.py first", file=sys.stderr)
+        return 2
+    if args.write_baseline:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline updated: {args.current} -> {args.baseline}")
+        return 0
+    if not os.path.exists(args.baseline):
+        print(f"no committed baseline at {args.baseline} — bootstrap with "
+              f"--write-baseline", file=sys.stderr)
+        return 2
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.current) as f:
+        cur = json.load(f)
+    failures, drifts = compare(base, cur, args.threshold)
+
+    if drifts:
+        print(f"{len(drifts)} series drifted (informational):")
+        for d in drifts:
+            print(f"  {d}")
+    if failures:
+        print(f"METRICS REGRESSION ({len(failures)} failure(s)):")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    n = len(base["metrics"])
+    print(f"metrics snapshot OK: {n} baseline series, "
+          f"{len(drifts)} drifted, 0 regressions "
+          f"(p99 gate <={1 + args.threshold:.2f}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,326 @@
+"""Telemetry-plane benchmark (DESIGN.md §10) — three cells.
+
+CELL 1 — overhead gate. The closed-loop SEDP funnel (sedp_bench's
+ingress → recall → rerank → respond cell) runs on the REAL threaded
+AsyncExecutor under paced open-loop arrivals, twice per round: telemetry
+OFF (no tracer, no registry, exact latency list — the pre-§10 path) and
+telemetry ON (per-request span tracing into a TraceBuffer, the stage-stats
+/ queue-depth collectors registered, a StatsRecorder sampling the registry
+to disk every 50 ms, histogram-only latency accounting). Rounds are
+interleaved OFF/ON and the best p99 of each arm is compared so container
+noise drift cancels. Gate: p99 ON ≤ 1.10× p99 OFF (denominator floored —
+when both p99s are sub-millisecond the ratio measures scheduler jitter,
+not telemetry). The wall-clock executor is the only honest arena for this
+gate: on SimExecutor's virtual clock tracer overhead is invisible by
+construction.
+
+CELL 2 — deterministic metrics snapshot. The same funnel on SimExecutor
+(virtual clock, seeded workload, shedding OFF) with the registry bridged
+in; the resulting snapshot is bit-stable run-to-run (asserted by running
+the cell twice) and is written to artifacts/bench/metrics_snapshot.json —
+the file benchmarks/compare_metrics.py diffs against the committed
+baseline to catch silent serving-loop regressions.
+
+CELL 3 — chaos critical-path drill. A real InferenceService (JAX ranking
+model) is warmed, then its ENTIRE cube fleet is killed and the cube cache
+generation bumped; traced requests ride the degradation ladder
+(stale-cache / default-embedding tiers ≥ 2). The tail-sampled traces are
+exported as Chrome trace-event JSON and the drill then reconstructs —
+from the exported file ALONE — a degraded request's full stage path and
+its latency attribution, asserting the round-trip matches the in-memory
+trace (the ISSUE 9 acceptance drill).
+
+Usage:
+    PYTHONPATH=src python benchmarks/obs_bench.py            # full run
+    PYTHONPATH=src python benchmarks/obs_bench.py --smoke    # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+try:
+    from benchmarks.sedp_bench import build_funnel, make_workload
+except ImportError:                     # run directly as a script
+    from sedp_bench import build_funnel, make_workload
+from repro.core.executors import AsyncExecutor, SimExecutor
+from repro.core.service_model import service_time_model
+from repro.obs import bridge
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.recorder import StatsRecorder
+from repro.obs.trace import (TraceBuffer, Tracer, critical_path, span_topology,
+                             stage_path)
+
+P99_FLOOR_S = 1e-3          # below this, p99 differences are jitter
+OVERHEAD_MAX = 1.10         # acceptance: ON p99 ≤ 1.10× OFF p99
+RECORDER_INTERVAL_S = 0.05  # telemetry-ON arm samples the registry at 20 Hz
+
+
+# ---------------------------------------------------------- cell 1: overhead
+
+class _PacedArrivals:
+    """Open-loop pacing for AsyncExecutor.run (same discipline as
+    update_bench gate 2): the injector sleeps between events so the run
+    measures per-request service cost — including any telemetry tax — and
+    not the depth of a queue that all-at-once injection would build."""
+
+    def __init__(self, events, interval_s: float):
+        self.events = events
+        self.interval_s = interval_s
+
+    def __len__(self):
+        return len(self.events)
+
+    def __iter__(self):
+        for ev in self.events:
+            time.sleep(self.interval_s)
+            yield ev
+
+
+def _overhead_once(seed: int, n_events: int, arrival_interval_s: float,
+                   telemetry: bool) -> dict:
+    plan = build_funnel(None)       # shed OFF: both arms do identical work
+    events = [ev for _, ev in make_workload(n_events, 1.0, seed)]
+    recorder = None
+    tmp = None
+    if telemetry:
+        # exact latencies stay ON in both arms so the two p99s come from
+        # the same estimator — the gate measures runtime tax, not the
+        # histogram's conservative (bucket-upper-bound) accounting
+        registry = MetricsRegistry()
+        ex = AsyncExecutor(plan, tracer=Tracer())
+        bridge.register_executor(ex, name="bench", registry=registry)
+        tmp = tempfile.TemporaryDirectory(prefix="obs_bench_hist_")
+        recorder = StatsRecorder(tmp.name, registry,
+                                 interval_s=RECORDER_INTERVAL_S).start()
+    else:
+        ex = AsyncExecutor(plan)
+    try:
+        rep = ex.run(_PacedArrivals(events, arrival_interval_s))
+    finally:
+        if recorder is not None:
+            recorder.stop()
+            tmp.cleanup()
+    assert rep.completed == n_events
+    out = {
+        "telemetry": telemetry,
+        "completed": rep.completed,
+        "p50_ms": rep.latency_percentile(0.50) * 1e3,
+        "p99_ms": rep.latency_percentile(0.99) * 1e3,
+        "avg_ms": rep.avg_latency * 1e3,
+        "throughput_qps": rep.throughput,
+    }
+    if telemetry:
+        out["traces_retained"] = len(ex.tracer.buffer.traces())
+        out["traces_offered"] = ex.tracer.buffer.added
+        out["recorder_samples"] = recorder.samples_taken
+    return out
+
+
+def run_overhead_gate(seed: int = 0, n_events: int = 1000,
+                      arrival_interval_s: float = 0.0015,
+                      pairs: int = 3) -> dict:
+    """Interleaved OFF/ON rounds; compare best p99 of each arm."""
+    off_runs, on_runs = [], []
+    for k in range(pairs):
+        off_runs.append(_overhead_once(seed + 10 * k, n_events,
+                                       arrival_interval_s, False))
+        on_runs.append(_overhead_once(seed + 10 * k, n_events,
+                                      arrival_interval_s, True))
+    p99_off = min(r["p99_ms"] for r in off_runs)
+    p99_on = min(r["p99_ms"] for r in on_runs)
+    ratio = p99_on / max(p99_off, P99_FLOOR_S * 1e3)
+    return {
+        "off_runs": off_runs, "on_runs": on_runs,
+        "p99_off_ms": p99_off, "p99_on_ms": p99_on,
+        "p99_ratio": ratio,
+        "traces_per_run": on_runs[0]["traces_offered"],
+        "ok": ratio <= OVERHEAD_MAX,
+    }
+
+
+# -------------------------------------------------- cell 2: metrics snapshot
+
+SNAPSHOT_PATH = os.path.join("artifacts", "bench", "metrics_snapshot.json")
+
+
+def run_metrics_snapshot(seed: int = 0, n_events: int = 800) -> dict:
+    """One deterministic serving cell → flat registry snapshot. Virtual
+    clock + seeded workload + shedding OFF: every number in the snapshot
+    is a pure function of (seed, n_events), so compare_metrics.py can diff
+    it against a committed baseline without a noise model."""
+    plan = build_funnel(None)
+    registry = MetricsRegistry()
+    ex = SimExecutor(plan, service_time=service_time_model)
+    bridge.register_executor(ex, name="sim", registry=registry)
+    rep = ex.run(make_workload(n_events, 1.0, seed))
+    registry.histogram("request_latency_s",
+                       "end-to-end request latency").observe_many(
+        rep.latencies)
+    registry.counter("requests_offered").inc(rep.offered)
+    registry.counter("requests_completed").inc(len(rep.results))
+    registry.counter("requests_dropped").inc(rep.dropped)
+    return registry.snapshot()
+
+
+def write_metrics_snapshot(path: str = SNAPSHOT_PATH, seed: int = 0,
+                           n_events: int = 800) -> dict:
+    """Run the deterministic cell and write the file compare_metrics.py
+    diffs. Shared by this bench's main() and ``run.py --emit-metrics``."""
+    snap = run_metrics_snapshot(seed=seed, n_events=n_events)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"config": {"seed": seed, "n_events": n_events},
+                   "metrics": snap}, f, indent=1, sort_keys=True)
+    return snap
+
+
+# ------------------------------------------------------ cell 3: chaos drill
+
+def run_chaos_trace(seed: int = 0, n_requests: int = 16,
+                    trace_path: str = "artifacts/bench/chaos_trace.json"
+                    ) -> dict:
+    """Kill the whole cube fleet under a traced service, export the traces,
+    and reconstruct a degraded request's stage path + latency attribution
+    from the exported file alone."""
+    from repro.core.service import InferenceService, ServiceConfig
+    svc = InferenceService(ServiceConfig(arch_id="din", batch_size=8,
+                                         shed=False, seed=seed))
+    # warm pass: populates the cube cache's stale side buffer so the chaos
+    # pass degrades to tier 2 (stale rows) where keys were seen before
+    svc.run(n_requests=n_requests)
+    for sid in range(svc.cube.n_servers):
+        svc.cube.kill_server(sid)
+    svc.cube_cache.bump_generation()        # cold cube cache: force the ladder
+    # the chaos pass replays the same seeded requests — flush the query
+    # cache too, or it would answer them without ever touching the cube
+    svc.query_cache.bump_model_version()
+    tracer = Tracer()
+    try:
+        svc.run(n_requests=n_requests, tracer=tracer)
+    finally:
+        for sid in range(svc.cube.n_servers):
+            svc.cube.revive_server(sid)
+    in_memory = {r["trace_id"]: r for r in tracer.buffer.traces()}
+    os.makedirs(os.path.dirname(trace_path), exist_ok=True)
+    tracer.buffer.export_chrome(trace_path)
+
+    # ---- from here on, ONLY the exported file is consulted
+    exported = TraceBuffer.from_chrome(trace_path)
+    degraded = [r for r in exported if r["degraded_tier"] >= 2]
+    assert degraded, "chaos drill produced no degraded (tier>=2) traces"
+    rec = max(degraded, key=lambda r: r["latency_s"])
+    path = stage_path(rec)
+    cp = critical_path(rec)
+    mem = in_memory[rec["trace_id"]]
+    checks = {
+        "path_roundtrip": path == stage_path(mem),
+        "topology_roundtrip": span_topology(rec) == span_topology(mem),
+        "full_pipeline": len(path) >= 4 and "cube" in path,
+        "cube_span_degraded": any(
+            sp["stage"] == "cube" and sp["attrs"].get("degraded_tier", 0) >= 2
+            for sp in rec["spans"]),
+        "attribution_covers_path": (
+            {seg["stage"] for seg in cp["segments"]} == set(path)),
+    }
+    return {
+        "n_traces_exported": len(exported),
+        "n_degraded": len(degraded),
+        "trace_id": rec["trace_id"],
+        "degraded_tier": rec["degraded_tier"],
+        "stage_path": path,
+        "latency_ms": rec["latency_s"] * 1e3,
+        "top_segment": (cp["segments"][0] if cp["segments"] else None),
+        "unattributed_frac": (cp["unattributed_s"] / cp["total_s"]
+                              if cp["total_s"] > 0 else 0.0),
+        "checks": checks,
+        "ok": all(checks.values()),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: fewer events + fewer interleaved rounds")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-assert", action="store_true")
+    args = ap.parse_args()
+    n_events = 400 if args.smoke else 1000
+    pairs = 2 if args.smoke else 3
+
+    t0 = time.time()
+    gate = run_overhead_gate(seed=args.seed, n_events=n_events, pairs=pairs)
+    if not gate["ok"]:
+        # p99 is the tail by definition: one scheduler hiccup landing in
+        # the ON arm can blow a 10% budget on a noisy host even when the
+        # steady-state tax is ~1%. Retry ONCE on a fresh seed — a real
+        # telemetry tax is systematic and fails both attempts.
+        print(f"cell1 ratio {gate['p99_ratio']:.3f} > {OVERHEAD_MAX} — "
+              f"retrying once (scheduling-noise guard)")
+        gate = run_overhead_gate(seed=args.seed + 100, n_events=n_events,
+                                 pairs=pairs)
+    for r in gate["off_runs"] + gate["on_runs"]:
+        tag = "on " if r["telemetry"] else "off"
+        extra = (f" traces={r['traces_offered']:4d} "
+                 f"recorder_samples={r['recorder_samples']}"
+                 if r["telemetry"] else "")
+        print(f"  {tag} p50={r['p50_ms']:7.3f}ms p99={r['p99_ms']:8.3f}ms "
+              f"qps={r['throughput_qps']:6.0f}{extra}")
+    print(f"cell1 (overhead): p99 ON {gate['p99_on_ms']:.3f}ms vs OFF "
+          f"{gate['p99_off_ms']:.3f}ms → ratio {gate['p99_ratio']:.3f} "
+          f"(gate ≤{OVERHEAD_MAX}) [{time.time() - t0:.1f}s]")
+
+    t0 = time.time()
+    # NOT scaled down under --smoke: the snapshot is diffed against the
+    # committed baseline (compare_metrics.py), so every run must produce
+    # the same cell; it is virtual-clock sim and costs well under a second
+    snap_events = 800
+    snap = write_metrics_snapshot(seed=args.seed, n_events=snap_events)
+    deterministic = snap == run_metrics_snapshot(seed=args.seed,
+                                                 n_events=snap_events)
+    p99 = snap["jizhi_request_latency_s"]["p99"]
+    print(f"cell2 (snapshot): {len(snap)} series, request p99 "
+          f"{p99 * 1e3:.2f}ms, deterministic={deterministic} "
+          f"[{time.time() - t0:.1f}s]")
+
+    t0 = time.time()
+    drill = run_chaos_trace(seed=args.seed)
+    print(f"cell3 (chaos trace): {drill['n_degraded']}/"
+          f"{drill['n_traces_exported']} degraded traces exported; drill "
+          f"trace {drill['trace_id']} tier={drill['degraded_tier']} path="
+          f"{'->'.join(drill['stage_path'])} top_segment="
+          f"{drill['top_segment']['stage']}:{drill['top_segment']['kind']}"
+          f" ({100 * drill['top_segment']['frac']:.0f}%) checks="
+          f"{drill['checks']} [{time.time() - t0:.1f}s]")
+
+    os.makedirs("artifacts/bench", exist_ok=True)
+    with open(os.path.join("artifacts", "bench", "obs_overhead.json"),
+              "w") as f:
+        json.dump({"config": {"smoke": args.smoke, "seed": args.seed,
+                              "n_events": n_events, "pairs": pairs,
+                              "p99_floor_ms": P99_FLOOR_S * 1e3,
+                              "overhead_max": OVERHEAD_MAX},
+                   "overhead_gate": gate,
+                   "chaos_drill": drill}, f, indent=1)
+    print("wrote artifacts/bench/obs_overhead.json + metrics_snapshot.json"
+          " + chaos_trace.json")
+
+    if not args.no_assert:
+        assert gate["ok"], \
+            f"CELL 1 FAILED: telemetry-ON p99 {gate['p99_ratio']:.3f}× " \
+            f"telemetry-OFF (gate ≤{OVERHEAD_MAX}×)"
+        assert gate["traces_per_run"] == n_events, \
+            "CELL 1 INVALID: tracer did not observe every request"
+        assert deterministic, \
+            "CELL 2 FAILED: metrics snapshot not run-to-run deterministic"
+        assert drill["ok"], \
+            f"CELL 3 FAILED: critical-path reconstruction from export: " \
+            f"{drill['checks']}"
+        print("telemetry-plane gates passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -120,6 +120,19 @@ def main() -> None:
     for name, us, derived in kernel_bench.bench_all():
         record(name, {"us_per_call": us}, us=us, derived=derived)
 
+    if "--emit-metrics" in sys.argv:
+        # deterministic registry snapshot -> artifacts/bench/ (the file
+        # benchmarks/compare_metrics.py diffs against the committed
+        # baseline); virtual-clock sim, so quick/full produce the same cell
+        from benchmarks import obs_bench
+
+        t0 = time.time()
+        snap = obs_bench.write_metrics_snapshot()
+        p99 = snap["jizhi_request_latency_s"]["p99"]
+        record("metrics_snapshot", snap, us=(time.time() - t0) * 1e6,
+               derived=f"{len(snap)} series; request p99={p99 * 1e3:.2f}ms "
+                       f"-> {obs_bench.SNAPSHOT_PATH}")
+
     with open("artifacts/bench/results.json", "w") as f:
         json.dump(results, f, indent=1, default=str)
 

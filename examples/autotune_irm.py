@@ -4,10 +4,15 @@ fits F^R/F^L on simulator logs, searches Eq.(1) with constrained CMA-ES,
 re-validates the solution path on fresh traffic, prints Table-4-style knobs.
 
     PYTHONPATH=src python examples/autotune_irm.py [--service A] [--budget 800]
+
+With ``--history-dir DIR`` the tuner reads the durable StatsRecorder
+history recorded there (and records a fresh sweep into it when empty) —
+the paper's "search from historical logs" loop over a real artifact
+instead of an in-memory sweep.
 """
 import argparse
 
-from repro.core.irm.offline import autotune
+from repro.core.irm.offline import autotune, logs_from_history
 from repro.core.service_model import SERVICES, Knobs
 
 
@@ -15,12 +20,21 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--service", default="A", choices=list("ABCDE"))
     ap.add_argument("--budget", type=int, default=800)
+    ap.add_argument("--history-dir", default=None,
+                    help="StatsRecorder history to tune from (recorded on "
+                         "first run, reused afterwards)")
     args = ap.parse_args()
 
     print(f"auto-tuning service {args.service} "
           f"(CMA-ES budget {args.budget}, constraint: per-stage latency ≤ default)")
+    if args.history_dir:
+        loaded = logs_from_history(args.history_dir)
+        verb = (f"reusing {len(loaded[0])} samples from" if loaded
+                else "recording fresh sweep into")
+        print(f"history: {verb} {args.history_dir}")
     res = autotune(SERVICES[args.service], budget=args.budget,
-                   n_log_samples=40, n_events=900)
+                   n_log_samples=40, n_events=900,
+                   history_dir=args.history_dir)
 
     print(f"\ninstances: {res.instances_before} → {res.instances_after} "
           f"({100 * res.instance_gain:.1f}% saved; paper Table 3: 8.9-16.5%)")

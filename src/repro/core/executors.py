@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import heapq
 import logging
+import math
 import queue
 import threading
 import time
@@ -25,6 +26,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 from repro.core.sedp import Event, Plan, StageProcessor
+from repro.obs.metrics import Histogram
 from repro.serve.batcher import MicroBatcher
 
 log = logging.getLogger(__name__)
@@ -69,10 +71,18 @@ class RunReport:
     dropped: int = 0          # events shed by overflow policy (never finish)
     expired: int = 0          # deadline-expired events (finish timed-out)
     errors: int = 0           # events terminated by a stage-op exception
+    completed: int = 0        # events that reached the sink (incl. expired/
+    #                           errored terminals) — authoritative even when
+    #                           exact latency retention is off
+    # log-bucketed latency histogram: ALWAYS populated; the default
+    # accounting path when ``exact_latencies=False`` drops the raw list
+    # (bounded memory on long-running serving loops)
+    latency_hist: Optional[Histogram] = None
 
     @property
     def throughput(self):
-        return len(self.latencies) / max(1e-9, self.makespan_s)
+        n = self.completed or len(self.latencies)
+        return n / max(1e-9, self.makespan_s)
 
     @property
     def goodput(self):
@@ -84,14 +94,25 @@ class RunReport:
         return self.dropped / max(1, self.offered)
 
     def latency_percentile(self, q: float) -> float:
-        if not self.latencies:
-            return 0.0
-        xs = sorted(self.latencies)
-        return xs[min(len(xs) - 1, int(q * len(xs)))]
+        """Ceil-based nearest-rank percentile: the smallest x with at least
+        ``ceil(q*n)`` samples ≤ x. (The old ``int(q*n)`` index read one
+        rank high on exact fractions and under-indexed small samples.)
+        Falls back to the log-bucketed histogram when exact samples were
+        not retained."""
+        if self.latencies:
+            xs = sorted(self.latencies)
+            return xs[max(0, math.ceil(q * len(xs)) - 1)]
+        if self.latency_hist is not None and self.latency_hist.count:
+            return self.latency_hist.percentile(q)
+        return 0.0
 
     @property
     def avg_latency(self):
-        return sum(self.latencies) / max(1, len(self.latencies))
+        if self.latencies:
+            return sum(self.latencies) / len(self.latencies)
+        if self.latency_hist is not None and self.latency_hist.count:
+            return self.latency_hist.sum / self.latency_hist.count
+        return 0.0
 
 
 class ExecContext:
@@ -140,9 +161,12 @@ class AsyncExecutor:
     bound. Batching follows the MicroBatcher discipline: a worker collects
     up to ``batch_size`` events or ``max_wait_s`` (whichever first)."""
 
-    def __init__(self, plan: Plan, batch_timeout_s: float = 0.002):
+    def __init__(self, plan: Plan, batch_timeout_s: float = 0.002,
+                 tracer=None, exact_latencies: bool = True):
         self.plan = plan
         self.batch_timeout_s = batch_timeout_s
+        self.tracer = tracer
+        self.exact_latencies = exact_latencies
         self.channels = {n: queue.Queue(maxsize=sp.max_queue)
                          for n, sp in plan.stages.items()}
         self.out_q: queue.Queue = queue.Queue()
@@ -151,6 +175,9 @@ class AsyncExecutor:
         self._stop = threading.Event()
         self._pending = 0
         self._pending_lock = threading.Lock()
+        # StageStats mutations come from every worker thread concurrently;
+        # bare += on the dataclass fields loses increments under contention
+        self._stats_lock = threading.Lock()
         self._threads: list[threading.Thread] = []
         self._gen = 0          # run() generation; stale workers must not emit
         self._t_start = 0.0
@@ -173,6 +200,8 @@ class AsyncExecutor:
             batch = None
             try:
                 ev = ch.get(timeout=timeout)
+                if self.tracer is not None:
+                    self.tracer.dequeued(ev, sp.name, time.monotonic())
                 batch = mb.offer(ev, deadline_at=ev.deadline_at)
             except queue.Empty:
                 pass
@@ -189,16 +218,20 @@ class AsyncExecutor:
             expired = [e for e in batch if e.deadline_at is not None
                        and now > e.deadline_at]
             if expired:
-                st = self.stats[sp.name]
-                st.expired += len(expired)
+                with self._stats_lock:
+                    self.stats[sp.name].expired += len(expired)
                 for e in expired:
                     e.meta["timed_out"] = True
                     e.meta["_terminal"] = True
+                    if self.tracer is not None:
+                        self.tracer.expired(e, sp.name, now)
                 self._emit(sp.name, expired, gen)
                 batch = [e for e in batch if not e.meta.get("timed_out")]
                 if not batch:
                     continue
             t0 = time.monotonic()
+            if self.tracer is not None:
+                self.tracer.exec_begin(batch, sp.name, t0)
             try:
                 out = sp.op(batch, self.ctx) or []
                 failed = False
@@ -211,17 +244,25 @@ class AsyncExecutor:
                 for ev in out:
                     ev.meta["error"] = f"{type(e).__name__}: {e}"
                     ev.meta["_terminal"] = True
+            t1 = time.monotonic()
+            if self.tracer is not None:
+                if failed:
+                    self.tracer.exec_end(batch, sp.name, t1,
+                                         error=batch[0].meta.get("error"))
+                else:
+                    self.tracer.exec_end(batch, sp.name, t1)
             if self._gen != gen:
                 return       # a newer run() started: don't touch its state
-            st = self.stats[sp.name]
-            st.events += len(batch)
-            st.batches += 1
-            st.busy_s += time.monotonic() - t0
-            if failed:
-                st.errors += len(batch)
-            for e in batch:
-                if e.meta.pop("_degraded", None):
-                    st.degraded += 1
+            n_degraded = sum(1 for e in batch
+                             if e.meta.pop("_degraded", None))
+            with self._stats_lock:
+                st = self.stats[sp.name]
+                st.events += len(batch)
+                st.batches += 1
+                st.busy_s += t1 - t0
+                if failed:
+                    st.errors += len(batch)
+                st.degraded += n_degraded
             # ops may CREATE events (multi-tenant fanout clones) or DROP
             # them (filters): the completion count must track the actual
             # in-flight population or run() would return early / hang
@@ -237,15 +278,22 @@ class AsyncExecutor:
         (backpressure), bailing out only on shutdown/generation change."""
         ch = self.channels[stage]
         st = self.stats[stage]
+        # queue span opens BEFORE the put: a consumer may pop the event the
+        # instant it lands, and the span deliberately includes any
+        # backpressure stall spent blocked on a full channel
+        if self.tracer is not None:
+            self.tracer.enqueued(ev, stage, time.monotonic())
         blocked = False
         while self._gen == gen:
             try:
                 ch.put(ev, block=blocked, timeout=0.05)
-                st.max_depth = max(st.max_depth, ch.qsize())
+                with self._stats_lock:
+                    st.max_depth = max(st.max_depth, ch.qsize())
                 return
             except queue.Full:
                 if not blocked:             # count each backpressure stall once
-                    st.overflows += 1
+                    with self._stats_lock:
+                        st.overflows += 1
                     blocked = True
                 continue
 
@@ -258,6 +306,8 @@ class AsyncExecutor:
                 targets = []     # expired/errored: straight to the sink
             if not targets:
                 ev.done_at = time.monotonic()
+                if self.tracer is not None:
+                    self.tracer.finish(ev, ev.done_at)
                 self.out_q.put(ev)
                 with self._pending_lock:
                     self._pending -= 1
@@ -292,6 +342,8 @@ class AsyncExecutor:
         for ev in events:
             ev.born_at = time.monotonic()
             _stamp_deadline(ev, ev.born_at)
+            if self.tracer is not None:
+                self.tracer.begin(ev, ev.born_at)
             # bounded ingress: a full source channel pushes back on the
             # injector exactly like any other upstream
             self._put_blocking(source, ev, gen)
@@ -308,11 +360,16 @@ class AsyncExecutor:
         for th in self._threads:        # workers exit within their poll tick
             th.join(timeout=2.0)
         self._threads = [th for th in self._threads if th.is_alive()]
+        hist = Histogram("latency_s", "end-to-end request latency")
+        for ev in done:
+            hist.observe(ev.done_at - ev.born_at)
         rep = RunReport(
-            latencies=[ev.done_at - ev.born_at for ev in done],
+            latencies=([ev.done_at - ev.born_at for ev in done]
+                       if self.exact_latencies else []),
             stage_stats=dict(self.stats),
             makespan_s=time.monotonic() - t_start,
-            results=done, offered=len(events),
+            results=done, offered=len(events), completed=len(done),
+            latency_hist=hist,
             expired=sum(st.expired for st in self.stats.values()),
             errors=sum(st.errors for st in self.stats.values()))
         return rep
@@ -348,11 +405,14 @@ class SimExecutor:
 
     def __init__(self, plan: Plan, service_time: Optional[Callable] = None,
                  overflow_policy: Optional[Callable] = None,
-                 default_max_wait_s: float = 0.0):
+                 default_max_wait_s: float = 0.0,
+                 tracer=None, exact_latencies: bool = True):
         self.plan = plan
         self.service_time = service_time or self._default_service_time
         self.overflow_policy = overflow_policy
         self.default_max_wait_s = default_max_wait_s
+        self.tracer = tracer
+        self.exact_latencies = exact_latencies
         self.stats = defaultdict(StageStats)
         self.ctx = ExecContext(self)
         # deques of (enqueue_time, event): stage dispatch pops from the head;
@@ -402,6 +462,8 @@ class SimExecutor:
         for t, ev in arrivals:
             ev.born_at = t
             _stamp_deadline(ev, t)
+            if self.tracer is not None:
+                self.tracer.begin(ev, t)
             heapq.heappush(pq, _SimItem(t, seq, "arrive", (source, ev)))
             seq += 1
         while pq:
@@ -433,11 +495,16 @@ class SimExecutor:
                 seq = self._try_dispatch(stage, pq, seq)
                 for other in self.plan.stages:
                     seq = self._try_dispatch(other, pq, seq)
+        hist = Histogram("latency_s", "end-to-end request latency")
+        for ev in self._done:
+            hist.observe(ev.done_at - ev.born_at)
         rep = RunReport(
-            latencies=[ev.done_at - ev.born_at for ev in self._done],
+            latencies=([ev.done_at - ev.born_at for ev in self._done]
+                       if self.exact_latencies else []),
             stage_stats=dict(self.stats),
             makespan_s=self._clock - self._t_start,
             results=self._done, offered=len(arrivals),
+            completed=len(self._done), latency_hist=hist,
             dropped=self._dropped,
             expired=sum(st.expired for st in self.stats.values()),
             errors=sum(st.errors for st in self.stats.values()))
@@ -472,6 +539,9 @@ class SimExecutor:
             batch = [e for _, e in entries]
             st = self.stats[stage]
             st.queue_wait_s += sum(self._clock - t for t, _ in entries)
+            if self.tracer is not None:
+                for e in batch:
+                    self.tracer.dequeued(e, stage, self._clock)
             # deadline gate at dispatch: expired events finish timed-out
             # NOW, consuming no server time here or downstream
             expired = [e for e in batch if e.deadline_at is not None
@@ -482,26 +552,39 @@ class SimExecutor:
                     e.meta["timed_out"] = True
                     e.meta.pop("cost_s", None)
                     e.done_at = self._clock
+                    if self.tracer is not None:
+                        self.tracer.expired(e, stage, self._clock)
+                        self.tracer.finish(e, self._clock)
                 self._done.extend(expired)
                 batch = [e for e in batch if not e.meta.get("timed_out")]
                 if not batch:
                     continue
             t0 = self._clock
+            if self.tracer is not None:
+                self.tracer.exec_begin(batch, stage, t0)
             try:
                 out = sp.op(batch, self.ctx) or []
+                op_error = None
             except Exception as e:  # noqa: BLE001 — error-terminal, not a
                 # wedged simulated server
                 log.exception("stage %r op raised; failing its batch "
                               "terminally", stage)
                 st.errors += len(batch)
+                op_error = f"{type(e).__name__}: {e}"
                 out = list(batch)
                 for ev in out:
-                    ev.meta["error"] = f"{type(e).__name__}: {e}"
+                    ev.meta["error"] = op_error
                     ev.meta["_terminal"] = True
             for e in batch:
                 if e.meta.pop("_degraded", None):
                     st.degraded += 1
             dt = self.service_time(sp, batch)
+            if self.tracer is not None:
+                if op_error is not None:
+                    self.tracer.exec_end(batch, stage, t0 + dt,
+                                         error=op_error)
+                else:
+                    self.tracer.exec_end(batch, stage, t0 + dt)
             for e in batch:                     # cost consumed by THIS stage
                 e.meta.pop("cost_s", None)
             frees[si] = t0 + dt
@@ -517,11 +600,16 @@ class SimExecutor:
         if len(q) >= self.plan.stages[stage].max_queue:
             st.overflows += 1
             if self.overflow_policy is not None:
+                dropped_ev = ev
                 ev = self.overflow_policy(stage, ev, self.ctx)
                 if ev is None:                  # request shed at the channel
                     st.dropped += 1
                     self._dropped += 1
+                    if self.tracer is not None:
+                        self.tracer.dropped(dropped_ev, stage, self._clock)
                     return
+        if self.tracer is not None:
+            self.tracer.enqueued(ev, stage, self._clock)
         q.append((self._clock, ev))
         st.max_depth = max(st.max_depth, len(q))
 
@@ -534,6 +622,8 @@ class SimExecutor:
                 targets = []     # expired/errored: straight to the sink
             if not targets:
                 ev.done_at = self._clock
+                if self.tracer is not None:
+                    self.tracer.finish(ev, self._clock)
                 self._done.append(ev)
                 continue
             for t in targets:
@@ -602,7 +692,11 @@ class LegacyExecutor:
                 ev.done_at = t
                 done.append(ev)
             t_last = max(t_last, t)
+        hist = Histogram("latency_s", "end-to-end request latency")
+        for e in done:
+            hist.observe(e.done_at - e.born_at)
         return RunReport(latencies=[e.done_at - e.born_at for e in done],
                          stage_stats=dict(self.stats),
                          makespan_s=t_last - t_first, results=done,
-                         offered=len(arrivals))
+                         offered=len(arrivals), completed=len(done),
+                         latency_hist=hist)

@@ -35,9 +35,45 @@ def _stage_latency(report, key: str) -> float:
     return tot_busy / max(1.0, tot_ev)
 
 
+def logs_from_history(history_dir: str):
+    """Load (X, lat, res) training logs from a ``StatsRecorder`` history
+    directory (the durable artifact a live service records — DESIGN.md
+    §10.4). Returns None when the directory holds no IRM samples, so
+    callers can fall back to a fresh sweep."""
+    from repro.obs.recorder import read_history
+    X, lat, res = [], [], []
+    for s in read_history(history_dir):
+        irm = (s.get("extra") or {}).get("irm")
+        if not irm:
+            continue
+        X.append(np.asarray(irm["knobs"], float))
+        lat.append(np.asarray(irm["stage_latency_s"], float))
+        res.append(float(irm["instances"]))
+    if not X:
+        return None
+    return np.stack(X), np.stack(lat), np.array(res)
+
+
 def collect_logs(spec: ServiceSpec, n_samples: int = 60, n_events: int = 1200,
-                 rate_qps: float = 1200.0, seed: int = 0):
-    """Historical logs: (knob vector → per-stage latencies, instances)."""
+                 rate_qps: float = 1200.0, seed: int = 0,
+                 history_dir: str | None = None):
+    """Historical logs: (knob vector → per-stage latencies, instances).
+
+    With ``history_dir`` set, previously recorded history is REUSED when
+    present (the paper's IRM searches over logs the serving fleet already
+    produced, not fresh sweeps); otherwise the sweep runs and every sample
+    is recorded there through a ``StatsRecorder`` — so the next tuning run,
+    and any other consumer, reads the same durable artifact."""
+    if history_dir is not None:
+        loaded = logs_from_history(history_dir)
+        if loaded is not None:
+            return loaded
+    recorder = None
+    if history_dir is not None:
+        from repro.obs.metrics import MetricsRegistry
+        from repro.obs.recorder import StatsRecorder
+        recorder = StatsRecorder(history_dir, MetricsRegistry(),
+                                 window_samples=max(1, n_samples))
     rng = np.random.default_rng(seed)
     X, lat, res = [], [], []
     bounds = [(lo, hi) for _, lo, hi in Knobs.BOUNDS]
@@ -46,9 +82,21 @@ def collect_logs(spec: ServiceSpec, n_samples: int = 60, n_events: int = 1200,
         k = Knobs.from_vector(x)
         rep, rt, inst = run_service(spec, k, n_events=n_events,
                                     rate_qps=rate_qps, seed=seed + i)
+        stage_lat = [_stage_latency(rep, s) for s in STAGE_KEYS]
         X.append(k.to_vector())
-        lat.append([_stage_latency(rep, s) for s in STAGE_KEYS])
+        lat.append(stage_lat)
         res.append(float(inst))
+        if recorder is not None:
+            recorder.sample(extra={"irm": {
+                "knobs": [float(v) for v in k.to_vector()],
+                "stage_latency_s": [float(v) for v in stage_lat],
+                "instances": float(inst),
+                "avg_latency_s": float(rep.avg_latency),
+                "p99_latency_s": float(rep.latency_percentile(0.99)),
+                "seed": seed + i,
+            }})
+    if recorder is not None:
+        recorder.roll()
     return np.stack(X), np.stack(lat), np.array(res)
 
 
@@ -70,9 +118,11 @@ class TuneResult:
 def autotune(spec: ServiceSpec, n_log_samples: int = 60,
              n_events: int = 1200, rate_qps: float = 1200.0,
              budget: int = 1500, seed: int = 0,
-             latency_slack: float = 1.02) -> TuneResult:
+             latency_slack: float = 1.02,
+             history_dir: str | None = None) -> TuneResult:
     default = Knobs()
-    X, lat, res = collect_logs(spec, n_log_samples, n_events, rate_qps, seed)
+    X, lat, res = collect_logs(spec, n_log_samples, n_events, rate_qps, seed,
+                               history_dir=history_dir)
 
     f_r = RidgeEnsemble(seed=seed).fit(X, res)
     f_l = [RidgeEnsemble(seed=seed + 1 + j).fit(X, lat[:, j])

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.layers import mlp_tower_apply, mlp_tower_init
+from repro.obs.trace import annotate
 
 FEATURES = ("quota", "cutoff_ratio_prev", "qid",
             "escore_avg", "escore_variance", "escore_max", "escore_min")
@@ -284,4 +285,6 @@ class OnlineShedder:
             ev.payload["candidates"] = kept
             ev.meta["cutoff_ratio"] = cut
             ev.meta["shed_accounted"] = True
+            annotate(ev, cutoff_ratio=round(cut, 4),
+                     shed=len(cands) - len(kept), kept=len(kept))
         return batch

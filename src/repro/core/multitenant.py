@@ -13,7 +13,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
-from repro.core.sedp import Event
+from repro.core.sedp import Event, propagate_trace
 
 
 @dataclass
@@ -91,9 +91,14 @@ def make_fanout_op(targets: list[str],
                 ev.meta["tenants_shed"] = [t for t in targets
                                            if t not in live]
             for i, t in enumerate(live):
-                e = ev if i == 0 else Event(payload=_clone_payload(ev.payload),
-                                            req_id=ev.req_id,
-                                            born_at=ev.born_at)
+                if i == 0:
+                    e = ev
+                else:
+                    e = Event(payload=_clone_payload(ev.payload),
+                              req_id=ev.req_id, born_at=ev.born_at)
+                    # clones keep the request's trace identity so each
+                    # tenant branch records a complete span tree
+                    propagate_trace(ev, e)
                 e.route = t
                 out.append(e)
         return out

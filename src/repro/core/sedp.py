@@ -25,7 +25,13 @@ _uid = itertools.count()
 
 @dataclass
 class Event:
-    """One inference task (user-item pair / request) flowing through the DAG."""
+    """One inference task (user-item pair / request) flowing through the DAG.
+
+    ``meta`` doubles as the telemetry carrier (DESIGN.md §10): when a
+    ``Tracer`` is attached to the executor, ``meta["trace_id"]`` holds the
+    request's trace id and ``meta["spans"]`` the span list the executors
+    append to on every stage visit. Ops that clone events (fanout) must
+    call ``propagate_trace`` so the clone's span tree stays complete."""
     payload: Any
     req_id: int = field(default_factory=lambda: next(_uid))
     route: Optional[str] = None        # next-stage override (None = all succs)
@@ -37,6 +43,22 @@ class Event:
     # terminal instead of occupying downstream stages (DESIGN.md §8.4)
     deadline_at: Optional[float] = None
     meta: dict = field(default_factory=dict)
+
+    @property
+    def trace_id(self) -> Optional[int]:
+        return self.meta.get("trace_id")
+
+
+def propagate_trace(parent: "Event", clone: "Event") -> "Event":
+    """Carry the parent's trace identity onto a cloned event: same trace
+    id, a branched copy of the span history (the closed prefix is shared
+    structurally; each branch appends to its own list). No-op when the
+    parent is untraced."""
+    spans = parent.meta.get("spans")
+    if spans is not None:
+        clone.meta["trace_id"] = parent.meta["trace_id"]
+        clone.meta["spans"] = list(spans)
+    return clone
 
 
 @dataclass

@@ -212,7 +212,8 @@ class _ServiceBase:
         raise NotImplementedError
 
     def run(self, n_requests: int = 64, executor: str = "async",
-            rate_qps: float = 500.0, deadline_s: Optional[float] = None):
+            rate_qps: float = 500.0, deadline_s: Optional[float] = None,
+            tracer=None, exact_latencies: bool = True):
         """Serve n_requests end to end. ``executor="async"`` is the real
         threaded path (bounded channels block upstream — backpressure);
         ``executor="sim"`` runs the identical DAG on the virtual clock with
@@ -220,14 +221,20 @@ class _ServiceBase:
 
         ``deadline_s`` gives every request a latency budget: an event that
         outlives it is shed at the next stage dispatch and finishes as a
-        timed-out terminal (``Response.timed_out``, DESIGN.md §8.4)."""
+        timed-out terminal (``Response.timed_out``, DESIGN.md §8.4).
+
+        ``tracer`` (an ``obs.Tracer``) records per-request span trees on
+        either executor; ``exact_latencies=False`` drops the raw latency
+        list from the report (the log-bucketed histogram remains)."""
         reqs = self.make_requests(n_requests, seed=self.cfg.seed,
                                   deadline_s=deadline_s)
         if executor == "async":
-            rep = AsyncExecutor(self.plan).run(reqs)
+            rep = AsyncExecutor(self.plan, tracer=tracer,
+                                exact_latencies=exact_latencies).run(reqs)
         elif executor == "sim":
             ex = SimExecutor(self.plan,
-                             overflow_policy=self._overflow_policy())
+                             overflow_policy=self._overflow_policy(),
+                             tracer=tracer, exact_latencies=exact_latencies)
             rep = ex.run([(i / rate_qps, ev) for i, ev in enumerate(reqs)])
         else:
             raise ValueError(f"unknown executor {executor!r}")

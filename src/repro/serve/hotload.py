@@ -25,6 +25,8 @@ import threading
 from dataclasses import dataclass
 from typing import Any, Callable, List, Optional
 
+from repro.obs.log import log_event
+
 log = logging.getLogger(__name__)
 
 
@@ -135,9 +137,11 @@ class PollWatcher:
                     # sample the (jittered) backoff ONCE per tick: the
                     # logged wait must be the wait actually slept
                     wait = self._backoff_s()
-                    log.warning(
-                        "%s poll failed (attempt %d, retry in %.1fs): %s",
-                        type(self).__name__, self.failures, wait, e)
+                    log_event(log, "watcher_poll_failed",
+                              level=logging.WARNING,
+                              watcher=type(self).__name__,
+                              attempt=self.failures, retry_in_s=wait,
+                              error=f"{type(e).__name__}: {e}")
                 self._stop.wait(wait)
         self._thread = threading.Thread(target=loop, daemon=True)
         self._thread.start()
@@ -174,4 +178,8 @@ class ModelMonitor(PollWatcher):
             return False
         path = os.path.join(self.watch_dir, f"gen_{stamp}")
         payload = self.loader(path)
-        return self.buffer.load(Generation(stamp, payload))
+        loaded = self.buffer.load(Generation(stamp, payload))
+        if loaded:
+            log_event(log, "model_hot_swap", watcher=type(self).__name__,
+                      version=stamp, path=path)
+        return loaded

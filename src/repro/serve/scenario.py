@@ -23,7 +23,9 @@ behind the quota-aware multi-tenant fanout.
 """
 from __future__ import annotations
 
+import logging
 import threading
+import time
 from dataclasses import dataclass
 from typing import Callable, Optional
 
@@ -31,6 +33,7 @@ import jax
 import numpy as np
 
 from repro.configs import registry
+from repro.obs.log import log_event
 from repro.core import sedp as sedp_lib
 from repro.core.cube import ParameterCube
 from repro.core.cube_cache import TwoTierLFUCache, capacity_from_ratio
@@ -49,6 +52,8 @@ from repro.serve.stages import (REQUEST_KEYS, CubeFetchStage,
                                 stage_of)
 from repro.update import (DeltaWatcher, HBMHead, PromoteDemotePolicy,
                           UpdateManager)
+
+log = logging.getLogger(__name__)
 
 __all__ = [
     "Request", "Response", "ScenarioSpec", "ScenarioRuntime",
@@ -244,6 +249,7 @@ class ServingSubstrate:
         # replay reaches ``recovery_target``
         self.recovering = False
         self.recovery_target = -1
+        self.last_replay_s = 0.0     # duration of the last delta-log replay
         self._rng = np.random.default_rng(seed)
         self._groups: dict[tuple[str, int], int] = {}
         self.bucket_items: dict[int, BoundedReverseMap] = {}
@@ -377,6 +383,7 @@ class ServingSubstrate:
         Clears ``recovering`` once the cursor reaches the recovery target.
         Returns the number of deltas applied."""
         from repro.update.delta import list_deltas, read_delta, verify_delta
+        t0 = time.perf_counter()
         n = 0
         for _ver, path in list_deltas(
                 update_dir,
@@ -384,6 +391,11 @@ class ServingSubstrate:
             verify_delta(path)
             self.updates.apply(read_delta(path))
             n += 1
+        if n:
+            self.last_replay_s = time.perf_counter() - t0
+            log_event(log, "delta_log_replayed", n_deltas=n,
+                      version=self.updates.stats.last_version,
+                      duration_s=self.last_replay_s)
         if (self.recovering
                 and self.updates.stats.last_version
                 >= self.recovery_target):

@@ -26,6 +26,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.obs.trace import annotate
 from repro.core.cube import (TIER_DEFAULT, TIER_PRIMARY, TIER_REPLICA,
                              TIER_STALE_CACHE)
 from repro.sparse.hashing import hash_bucket_np
@@ -208,6 +209,7 @@ class QueryCacheStage(Stage):
                 ev.route = self.hit_route
             else:
                 ev.route = self.miss_route
+            annotate(ev, cache_hit=s is not None)
         return batch
 
 
@@ -438,6 +440,8 @@ class CubeFetchStage(Stage):
                     ev.payload["cube_rows"] = out[primary]
                 ev.payload["cube_version"] = pv.version
                 ev.payload["degraded_tier"] = int(tier)
+                annotate(ev, cube_version=pv.version,
+                         degraded_tier=int(tier))
                 if tier > TIER_PRIMARY:
                     ev.meta["_degraded"] = True
         # post-fetch deadline check: a fetch that burned the whole budget
@@ -506,12 +510,14 @@ class RerankStage(Stage):
         payloads = [ev.payload for ev in batch]
         # pad to the covering batch bucket (bounded jit-trace count);
         # scores are per-row, so slicing [:B] discards the filler exactly
-        b = rt.pack_batch(rt.batch_buckets.pad_rows(payloads))
+        padded = rt.batch_buckets.pad_rows(payloads)
+        b = rt.pack_batch(padded)
         scores = np.asarray(rt.serve(params, b))[:B]
         now = ctx.now() if ctx is not None else 0.0
         for ev, s in zip(batch, scores):
             ev.payload["score"] = float(s)
             ev.payload["generation"] = gen.stamp
+            annotate(ev, batch_bucket=len(padded), generation=gen.stamp)
             rt.rerank_candidates(params, ev.payload, keep=self.keep)
         sub.query_cache.put_many(
             [rt.user_key(ev.payload) for ev in batch],

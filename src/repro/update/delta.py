@@ -40,6 +40,7 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from repro.faults.crash import crash_point
+from repro.obs.log import log_event
 from repro.serve.hotload import PollWatcher
 
 log = logging.getLogger(__name__)
@@ -379,13 +380,17 @@ class DeltaWatcher(PollWatcher):
             if self.verify_checksums:
                 try:
                     verify_delta(path)
-                except DeltaIntegrityError:
+                except DeltaIntegrityError as e:
                     self.integrity_failures += 1
-                    log.warning("delta v%d failed checksum verification; "
-                                "skipping (will retry after backoff)", ver)
+                    log_event(log, "delta_checksum_failed",
+                              level=logging.WARNING,
+                              watcher=type(self).__name__, version=ver,
+                              path=path, error=str(e))
                     raise
             self.apply_fn(read_delta(path))
             self.applied_version = ver
+            log_event(log, "delta_applied", watcher=type(self).__name__,
+                      version=ver)
             applied = True
             if self.prune_applied:
                 shutil.rmtree(path, ignore_errors=True)

@@ -42,6 +42,7 @@ blocks once they pile past a threshold. Both belong OFF the request path
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque
 from contextlib import contextmanager
 from dataclasses import dataclass
@@ -68,6 +69,11 @@ class UpdateStats:
     compactions: int = 0
     generation_swaps: int = 0
     last_version: int = -1
+    # apply/compaction timings (obs registry: jizhi_update_stats{...})
+    apply_s_total: float = 0.0     # cumulative wall time under the apply lock
+    apply_s_last: float = 0.0      # duration of the most recent apply
+    compact_s_total: float = 0.0   # cumulative compaction wall time
+    compact_s_last: float = 0.0    # duration of the most recent compaction
 
 
 def _default_cache_key_fn(group: int, ids: np.ndarray):
@@ -139,6 +145,7 @@ class UpdateManager:
             if batch.version <= self.stats.last_version:
                 self.stats.deltas_skipped += 1
                 return self.stats.last_version
+            t_apply0 = time.perf_counter()
             # validate EVERY group before applying ANY: last_version only
             # advances after the whole batch lands, so a malformed group
             # failing mid-batch would otherwise leave the earlier groups
@@ -247,6 +254,8 @@ class UpdateManager:
                 self.stats.rows_deleted += int(dels.size)
             self.stats.deltas_applied += 1
             self.stats.last_version = batch.version
+            self.stats.apply_s_last = time.perf_counter() - t_apply0
+            self.stats.apply_s_total += self.stats.apply_s_last
             return batch.version
 
     @contextmanager
@@ -367,6 +376,9 @@ class UpdateManager:
         readers keep their pinned snapshots throughout."""
         if self.cube.overlay_blocks < self.compact_after_blocks:
             return False
+        t0 = time.perf_counter()
         self.cube.compact(max_rows_per_pass=self.compact_max_rows_per_pass)
+        self.stats.compact_s_last = time.perf_counter() - t0
+        self.stats.compact_s_total += self.stats.compact_s_last
         self.stats.compactions += 1
         return True

@@ -55,11 +55,13 @@ import os
 import shutil
 import signal
 import threading
+import time
 from typing import Optional
 
 import numpy as np
 
 from repro.faults.crash import crash_point
+from repro.obs.log import log_event
 
 log = logging.getLogger(__name__)
 
@@ -323,8 +325,9 @@ def load_aux_state(path: str) -> Optional[dict]:
             digest, fn = f.read().strip().split(None, 1)
         p = os.path.join(path, fn.strip())
         if _sha256(p) != digest:
-            log.warning("snapshot %s: aux state failed checksum; starting "
-                        "cold", os.path.basename(path))
+            log_event(log, "snapshot_aux_checksum_failed",
+                      level=logging.WARNING,
+                      snapshot=os.path.basename(path))
             return None
         with open(p) as f:
             raw = json.load(f)
@@ -372,8 +375,9 @@ def latest_valid_snapshot(snapshot_dir: str) -> Optional[str]:
             verify_snapshot(path)
             return path
         except SnapshotIntegrityError as e:
-            log.warning("ignoring corrupt snapshot %s: %s",
-                        os.path.basename(path), e)
+            log_event(log, "snapshot_corrupt_ignored",
+                      level=logging.WARNING, version=ver,
+                      snapshot=os.path.basename(path), error=str(e))
     return None
 
 
@@ -450,6 +454,7 @@ class CubeSnapshotter:
         self.watchers: list = []         # live cursors the delta GC floors on
         self.snapshots_taken = 0
         self.deltas_pruned = 0
+        self.last_snapshot_s = 0.0       # duration of the last snapshot
         self._lock = threading.Lock()    # one snapshot in flight at a time
         # resume-aware: an existing valid snapshot already covers its
         # version — don't rewrite it on the first post-restart apply
@@ -482,6 +487,7 @@ class CubeSnapshotter:
         snapshot path, or None when the cursor has not advanced since the
         last snapshot (``force`` overrides — a same-version rewrite)."""
         with self._lock:
+            t0 = time.perf_counter()
             mgr = self.sub.updates
             with mgr.pinned_capture() as (pv, state):
                 delta_ver, touched_log, touched_floor = state
@@ -500,6 +506,11 @@ class CubeSnapshotter:
                     touched_log, touched_floor)
             self.last_snapshot_version = delta_ver
             self.snapshots_taken += 1
+            self.last_snapshot_s = time.perf_counter() - t0
+            log_event(log, "snapshot_published",
+                      watcher=type(self).__name__, version=delta_ver,
+                      duration_s=self.last_snapshot_s,
+                      snapshot=os.path.basename(path))
             self.gc()
             return path
 

@@ -1,0 +1,216 @@
+"""Telemetry plane (DESIGN.md §10): metrics registry + exporters, the
+percentile fix, concurrent StageStats safety, the history recorder's
+publish discipline, and structured logging."""
+import json
+import logging
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.executors import AsyncExecutor, RunReport, SimExecutor
+from repro.core.sedp import SEDP, Event
+from repro.obs.log import CapturingHandler, log_event
+from repro.obs.metrics import (BUCKET_BOUNDS, Histogram, MetricsRegistry,
+                               _BUCKET_FACTOR)
+from repro.obs.recorder import StatsRecorder, read_history
+
+
+# --------------------------------------------- percentile fix (satellite a)
+
+def test_latency_percentile_is_ceil_rank():
+    xs = [float(i) for i in range(1, 101)]           # 1..100
+    rep = RunReport(latencies=list(reversed(xs)))
+    # nearest-rank: p50 of 100 samples is the 50th value, not the 51st
+    assert rep.latency_percentile(0.50) == 50.0
+    assert rep.latency_percentile(0.99) == 99.0
+    assert rep.latency_percentile(1.00) == 100.0
+    assert rep.latency_percentile(0.001) == 1.0
+
+
+def test_latency_percentile_small_samples():
+    rep = RunReport(latencies=[3.0, 1.0, 2.0, 4.0])
+    assert rep.latency_percentile(0.50) == 2.0       # ceil(0.5*4)=2nd
+    assert rep.latency_percentile(0.75) == 3.0
+    assert rep.latency_percentile(0.99) == 4.0       # ceil(3.96)=4th
+    assert RunReport(latencies=[7.0]).latency_percentile(0.99) == 7.0
+    assert RunReport().latency_percentile(0.99) == 0.0
+
+
+@pytest.mark.parametrize("q", [0.5, 0.9, 0.95, 0.99])
+def test_exact_and_histogram_percentiles_agree(q):
+    """The log-bucketed estimate must sit within one bucket width (the
+    2**0.25 factor) above the exact nearest-rank value."""
+    rng = np.random.default_rng(0)
+    xs = rng.lognormal(-6.0, 1.0, 5000).tolist()     # ~ms-scale latencies
+    h = Histogram("latency_s")
+    h.observe_many(xs)
+    exact = sorted(xs)[max(0, math.ceil(q * len(xs)) - 1)]
+    est = h.percentile(q)
+    assert exact <= est <= exact * _BUCKET_FACTOR * (1 + 1e-9)
+    # a report that dropped its raw list falls back to the histogram
+    rep = RunReport(latencies=[], latency_hist=h, completed=len(xs))
+    assert rep.latency_percentile(q) == est
+
+
+def test_histogram_edge_cases():
+    h = Histogram("h")
+    assert h.percentile(0.99) == 0.0
+    assert h.sample()["count"] == 0
+    h.observe(2e-3)
+    assert h.percentile(0.5) == 2e-3                 # clamped to observed max
+    h.observe(1e9)                                   # beyond the top bucket
+    assert h.percentile(1.0) == 1e9
+    s = h.sample()
+    assert s["count"] == 2 and s["min"] == 2e-3 and s["max"] == 1e9
+    assert len(h.bucket_counts()) == len(BUCKET_BOUNDS) + 1
+
+
+def test_executor_reports_histogram_in_both_modes():
+    g = SEDP()
+    g.add_stage("a", lambda b, c: b, batch_size=4, sim_per_item_s=1e-4)
+    plan = g.compile()
+    arrivals = [(i * 1e-3, Event(payload={"i": i})) for i in range(32)]
+    exact = SimExecutor(plan).run(list(arrivals))
+    assert exact.latencies and exact.latency_hist.count == 32
+    arrivals = [(i * 1e-3, Event(payload={"i": i})) for i in range(32)]
+    histonly = SimExecutor(plan, exact_latencies=False).run(arrivals)
+    assert histonly.latencies == [] and histonly.completed == 32
+    assert histonly.throughput > 0
+    p99e, p99h = exact.latency_percentile(0.99), histonly.latency_percentile(0.99)
+    assert p99e <= p99h <= p99e * _BUCKET_FACTOR * (1 + 1e-9)
+
+
+# ------------------------------------- StageStats under load (satellite b)
+
+def test_stage_stats_concurrent_increments_not_lost():
+    """8 workers × batch_size 1 hammer one StageStats: with unlocked
+    read-modify-write increments, events would undercount."""
+    n = 600
+    g = SEDP()
+    g.add_stage("hot", lambda b, c: b, batch_size=1, parallelism=8,
+                max_queue=1024)
+    rep = AsyncExecutor(g.compile(), batch_timeout_s=1e-4).run(
+        [Event(payload={"i": i}) for i in range(n)])
+    st = rep.stage_stats["hot"]
+    assert st.events == n == rep.completed
+    assert st.batches == n                           # batch_size 1
+
+
+# ------------------------------------------------- registry + exporters
+
+def test_registry_get_or_create_and_type_guard():
+    r = MetricsRegistry(namespace="t")
+    c = r.counter("reqs")
+    assert r.counter("reqs") is c
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(TypeError):
+        r.gauge("reqs")
+    g = r.gauge("depth", fn=lambda: 7)
+    assert g.sample() == 7.0
+    bad = r.gauge("bad", fn=lambda: 1 / 0)
+    assert math.isnan(bad.sample())                  # dead callback → NaN
+
+
+def test_snapshot_and_prometheus_exposition():
+    r = MetricsRegistry(namespace="t")
+    r.counter("reqs", "total requests").inc(5)
+    r.gauge("depth").set(3)
+    r.histogram("lat", "latency").observe_many([1e-3, 2e-3, 4e-3])
+    r.collector("stage", lambda: {(("stage", "a"), ("field", "events")): 9})
+    snap = r.snapshot()
+    assert snap["t_reqs"] == 5.0
+    assert snap["t_depth"] == 3.0
+    assert snap["t_lat"]["count"] == 3
+    assert snap["t_stage{stage=a,field=events}"] == 9
+    assert json.loads(r.to_json()) == json.loads(
+        json.dumps(snap, default=str))
+    prom = r.to_prometheus()
+    assert "# TYPE t_reqs counter" in prom and "t_reqs 5" in prom
+    assert "# TYPE t_lat histogram" in prom
+    assert 't_lat_bucket{le="+Inf"} 3' in prom and "t_lat_count 3" in prom
+    assert 't_stage{stage="a",field="events"} 9' in prom
+    # a collector that raises is skipped, not fatal
+    r.collector("poison", lambda: 1 / 0)
+    assert "poison" not in r.to_prometheus()
+    r.unregister("reqs")
+    assert "t_reqs" not in r.snapshot()
+
+
+# ------------------------------------------- history recorder (tentpole 3)
+
+def _recorder(tmp_path, **kw):
+    r = MetricsRegistry(namespace="t")
+    r.counter("n").inc(1)
+    return StatsRecorder(str(tmp_path), r, clock=lambda: 123.0, **kw), r
+
+
+def test_recorder_roundtrip_and_window_roll(tmp_path):
+    rec, reg = _recorder(tmp_path, window_samples=2)
+    rec.sample()
+    reg.counter("n").inc(1)
+    rec.sample(extra={"irm": {"knobs": [1, 2]}})     # auto-rolls window 0
+    rec.sample()
+    rec.roll()                                       # partial window 1
+    assert rec.windows_published == 2
+    hist = read_history(str(tmp_path))
+    assert len(hist) == 3
+    assert hist[0]["metrics"]["t_n"] == 1.0
+    assert hist[1]["metrics"]["t_n"] == 2.0
+    assert hist[1]["extra"]["irm"]["knobs"] == [1, 2]
+    # a new recorder resumes AFTER the published windows
+    rec2, _ = _recorder(tmp_path)
+    rec2.sample()
+    rec2.roll()
+    assert len(read_history(str(tmp_path))) == 4
+    assert (tmp_path / "win_2" / "DONE").exists()
+
+
+def test_recorder_skips_torn_and_corrupt_windows(tmp_path):
+    rec, reg = _recorder(tmp_path, window_samples=1)
+    rec.sample()
+    rec.sample()
+    rec.sample()
+    assert len(read_history(str(tmp_path))) == 3
+    (tmp_path / "win_0" / "DONE").unlink()           # torn: never published
+    with open(tmp_path / "win_1" / "samples.jsonl", "a") as f:
+        f.write("{}\n")                              # corrupt: checksum off
+    assert len(read_history(str(tmp_path))) == 1     # only win_2 survives
+    assert len(read_history(str(tmp_path), verify=False)) == 3
+
+
+def test_recorder_thread_mode(tmp_path):
+    rec, _ = _recorder(tmp_path, interval_s=0.01)
+    rec.start()
+    deadline = threading.Event()
+    deadline.wait(0.15)
+    rec.stop()
+    assert rec.samples_taken > 0
+    assert read_history(str(tmp_path))
+
+
+# --------------------------------------------- structured logs (satellite c)
+
+def test_log_event_emits_text_and_structured_record():
+    logger = logging.getLogger("test.obs.structured")
+    logger.setLevel(logging.INFO)
+    cap = CapturingHandler()
+    logger.addHandler(cap)
+    try:
+        rec = log_event(logger, "delta_applied", version=7,
+                        duration_s=0.25, skipped=None)
+        log_event(logger, "watcher_poll_failed", level=logging.WARNING,
+                  error="OSError: gone")
+    finally:
+        logger.removeHandler(cap)
+    assert rec == {"event": "delta_applied", "version": 7,
+                   "duration_s": 0.25}               # None fields dropped
+    assert [r["event"] for r in cap.records] == ["delta_applied",
+                                                 "watcher_poll_failed"]
+    assert cap.events("watcher_poll_failed")[0]["error"] == "OSError: gone"
+    # the rendered text line carries the k=v pairs for plain-log consumers
+    assert cap.messages[0].startswith("delta_applied ")
+    assert "version=7" in cap.messages[0]

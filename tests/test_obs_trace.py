@@ -1,0 +1,299 @@
+"""Per-request SEDP tracing (DESIGN.md §10.1): shed / expired / degraded /
+errored requests each leave a complete span tree on BOTH executors with
+identical topology, fanout clones keep the trace identity, the tail-based
+buffer holds its bounds, and the Chrome export round-trips losslessly
+enough for critical-path analysis."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.executors import AsyncExecutor, SimExecutor
+from repro.core.irm.shedding import OnlineShedder
+from repro.core.multitenant import make_fanout_op
+from repro.core.sedp import SEDP, Event, propagate_trace
+from repro.obs.trace import (TraceBuffer, Tracer, annotate, critical_path,
+                             span_topology, stage_path)
+
+
+def _chain(op_b=None, batch_size=4, slow_a=False):
+    """a → b → c. ``slow_a`` gives stage a real+virtual service time so a
+    small deadline expires every event at b's dispatch on both executors."""
+    def op_a(batch, ctx):
+        if slow_a:
+            time.sleep(0.005)
+        return batch
+
+    g = SEDP()
+    g.add_stage("a", op_a, batch_size=batch_size,
+                sim_base_s=(5e-3 if slow_a else 1e-4))
+    g.add_stage("b", op_b or (lambda b, c: b), batch_size=batch_size,
+                sim_per_item_s=1e-4)
+    g.add_stage("c", lambda b, c: b, batch_size=batch_size,
+                sim_base_s=1e-4)
+    g.chain("a", "b", "c")
+    return g.compile()
+
+
+def _events(n, **meta):
+    return [Event(payload={"i": i}, meta=dict(meta)) for i in range(n)]
+
+
+def _run_both(plan_fn, n=8, spacing_s=1e-3, **meta):
+    """Run the same workload traced on both executors; return
+    (sim_traces, async_traces) keyed off each tracer's buffer."""
+    tr_sim, tr_async = Tracer(), Tracer()
+    SimExecutor(plan_fn(), tracer=tr_sim).run(
+        [(i * spacing_s, ev) for i, ev in enumerate(_events(n, **meta))])
+    AsyncExecutor(plan_fn(), tracer=tr_async).run(_events(n, **meta))
+    sim, asy = tr_sim.buffer.traces(), tr_async.buffer.traces()
+    assert len(sim) == len(asy) == n
+    return sim, asy
+
+
+def _assert_topology_parity(sim, asy):
+    for s, a in zip(sorted(sim, key=lambda r: r["req_id"]),
+                    sorted(asy, key=lambda r: r["req_id"])):
+        assert span_topology(s) == span_topology(a)
+        for rec in (s, a):
+            for sp in rec["spans"]:
+                assert sp["t1"] >= sp["t0"]
+
+
+# --------------------------------------------------------------- the cases
+
+def test_ok_requests_identical_topology():
+    sim, asy = _run_both(lambda: _chain())
+    _assert_topology_parity(sim, asy)
+    want = [(st, k) for st in ("a", "b", "c")
+            for k in ("queue", "assemble", "exec")]
+    assert span_topology(sim[0]) == want
+    assert stage_path(sim[0]) == ["a", "b", "c"]
+    assert all(r["status"] == "ok" for r in sim + asy)
+
+
+def test_shed_request_full_span_tree_on_both_executors():
+    """Op-path shedding (candidate pruning): the trace keeps its full
+    topology and the shed decision lands on the shed stage's exec span."""
+    def plan():
+        shedder = OnlineShedder(lambda f: np.array([0.9]), min_keep=4)
+        g = SEDP()
+        g.add_stage("a", lambda b, c: b, batch_size=4, sim_base_s=1e-4)
+        g.add_stage("shed", shedder.op, batch_size=4, sim_base_s=1e-4)
+        g.add_stage("c", lambda b, c: b, batch_size=4, sim_base_s=1e-4)
+        g.chain("a", "shed", "c")
+        return g.compile()
+
+    def events():
+        return [Event(payload={"i": i, "candidates":
+                               [(j, float(j)) for j in range(40)]})
+                for i in range(6)]
+
+    tr_sim, tr_async = Tracer(), Tracer()
+    SimExecutor(plan(), tracer=tr_sim).run(
+        [(i * 1e-3, ev) for i, ev in enumerate(events())])
+    AsyncExecutor(plan(), tracer=tr_async).run(events())
+    sim, asy = tr_sim.buffer.traces(), tr_async.buffer.traces()
+    _assert_topology_parity(sim, asy)
+    for rec in sim + asy:
+        assert rec["status"] == "ok"
+        shed_exec = [sp for sp in rec["spans"]
+                     if sp["stage"] == "shed" and sp["kind"] == "exec"]
+        assert len(shed_exec) == 1
+        assert shed_exec[0]["attrs"]["shed"] == 36          # 40 → min_keep 4
+        assert shed_exec[0]["attrs"]["cutoff_ratio"] == 0.9
+        assert stage_path(rec) == ["a", "shed", "c"]
+
+
+def test_expired_request_span_tree_on_both_executors():
+    """A request that outlives its deadline is shed at the next dispatch:
+    the trace ends with that stage's queue+assemble spans (no exec) and
+    the expiry decision annotated."""
+    # one request, batch_size 1: the expiry stage is deterministic on both
+    # executors (with several queued requests WHICH stage a request dies
+    # at depends on server occupancy, which only matches statistically)
+    sim, asy = _run_both(lambda: _chain(slow_a=True, batch_size=1), n=1,
+                         deadline_s=1e-3)
+    _assert_topology_parity(sim, asy)
+    for rec in sim + asy:
+        assert rec["status"] == "expired"
+        assert span_topology(rec) == [
+            ("a", "queue"), ("a", "assemble"), ("a", "exec"),
+            ("b", "queue"), ("b", "assemble")]              # no b exec
+        assert rec["spans"][-1]["attrs"]["expired"] is True
+        assert stage_path(rec) == ["a", "b"]                # b reached, not run
+
+    # under contention the expiry stage varies, but every expired trace
+    # must still close well-formed: complete exec triplets up to the final
+    # queue+assemble pair carrying the expiry decision
+    tr = Tracer()
+    SimExecutor(_chain(slow_a=True), tracer=tr).run(
+        [(0.0, ev) for ev in _events(4, deadline_s=1e-3)])
+    expired = tr.buffer.find(status="expired")
+    assert expired
+    for rec in expired:
+        topo = span_topology(rec)
+        assert topo[-1][1] == "assemble" and topo[-2][1] == "queue"
+        assert rec["spans"][-1]["attrs"]["expired"] is True
+        assert all(k == "exec" for _, k in topo[:-2][2::3])
+
+
+def test_errored_request_span_tree_on_both_executors():
+    """A stage op that raises error-terminates its batch: the exec span is
+    closed with the error and the record carries it."""
+    def boom(batch, ctx):
+        if any(ev.payload["i"] == 2 for ev in batch):
+            raise RuntimeError("kaput")
+        return batch
+
+    sim, asy = _run_both(lambda: _chain(op_b=boom, batch_size=1), n=4)
+    _assert_topology_parity(sim, asy)
+    for traces in (sim, asy):
+        errored = [r for r in traces if r["status"] == "error"]
+        assert len(errored) == 1
+        rec = errored[0]
+        assert "RuntimeError" in rec["error"]
+        b_exec = [sp for sp in rec["spans"]
+                  if sp["stage"] == "b" and sp["kind"] == "exec"]
+        assert "RuntimeError" in b_exec[0]["attrs"]["error"]
+        # error-terminal: b executed (and failed), c never reached
+        assert stage_path(rec) == ["a", "b"]
+
+
+def test_degraded_request_flagged_on_both_executors():
+    """A stage serving off the degradation ladder (tier ≥ 2) marks the
+    request; the tracer flags the whole trace for retention."""
+    def degrade(batch, ctx):
+        for ev in batch:
+            ev.payload["degraded_tier"] = 2
+            ev.meta["_degraded"] = True
+            annotate(ev, degraded_tier=2)
+        return batch
+
+    sim, asy = _run_both(lambda: _chain(op_b=degrade), n=4)
+    _assert_topology_parity(sim, asy)
+    for rec in sim + asy:
+        assert rec["status"] == "ok" and rec["degraded_tier"] == 2
+        b_exec = [sp for sp in rec["spans"]
+                  if sp["stage"] == "b" and sp["kind"] == "exec"]
+        assert b_exec[0]["attrs"]["degraded_tier"] == 2
+        assert stage_path(rec) == ["a", "b", "c"]           # full pipeline
+    # degraded traces land in the always-keep compartment
+    tb = TraceBuffer(max_recent=0, max_top=0)
+    for rec in sim:
+        tb.add(rec)
+    assert len(tb.traces()) == len(sim)
+
+
+def test_sim_overflow_drop_leaves_dropped_trace():
+    """Channel-overflow shedding (Sim-only overflow_policy): the dropped
+    request still yields a terminal trace, flagged for retention."""
+    g = SEDP()
+    g.add_stage("a", lambda b, c: b, batch_size=1, sim_base_s=5e-3,
+                max_queue=2)
+    plan = g.compile()
+    tr = Tracer()
+    rep = SimExecutor(plan, overflow_policy=lambda stage, ev, ctx: None,
+                      tracer=tr).run(
+        [(0.0, ev) for ev in _events(8)])
+    assert rep.dropped > 0
+    dropped = tr.buffer.find(status="dropped")
+    assert len(dropped) == rep.dropped
+    for rec in dropped:
+        assert span_topology(rec) == [("a", "queue")]
+        assert rec["spans"][0]["attrs"]["dropped"] is True
+    assert len(tr.buffer.traces()) == 8                     # none lost
+
+
+# ------------------------------------------------------- fanout propagation
+
+def test_fanout_clones_share_trace_identity():
+    ev = Event(payload={"i": 0})
+    Tracer().begin(ev, 0.0)
+    ev.meta["spans"].append({"stage": "ingress", "kind": "exec",
+                             "t0": 0.0, "t1": 1.0, "attrs": {}})
+    clone = Event(payload={"i": 0}, req_id=ev.req_id)
+    assert propagate_trace(ev, clone) is clone
+    assert clone.trace_id == ev.trace_id
+    assert clone.meta["spans"] == ev.meta["spans"]
+    clone.meta["spans"].append({"stage": "x", "kind": "exec",
+                                "t0": 1.0, "t1": 2.0, "attrs": {}})
+    assert len(ev.meta["spans"]) == 1                       # branch-private
+    untraced = Event(payload={})
+    assert "trace_id" not in propagate_trace(untraced,
+                                             Event(payload={})).meta
+
+
+def test_fanout_op_propagates_trace_to_clones():
+    """Through the real multitenant fanout on SimExecutor: every tenant
+    branch records a complete tree under ONE trace id."""
+    g = SEDP()
+    g.add_stage("fan", make_fanout_op(["t1", "t2"]), batch_size=1)
+    g.add_stage("t1", lambda b, c: b, batch_size=1, sim_base_s=1e-4)
+    g.add_stage("t2", lambda b, c: b, batch_size=1, sim_base_s=1e-4)
+    g.add_edge("fan", "t1")
+    g.add_edge("fan", "t2")
+    plan = g.compile()
+    tr = Tracer()
+    SimExecutor(plan, tracer=tr).run([(0.0, ev) for ev in _events(3)])
+    traces = tr.buffer.traces()
+    assert len(traces) == 6                                 # 3 reqs × 2 tenants
+    by_id = {}
+    for rec in traces:
+        by_id.setdefault(rec["trace_id"], []).append(rec)
+    assert len(by_id) == 3
+    for recs in by_id.values():
+        paths = sorted(stage_path(r)[-1] for r in recs)
+        assert paths == ["t1", "t2"]
+        for r in recs:
+            assert stage_path(r)[0] == "fan"                # shared prefix
+
+
+# ------------------------------------------------- buffer bounds + export
+
+def test_trace_buffer_tail_sampling_bounds():
+    tb = TraceBuffer(max_flagged=2, max_top=2, max_recent=3)
+    mk = lambda i, lat, status="ok", tier=0: {
+        "trace_id": i, "req_id": i, "born_at": 0.0, "done_at": lat,
+        "latency_s": lat, "status": status, "degraded_tier": tier,
+        "spans": []}
+    for i in range(10):
+        tb.add(mk(i, lat=float(i + 1)))
+    tb.add(mk(100, 0.1, status="error"))
+    tb.add(mk(101, 0.1, status="expired"))
+    tb.add(mk(102, 0.1, tier=2))
+    assert tb.added == 13 and tb.flagged_total == 3
+    kept = tb.traces()
+    assert len(kept) <= 2 + 2 + 3
+    flagged_ids = {r["trace_id"] for r in kept if r["status"] != "ok"
+                   or r["degraded_tier"]}
+    assert flagged_ids == {101, 102}                        # newest 2 flagged
+    ok_lat = {r["latency_s"] for r in kept if r["status"] == "ok"
+              and not r["degraded_tier"]}
+    assert {9.0, 10.0} <= ok_lat                            # top-K slowest
+    assert tb.find(degraded_tier=2)[0]["trace_id"] == 102
+    tb.clear()
+    assert tb.traces() == []
+
+
+def test_chrome_export_roundtrip_and_critical_path(tmp_path):
+    tr = Tracer()
+    SimExecutor(_chain(), tracer=tr).run(
+        [(i * 1e-3, ev) for i, ev in enumerate(_events(5))])
+    path = str(tmp_path / "trace.json")
+    doc = tr.buffer.export_chrome(path)
+    assert all(e["ph"] == "X" for e in doc["traceEvents"])
+    for back in (TraceBuffer.from_chrome(doc),
+                 TraceBuffer.from_chrome(path)):
+        orig = tr.buffer.traces()
+        assert len(back) == len(orig) == 5
+        for o, b in zip(sorted(orig, key=lambda r: r["trace_id"]), back):
+            assert span_topology(b) == span_topology(o)
+            assert b["status"] == o["status"]
+            assert b["req_id"] == o["req_id"]
+            assert b["latency_s"] == pytest.approx(o["latency_s"], abs=1e-9)
+            cp = critical_path(b)
+            assert cp["total_s"] == pytest.approx(b["latency_s"], abs=1e-9)
+            assert {seg["stage"] for seg in cp["segments"]} == {"a", "b", "c"}
+            covered = sum(seg["dur_s"] for seg in cp["segments"])
+            assert covered + cp["unattributed_s"] >= cp["total_s"] - 1e-9
