@@ -1,0 +1,437 @@
+"""Fleet-scale mesh drill: sharded cube tier + replicated scenario fleet
+under chaos (DESIGN.md §11).
+
+Three cells, three gates:
+
+  * **Exactness cell** — a 4-shard / 4-host MeshCube against a
+    single-host ParameterCube oracle, identical value-stamped delta
+    batches streaming into both, a shard host killed and revived every
+    round WHILE a mesh pin is held. Gate: every pinned mesh read is
+    BIT-IDENTICAL to the oracle at the matching frontier — across the
+    kill, through failover, zero mismatched rows.
+  * **Closed-loop fleet cell** — the SimExecutor driving a
+    ``diurnal_burst_arrivals`` workload (scaled ~100× the paper-figure
+    base rate) through N_SHARDS=4 × N_REPLICAS=3: a least-loaded
+    balancer fans arrivals across three replica chains, each fetch
+    scatter/gathers per-shard sub-batches through the ShardClient, and
+    the per-event cost is the FAN-OUT TAIL (slowest shard sub-batch).
+    The chaos drill kills a shard host (detected organically → one-strike
+    breakers → control-plane ``fail_over`` republish), overlaps a second
+    transient host outage (one shard fully dark → degraded-tier serving)
+    and a latency spike, and kills+revives one fleet replica. Gates:
+    availability ≥ 99.9% (degraded counts as answered; timeouts/errors do
+    not), and fleet p99 at 2× load ≤ 1.5× the 1× p99.
+  * **Arrival-generator cell** — the vectorized NHPP sampler vs the
+    per-event reference loop: bit-identical prefix and the wall-clock
+    rate for ~2M arrivals (the fleet cell's 100×-scale workloads are only
+    practical because of this satellite).
+
+Usage:
+    PYTHONPATH=src python benchmarks/mesh_bench.py            # full run
+    PYTHONPATH=src python benchmarks/mesh_bench.py --smoke    # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.cube import TIER_DEFAULT, ParameterCube
+from repro.core.executors import SimExecutor
+from repro.core.multitenant import make_balance_op
+from repro.core.sedp import SEDP, Event
+from repro.core.service_model import service_time_model
+from repro.data.synthetic import (diurnal_burst_arrivals,
+                                  diurnal_burst_arrivals_loop)
+from repro.faults import FaultPlan, HealthRegistry, HostFaultInjector
+from repro.mesh import (FleetBalancer, MeshCube, Replica,
+                        register_mesh_collectors)
+from repro.obs.metrics import MetricsRegistry
+
+N_SHARDS = 4
+N_HOSTS = 4
+N_REPLICAS = 3
+N_GROUPS = 3
+DIM = 8
+VOCAB = 4000
+
+# closed-loop cost model (seconds)
+INGRESS_S = 0.02e-3
+BALANCE_S = 0.01e-3
+SHARD_RPC_S = 0.25e-3        # one shard sub-batch round trip
+FAILED_SHARD_S = 1.0e-3      # a dark shard costs its probe budget
+MODEL_S = 0.2e-3
+RESPOND_S = 0.02e-3
+DEADLINE_S = 25e-3
+MAX_QUEUE = 256
+SPIKE_ADD_S = 1e-3
+
+
+def _make_mesh(rng, n_groups=N_GROUPS):
+    mesh = MeshCube(n_shards=N_SHARDS, n_hosts=N_HOSTS, replication=2,
+                    seed=0, n_servers=2, cube_replication=2, block_rows=512)
+    for g in range(n_groups):
+        mesh.load_table(g, rng.standard_normal((VOCAB, DIM)
+                                               ).astype(np.float32),
+                        raw_ids=np.arange(VOCAB))
+    return mesh
+
+
+# ---------------------------------------------------------------- cell 1
+
+def run_exactness(rounds: int = 6, round_upserts: int = 256,
+                  round_deletes: int = 32, sample: int = 512,
+                  seed: int = 0) -> dict:
+    """Mesh vs single-host oracle, bit-identical through host kills."""
+    rng = np.random.default_rng(seed)
+    mesh = _make_mesh(rng)
+    oracle = ParameterCube(n_servers=N_HOSTS, replication=2, block_rows=512)
+    rng2 = np.random.default_rng(seed)        # same tables in the oracle
+    for g in range(N_GROUPS):
+        oracle.load_table(g, rng2.standard_normal((VOCAB, DIM)
+                                                  ).astype(np.float32),
+                          raw_ids=np.arange(VOCAB))
+    reads = mismatched_rows = degraded_rows = kills = 0
+    try:
+        for r in range(rounds):
+            parts = []
+            for g in range(N_GROUPS):
+                ups = rng.choice(VOCAB, round_upserts,
+                                 replace=False).astype(np.int64)
+                rows = rng.standard_normal((round_upserts, DIM)
+                                           ).astype(np.float32)
+                dels = rng.choice(VOCAB, round_deletes,
+                                  replace=False).astype(np.int64)
+                parts.append((g, ups, rows, dels))
+            mesh.apply_batch(parts)
+            oracle.apply_batch(parts)
+            ids = rng.choice(VOCAB, sample, replace=False).astype(np.int64)
+            with mesh.pin() as pv, oracle.pin() as ov:
+                # a second batch lands on BOTH while the pins are held —
+                # the pinned frontier must not move
+                mesh.apply_batch([(0, ids[:8], np.full(
+                    (8, DIM), 99.0, np.float32), None)])
+                oracle.apply_batch([(0, ids[:8], np.full(
+                    (8, DIM), 99.0, np.float32), None)])
+                victim = f"host{r % N_HOSTS}"
+                for phase in ("healthy", "killed", "revived"):
+                    if phase == "killed":
+                        mesh.kill_host(victim)
+                        kills += 1
+                    elif phase == "revived":
+                        mesh.revive_host(victim)
+                    for g in range(N_GROUPS):
+                        got, tiers = mesh.lookup_ex(g, ids, version=pv)
+                        want, otiers = oracle.lookup_ex(g, ids, version=ov)
+                        reads += int(ids.size)
+                        eq = (got == want).all(axis=1)
+                        mismatched_rows += int((~eq).sum())
+                        # degraded = the mesh LOST a row the healthy
+                        # oracle still serves (absent/tombstoned ids
+                        # are TIER_DEFAULT on both sides — not a loss)
+                        degraded_rows += int(((tiers >= TIER_DEFAULT)
+                                              & (otiers < TIER_DEFAULT)
+                                              ).sum())
+            if (r + 1) % 3 == 0:
+                mesh.compact(max_rows_per_pass=2048)
+                oracle.compact()
+    finally:
+        mesh.shutdown()
+    return {"reads": reads, "kills": kills,
+            "mesh_versions": mesh.version,
+            "failovers": mesh.client.stats["failovers"],
+            "mismatched_rows": mismatched_rows,
+            "degraded_rows": degraded_rows,
+            "ok": mismatched_rows == 0 and degraded_rows == 0}
+
+
+# ---------------------------------------------------------------- cell 2
+
+def make_workload(n_events: int, base_qps: float, seed: int
+                  ) -> list[tuple[float, Event]]:
+    rng = np.random.default_rng(seed)
+    times = diurnal_burst_arrivals(
+        rng, n_events, base_qps, peak_mult=1.6, day_s=30.0, start_frac=0.5,
+        burst_rate_per_s=0.2, burst_mult=1.8, burst_dur_s=0.3)
+    ids = rng.integers(0, VOCAB, n_events)
+    return [(float(t), Event(payload={"id": int(i)},
+                             meta={"deadline_s": DEADLINE_S}))
+            for t, i in zip(times, ids)]
+
+
+def build_fleet_plan(mesh, bal, injector, horizon: float, chaos: bool):
+    g = SEDP()
+    state = {"failed_over": False, "replica_killed": False,
+             "replica_revived": False}
+
+    def ingress_op(batch, ctx):
+        for ev in batch:
+            ev.meta["cost_s"] = INGRESS_S
+        return batch
+
+    inner_balance = make_balance_op(bal.pick)
+
+    def balance_op(batch, ctx):
+        now = ctx.now()
+        if chaos:
+            # the fleet drill: one replica dies across the peak; its
+            # queued events still drain, post-kill arrivals go elsewhere
+            if now >= 0.45 * horizon and not state["replica_killed"]:
+                bal.kill("r1")
+                state["replica_killed"] = True
+            if now >= 0.80 * horizon and not state["replica_revived"]:
+                bal.revive("r1")
+                state["replica_revived"] = True
+        out = inner_balance(batch, ctx)
+        for ev in out:
+            ev.meta["cost_s"] = BALANCE_S
+        return out
+
+    def fetch_op(batch, ctx):
+        now = ctx.now()
+        if injector is not None:
+            injector.poll(now)
+            # control-plane failover republish shortly after the kill
+            # lands: the dead host demotes to the back of every
+            # preference list, so lookups stop paying its failed probe
+            if now >= 0.37 * horizon and not state["failed_over"]:
+                mesh.fail_over("host0")
+                state["failed_over"] = True
+        ids = np.fromiter((ev.payload["id"] for ev in batch), np.int64,
+                          len(batch))
+        rows, tiers = mesh.lookup_ex(0, ids)
+        fan = mesh.take_fanout()
+        # the batch pays the FAN-OUT TAIL: the slowest shard sub-batch
+        # (paper §4: one straggler shard gates the whole gather)
+        tail = 0.0
+        for f in fan:
+            if f["failed"] or f["host"] is None:
+                tail = max(tail, FAILED_SHARD_S)
+            else:
+                tail = max(tail, SHARD_RPC_S
+                           + mesh.hosts[f["host"]].extra_latency_s)
+        per = (tail or SHARD_RPC_S) / max(1, len(batch))
+        for ev, tier, row in zip(batch, tiers, rows):
+            ev.meta["cost_s"] = per
+            ev.payload["tier"] = int(tier)
+            ev.payload["score"] = float(row[0])
+            if tier > 0:
+                ev.meta["_degraded"] = True
+        return batch
+
+    def model_op(batch, ctx):
+        for ev in batch:
+            ev.meta["cost_s"] = MODEL_S
+        return batch
+
+    def respond_op(batch, ctx):
+        for ev in batch:
+            ev.meta["cost_s"] = RESPOND_S
+        return batch
+
+    g.add_stage("ingress", ingress_op, batch_size=16, parallelism=2,
+                max_queue=MAX_QUEUE)
+    g.add_stage("balance", balance_op, batch_size=16, parallelism=1,
+                max_queue=MAX_QUEUE)
+    g.add_edge("ingress", "balance")
+    g.add_stage("respond", respond_op, batch_size=32, parallelism=2,
+                max_queue=MAX_QUEUE)
+    for r in bal.replicas:
+        g.add_stage(r.entry, fetch_op, batch_size=8, parallelism=2,
+                    max_wait_s=1e-3, max_queue=MAX_QUEUE)
+        g.add_stage(f"model_{r.name}", model_op, batch_size=16,
+                    parallelism=2, max_wait_s=2e-3, max_queue=MAX_QUEUE)
+        g.add_edge("balance", r.entry)
+        g.add_edge(r.entry, f"model_{r.name}")
+        g.add_edge(f"model_{r.name}", "respond")
+    return g.compile()
+
+
+def run_closed_loop(n_events: int, base_qps: float, chaos: bool,
+                    seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed + 1)
+    mesh = _make_mesh(rng, n_groups=1)
+    arrivals = make_workload(n_events, base_qps, seed)
+    horizon = arrivals[-1][0]
+    injector = None
+    if chaos:
+        # host0 hard-killed across the peak; host1 transiently dark on
+        # top of it (shard 0 = hosts {0,1} fully dark → degraded tier);
+        # host2 latency-spiked (the fan-out-tail straggler)
+        plan = (FaultPlan()
+                .kill(0, 0.35 * horizon, revive_at=0.70 * horizon)
+                .unavailable(1, 0.50 * horizon,
+                             duration_s=0.10 * horizon)
+                .latency_spike(2, 0.40 * horizon,
+                               duration_s=0.25 * horizon,
+                               add_s=SPIKE_ADD_S))
+        injector = HostFaultInjector(mesh, plan)
+    bal = FleetBalancer([Replica(f"r{i}", f"fetch_r{i}")
+                         for i in range(N_REPLICAS)])
+    ex_plan = build_fleet_plan(mesh, bal, injector, horizon, chaos)
+    ex = SimExecutor(ex_plan, service_time=service_time_model)
+    registry = HealthRegistry.for_mesh(
+        mesh.router.topology.hosts, N_SHARDS, clock=ex.ctx.now,
+        failure_threshold=2, cooldown_s=0.5)
+    mesh.attach_health(registry)
+    try:
+        rep = ex.run(arrivals)
+        if injector is not None:
+            injector.drain()
+        answered = [ev for ev in rep.results
+                    if not ev.meta.get("timed_out")
+                    and "error" not in ev.meta]
+        tiers = np.array([ev.payload.get("tier", 0) for ev in answered])
+        lat = np.sort([ev.done_at - ev.born_at for ev, t in
+                       zip(answered, tiers) if t == 0])
+        mreg = MetricsRegistry()
+        register_mesh_collectors(mreg, mesh=mesh, fleet=bal)
+        out = {
+            "chaos": chaos, "base_qps": base_qps, "offered": rep.offered,
+            "completed": len(rep.results), "answered": len(answered),
+            "answered_frac": len(answered) / max(1, rep.offered),
+            "timed_out": rep.expired, "errors": rep.errors,
+            "dropped": rep.dropped,
+            "degraded": {int(t): int(n) for t, n in
+                         zip(*np.unique(tiers, return_counts=True))},
+            "p50_ms": float(lat[int(0.50 * (len(lat) - 1))]) * 1e3,
+            "p99_nondegraded_ms":
+                float(lat[int(0.99 * (len(lat) - 1))]) * 1e3,
+            "client": dict(mesh.client.stats),
+            "topology_version": mesh.router.topology.version,
+            "replicas": bal.snapshot(), "unroutable": bal.unroutable,
+            "breaker": {
+                "opens": sum(b.opens for b in registry.servers),
+                "closes": sum(b.closes for b in registry.servers),
+                "skipped": registry.total_skipped},
+            "metrics": {k: v for k, v in mreg.snapshot().items()
+                        if "mesh_" in k or "fleet_" in k},
+        }
+        if injector is not None:
+            out["faults_applied"] = len(injector.applied)
+        return out
+    finally:
+        mesh.shutdown()
+
+
+# ---------------------------------------------------------------- cell 3
+
+def run_arrivals(n_events: int, seed: int = 0) -> dict:
+    """Vectorized NHPP sampler: parity prefix vs the loop + throughput."""
+    kw = dict(base_qps=2500.0, peak_mult=1.6, day_s=30.0, start_frac=0.5,
+              burst_rate_per_s=0.2, burst_mult=1.8, burst_dur_s=0.3)
+    n_ref = min(n_events, 50_000)
+    fast_ref = diurnal_burst_arrivals(np.random.default_rng(seed),
+                                      n_ref, **kw)
+    slow_ref = diurnal_burst_arrivals_loop(np.random.default_rng(seed),
+                                           n_ref, **kw)
+    exact = bool(np.array_equal(fast_ref, slow_ref))
+    t0 = time.perf_counter()
+    out = diurnal_burst_arrivals(np.random.default_rng(seed), n_events, **kw)
+    t_fast = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    diurnal_burst_arrivals_loop(np.random.default_rng(seed), n_ref, **kw)
+    t_loop_ref = time.perf_counter() - t0
+    return {"n_events": n_events, "bit_identical_prefix": exact,
+            "prefix_n": n_ref, "sorted": bool(np.all(np.diff(out) >= 0)),
+            "vectorized_s": t_fast,
+            "vectorized_events_per_s": n_events / max(t_fast, 1e-9),
+            "loop_events_per_s": n_ref / max(t_loop_ref, 1e-9),
+            "speedup": (n_events / max(t_fast, 1e-9))
+            / max(n_ref / max(t_loop_ref, 1e-9), 1e-9)}
+
+
+# ------------------------------------------------------------------ main
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--events", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-assert", action="store_true")
+    args = ap.parse_args()
+    n_events = args.events or (1200 if args.smoke else 6000)
+    rounds = 3 if args.smoke else 6
+    arrival_n = 200_000 if args.smoke else 2_000_000
+
+    g1 = run_exactness(rounds=rounds, seed=args.seed)
+    print(f"exactness cell: {g1['reads']} pinned mesh reads across "
+          f"{g1['kills']} host kills / {g1['failovers']} failovers — "
+          f"mismatched={g1['mismatched_rows']} "
+          f"degraded={g1['degraded_rows']} ok={g1['ok']}")
+
+    one_x = run_closed_loop(n_events, base_qps=2500.0, chaos=False,
+                            seed=args.seed)
+    two_x = run_closed_loop(n_events, base_qps=5000.0, chaos=False,
+                            seed=args.seed)
+    drill = run_closed_loop(n_events, base_qps=2500.0, chaos=True,
+                            seed=args.seed)
+    for tag, r in (("fleet 1x", one_x), ("fleet 2x", two_x),
+                   ("chaos", drill)):
+        print(f"  {tag:>9}: answered={r['answered_frac']:.4%} "
+              f"timeouts={r['timed_out']} "
+              f"degraded={ {k: v for k, v in r['degraded'].items() if k} } "
+              f"p99={r['p99_nondegraded_ms']:.2f}ms "
+              f"failovers={r['client']['failovers']} "
+              f"breaker_opens={r['breaker']['opens']} "
+              f"unroutable={r['unroutable']}")
+
+    arr = run_arrivals(arrival_n, seed=args.seed)
+    print(f"arrivals cell: {arr['n_events']} events "
+          f"{arr['vectorized_events_per_s'] / 1e6:.2f}M/s vectorized "
+          f"(loop {arr['loop_events_per_s'] / 1e3:.0f}k/s, "
+          f"{arr['speedup']:.0f}x) "
+          f"bit_identical_prefix={arr['bit_identical_prefix']}")
+
+    summary = {
+        "exact_vs_oracle_ok": g1["ok"],
+        "answered_frac": drill["answered_frac"],
+        "p99_ratio_2x_vs_1x": two_x["p99_nondegraded_ms"]
+        / max(one_x["p99_nondegraded_ms"], 1e-9),
+        "degraded_served": sum(v for k, v in drill["degraded"].items()
+                               if k > 0),
+        "breaker_opens": drill["breaker"]["opens"],
+        "replica_drained": drill["replicas"]["r1"]["routed"]
+        < min(drill["replicas"][r]["routed"] for r in ("r0", "r2")),
+        "arrivals_bit_identical": arr["bit_identical_prefix"],
+    }
+    print("mesh summary: "
+          + " ".join(f"{k}={v:.4f}" if isinstance(v, float) else f"{k}={v}"
+                     for k, v in summary.items()))
+
+    os.makedirs("artifacts/bench", exist_ok=True)
+    path = os.path.join("artifacts", "bench", "mesh_fleet.json")
+    with open(path, "w") as f:
+        json.dump({"config": {"n_events": n_events, "seed": args.seed,
+                              "smoke": args.smoke, "n_shards": N_SHARDS,
+                              "n_hosts": N_HOSTS, "n_replicas": N_REPLICAS,
+                              "deadline_s": DEADLINE_S},
+                   "exactness": g1, "fleet_1x": one_x, "fleet_2x": two_x,
+                   "drill": drill, "arrivals": arr, "summary": summary},
+                  f, indent=1)
+    print(f"wrote {path}")
+
+    if not args.no_assert:
+        assert summary["exact_vs_oracle_ok"], \
+            f"mesh reads diverged from the oracle: {g1}"
+        assert summary["answered_frac"] >= 0.999, \
+            f"availability below 99.9%: {summary['answered_frac']:.4%}"
+        assert summary["p99_ratio_2x_vs_1x"] <= 1.5, \
+            f"fleet p99 at 2x blew past 1.5x of 1x: " \
+            f"{summary['p99_ratio_2x_vs_1x']:.2f}"
+        assert summary["degraded_served"] > 0, \
+            "drill never exercised the degradation ladder"
+        assert summary["breaker_opens"] > 0, \
+            "drill never opened a host breaker"
+        assert summary["replica_drained"], \
+            f"killed replica was not drained: {drill['replicas']}"
+        assert summary["arrivals_bit_identical"], \
+            "vectorized arrivals diverged from the reference loop"
+        print("mesh fleet assertions passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -92,6 +92,24 @@ def main() -> None:
                ch_drill["p99_nondegraded_ms"]
                / max(ch_base["p99_nondegraded_ms"], 1e-9)))
 
+    from benchmarks import mesh_bench
+
+    t0 = time.time()
+    m1 = mesh_bench.run_exactness(rounds=3 if quick else 6)
+    m_1x = mesh_bench.run_closed_loop(
+        1200 if quick else 6000, base_qps=2500.0, chaos=False)
+    m_2x = mesh_bench.run_closed_loop(
+        1200 if quick else 6000, base_qps=5000.0, chaos=False)
+    m_drill = mesh_bench.run_closed_loop(
+        1200 if quick else 6000, base_qps=2500.0, chaos=True)
+    record("mesh_fleet", {"exactness": m1, "fleet_1x": m_1x,
+                          "fleet_2x": m_2x, "drill": m_drill},
+           us=(time.time() - t0) * 1e6,
+           derived="exact={} answered={:.4f} p99_2x/1x={:.2f}".format(
+               m1["ok"], m_drill["answered_frac"],
+               m_2x["p99_nondegraded_ms"]
+               / max(m_1x["p99_nondegraded_ms"], 1e-9)))
+
     from benchmarks import recovery_bench
 
     t0 = time.time()

@@ -181,7 +181,10 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-assert", action="store_true")
     args = ap.parse_args()
-    n_events = args.events or (1500 if args.smoke else 6000)
+    # horizon long enough for the shed-OFF runaway queue to separate from
+    # the shed-ON bound on the sub-streamed arrival process (growth is
+    # horizon-dependent; the gate thresholds are absolute)
+    n_events = args.events or (3000 if args.smoke else 9000)
     train_kw = (dict(n_samples=300, steps=400) if args.smoke
                 else dict(n_samples=800, steps=2000))
 

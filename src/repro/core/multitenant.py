@@ -57,6 +57,29 @@ def make_dispatch_op(split: TrafficSplit, key: str = "user") -> Callable:
     return op
 
 
+def make_balance_op(pick: Callable, on_unroutable: str = "error") -> Callable:
+    """Replica-fleet dispatch (DESIGN.md §11.4): route each event to the
+    entry stage chosen by ``pick(ev, ctx) -> Optional[str]`` — the fleet
+    balancer's least-loaded/health-aware policy. ``pick`` returning None
+    means no live replica: the event is terminal-errored (``error``) or
+    left on its default route (``passthrough``) per ``on_unroutable``."""
+    def op(batch: list[Event], ctx):
+        out = []
+        for ev in batch:
+            target = pick(ev, ctx)
+            if target is None:
+                if on_unroutable == "error":
+                    ev.meta["error"] = "no live replica"
+                    ev.meta["_terminal"] = True
+                out.append(ev)
+                continue
+            ev.route = target
+            ev.meta["replica"] = target
+            out.append(ev)
+        return out
+    return op
+
+
 def make_fanout_op(targets: list[str],
                    priorities: Optional[dict[str, int]] = None,
                    quota_fn: Optional[Callable] = None,

@@ -42,6 +42,20 @@ def recsys_batch(rng: np.random.Generator, cfg: RecsysConfig, batch: int) -> dic
     return b
 
 
+def _arrival_streams(rng: np.random.Generator):
+    """Derive the three independent sub-streams the NHPP sampler uses:
+    candidate gaps, burst-window starts, accept draws. Splitting them is
+    what makes the vectorized and per-event implementations bit-identical:
+    batched draws from one Generator equal the same draws made one at a
+    time, and with separate streams the interleaving ORDER between
+    candidates/bursts/accepts stops mattering — including the overshoot
+    candidates a chunked sampler draws and discards."""
+    seeds = rng.integers(0, np.iinfo(np.int64).max, size=3)
+    return (np.random.default_rng(int(seeds[0])),
+            np.random.default_rng(int(seeds[1])),
+            np.random.default_rng(int(seeds[2])))
+
+
 def diurnal_burst_arrivals(rng: np.random.Generator, n_events: int,
                            base_qps: float, peak_mult: float = 3.0,
                            day_s: float = 86400.0, start_frac: float = 0.5,
@@ -62,27 +76,89 @@ def diurnal_burst_arrivals(rng: np.random.Generator, n_events: int,
         multiply the instantaneous rate by ``burst_mult`` for
         ``burst_dur_s`` seconds (flash-crowd spikes).
 
+    Vectorized chunked thinning — candidate times, burst membership, and
+    accept draws all evaluate as arrays, so the 100×-scale mesh bench can
+    generate millions of arrivals in seconds. Bit-identical to the
+    per-event reference (:func:`diurnal_burst_arrivals_loop`) at a fixed
+    seed: both derive the same three sub-streams and consume each
+    identically per candidate/burst/accept.
+
     Returns sorted arrival times (seconds, t=0 origin), seeded and
     deterministic per ``rng``.
     """
+    arr_rng, burst_rng, acc_rng = _arrival_streams(rng)
+    lam_max = base_qps * max(1.0, peak_mult) * (
+        max(1.0, burst_mult) if burst_rate_per_s > 0 else 1.0)
+    # accept probability averages lam_mean/lam_max — size chunks so the
+    # expected number of rounds is ~1-2 even for burst-heavy configs
+    mean_accept = max(1e-3, 0.5 * (1.0 + peak_mult) * base_qps / lam_max)
+    out: list[np.ndarray] = []
+    got = 0
+    t0 = 0.0
+    b_starts = np.empty(0)       # burst-window starts drawn so far
+    b_cursor = 0.0               # sum of burst gaps drawn so far
+    two_pi = 2.0 * np.pi
+    while got < n_events:
+        need = n_events - got
+        chunk = max(1024, int(need / mean_accept * 1.1) + 16)
+        gaps = arr_rng.exponential(1.0 / lam_max, size=chunk)
+        # cumsum seeded with t0 reproduces the loop's ((t0+g1)+g2)+...
+        # association exactly — `t0 + cumsum(gaps)` would round differently
+        ts = np.cumsum(np.concatenate(([t0], gaps)))[1:]
+        t0 = float(ts[-1])
+        phase = np.cos((start_frac + ts / day_s) * two_pi)
+        lam = base_qps * (1.0 + (peak_mult - 1.0) * 0.5 * (1.0 + phase))
+        if burst_rate_per_s > 0:
+            while b_cursor <= t0:    # extend burst starts past the chunk
+                gaps = burst_rng.exponential(1.0 / burst_rate_per_s,
+                                             size=max(chunk // 16, 64))
+                ext = b_cursor + np.cumsum(gaps)
+                b_starts = np.concatenate([b_starts, ext])
+                b_cursor = float(ext[-1])
+            # constant burst_dur_s ⇒ window ends increase with starts, so
+            # the loop's running-max burst_end reduces to "the latest
+            # start ≤ t still covers t"
+            idx = np.searchsorted(b_starts, ts, side="right") - 1
+            in_burst = (idx >= 0) & (ts < b_starts[np.maximum(idx, 0)]
+                                     + burst_dur_s)
+            lam = np.where(in_burst, lam * burst_mult, lam)
+        accept = acc_rng.random(chunk) < lam / lam_max
+        sel = ts[accept]
+        out.append(sel[:need])
+        got += min(len(sel), need)
+    return np.concatenate(out)[:n_events]
+
+
+def diurnal_burst_arrivals_loop(rng: np.random.Generator, n_events: int,
+                                base_qps: float, peak_mult: float = 3.0,
+                                day_s: float = 86400.0,
+                                start_frac: float = 0.5,
+                                burst_rate_per_s: float = 0.0,
+                                burst_mult: float = 3.0,
+                                burst_dur_s: float = 0.5) -> np.ndarray:
+    """Per-event reference implementation of
+    :func:`diurnal_burst_arrivals` (the original Lewis-thinning loop,
+    restructured onto the same three derived sub-streams). Kept as the
+    parity oracle: the vectorized sampler must match it bit-for-bit."""
+    arr_rng, burst_rng, acc_rng = _arrival_streams(rng)
     lam_max = base_qps * max(1.0, peak_mult) * (
         max(1.0, burst_mult) if burst_rate_per_s > 0 else 1.0)
     times = np.empty(n_events)
     t = 0.0
-    next_burst = (rng.exponential(1.0 / burst_rate_per_s)
+    next_burst = (burst_rng.exponential(1.0 / burst_rate_per_s)
                   if burst_rate_per_s > 0 else np.inf)
     burst_end = -np.inf
     k = 0
     while k < n_events:
-        t += rng.exponential(1.0 / lam_max)
+        t += arr_rng.exponential(1.0 / lam_max)
         while t >= next_burst:
             burst_end = max(burst_end, next_burst + burst_dur_s)
-            next_burst += rng.exponential(1.0 / burst_rate_per_s)
+            next_burst += burst_rng.exponential(1.0 / burst_rate_per_s)
         phase = np.cos((start_frac + t / day_s) * 2.0 * np.pi)
         lam = base_qps * (1.0 + (peak_mult - 1.0) * 0.5 * (1.0 + phase))
         if t < burst_end:
             lam *= burst_mult
-        if rng.random() < lam / lam_max:
+        if acc_rng.random() < lam / lam_max:
             times[k] = t
             k += 1
     return times

@@ -19,10 +19,11 @@ from repro.faults.crash import (SimulatedCrash, arm, crash_point,
                                 disarm_all)
 from repro.faults.health import (BREAKER_CLOSED, BREAKER_HALF_OPEN,
                                  BREAKER_OPEN, HealthRegistry, ServerHealth)
-from repro.faults.plan import FaultEvent, FaultInjector, FaultPlan
+from repro.faults.plan import (FaultEvent, FaultInjector, FaultPlan,
+                               HostFaultInjector)
 
 __all__ = [
-    "FaultEvent", "FaultInjector", "FaultPlan",
+    "FaultEvent", "FaultInjector", "FaultPlan", "HostFaultInjector",
     "ServerHealth", "HealthRegistry",
     "BREAKER_CLOSED", "BREAKER_OPEN", "BREAKER_HALF_OPEN",
     "SimulatedCrash", "arm", "crash_point", "disarm_all",

@@ -84,25 +84,73 @@ class ServerHealth:
                 self.state = BREAKER_OPEN
                 self.opened_at = now
 
+    def trip(self, now: float):
+        """Force-open without paying ``failure_threshold`` probes — the
+        fleet-wide verdict path: when a HOST is found dead, every breaker
+        it backs opens at once (one strike total, DESIGN.md §11.5), not
+        one failure-threshold run per shard."""
+        with self._lock:
+            self.consecutive_failures = max(self.consecutive_failures,
+                                            self.failure_threshold)
+            self._probe_out = False
+            if self.state != BREAKER_OPEN:
+                self.opens += 1
+            self.state = BREAKER_OPEN
+            self.opened_at = now
+
 
 class HealthRegistry:
-    """One breaker per cube server plus the clock they share.
+    """Breakers keyed by serving endpoint, plus the clock they share.
+
+    Historically one breaker per in-process cube server, keyed by index
+    (``n_servers=...``); the mesh generalizes keys to ``(host, server)``
+    tuples (``keys=[...]``) so a host-level failure can open all of the
+    host's breakers with ONE strike (``record_host_failure``). The
+    positional ``servers`` list survives in key order — the cube's
+    ``_alive_mask`` indexes it positionally.
 
     ``clock`` defaults to ``time.monotonic``; benchmarks running on a
     virtual clock pass their own callable (``lambda: sim_now``). Attach to
-    a cube with ``ParameterCube.attach_health``."""
+    a cube with ``ParameterCube.attach_health`` or a mesh with
+    ``MeshCube.attach_health``."""
 
-    def __init__(self, n_servers: int, clock: Optional[Callable] = None,
-                 failure_threshold: int = 3, cooldown_s: float = 1.0):
+    def __init__(self, n_servers: Optional[int] = None,
+                 clock: Optional[Callable] = None,
+                 failure_threshold: int = 3, cooldown_s: float = 1.0,
+                 keys: Optional[list] = None):
+        assert (n_servers is None) != (keys is None), \
+            "pass exactly one of n_servers / keys"
         self.clock = clock or time.monotonic
-        self.servers = [ServerHealth(failure_threshold, cooldown_s)
-                        for _ in range(n_servers)]
+        self.keys = list(keys) if keys is not None else list(range(n_servers))
+        self._breakers = {k: ServerHealth(failure_threshold, cooldown_s)
+                          for k in self.keys}
+        # positional view in key order — legacy int-keyed callers
+        # (cube._alive_mask) index this directly
+        self.servers = [self._breakers[k] for k in self.keys]
 
-    def __getitem__(self, sid: int) -> ServerHealth:
-        return self.servers[sid]
+    @classmethod
+    def for_mesh(cls, hosts, n_shards: int, **kw) -> "HealthRegistry":
+        """One breaker per (host, shard) pair of a mesh topology."""
+        return cls(keys=[(h, s) for h in hosts for s in range(n_shards)],
+                   **kw)
+
+    def __getitem__(self, key) -> ServerHealth:
+        return self._breakers[key]
 
     def __len__(self) -> int:
         return len(self.servers)
+
+    def record_host_failure(self, host, now: Optional[float] = None):
+        """One dead host = one strike: trip every breaker whose key names
+        ``host`` (tuple keys with ``key[0] == host``)."""
+        now = self.clock() if now is None else now
+        for k, b in self._breakers.items():
+            if isinstance(k, tuple) and k and k[0] == host:
+                b.trip(now)
+
+    def host_states(self, host) -> dict:
+        return {k: b.state for k, b in self._breakers.items()
+                if isinstance(k, tuple) and k and k[0] == host}
 
     def states(self) -> list[str]:
         return [h.state for h in self.servers]

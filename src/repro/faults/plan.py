@@ -162,3 +162,28 @@ class FaultInjector:
             srv.extra_latency_s = 0.0 if recovering else e.amount
         elif e.kind == "slow_disk":
             srv.disk_latency_mult = 1.0 if recovering else e.amount
+
+
+class HostFaultInjector(FaultInjector):
+    """The same schedule machinery one level up: events target MESH HOSTS
+    (``FaultEvent.server`` indexes ``mesh.host_list``) instead of
+    in-process cube servers. Kills flip the host's ``alive`` flag —
+    detection happens organically: the next lookup's failed probe raises
+    ``HostDown``, the ShardClient records ONE host-level strike (opening
+    every (host, *) breaker) and fails over along the topology's
+    preference order. ``slow_disk`` has no host-level analogue and maps
+    to a latency spike of ``amount`` milliseconds-scale seconds."""
+
+    def __init__(self, mesh, plan: FaultPlan):
+        super().__init__(mesh, plan)
+        self.mesh = mesh
+
+    def _apply(self, e: FaultEvent, recovering: bool):
+        host = self.mesh.host_list[e.server]
+        if e.kind in ("kill", "unavailable"):
+            if recovering:
+                self.mesh.revive_host(host.host_id)
+            else:
+                self.mesh.kill_host(host.host_id)
+        elif e.kind in ("latency_spike", "slow_disk"):
+            host.extra_latency_s = 0.0 if recovering else e.amount

@@ -17,12 +17,14 @@ from repro.obs.log import CapturingHandler, log_event  # noqa: F401
 from repro.obs.metrics import (DEFAULT, BUCKET_BOUNDS, Counter,  # noqa: F401
                                Gauge, Histogram, MetricsRegistry,
                                get_registry)
-from repro.obs.trace import (TraceBuffer, Tracer, annotate,  # noqa: F401
-                             critical_path, span_topology, stage_path)
+from repro.obs.trace import (TraceBuffer, Tracer, add_child_spans,  # noqa: F401
+                             annotate, critical_path, shard_fanout_spans,
+                             shard_profile, span_topology, stage_path)
 
 __all__ = [
     "DEFAULT", "BUCKET_BOUNDS", "Counter", "Gauge", "Histogram",
     "MetricsRegistry", "get_registry", "Tracer", "TraceBuffer", "annotate",
+    "add_child_spans", "shard_fanout_spans", "shard_profile",
     "critical_path", "span_topology", "stage_path", "log_event",
     "CapturingHandler", "bridge", "StatsRecorder", "read_history",
 ]

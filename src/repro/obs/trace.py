@@ -36,6 +36,47 @@ def annotate(ev, **attrs) -> None:
         spans[-1]["attrs"].update(attrs)
 
 
+def add_child_spans(ev, child_spans) -> None:
+    """Attach pre-built child spans (e.g. the mesh's per-shard
+    ``shard_fetch`` sub-batches) to a traced event's current stage visit.
+
+    Children are inserted BEFORE the currently-open ``exec`` span rather
+    than appended: ``Tracer.exec_end`` closes ``spans[-1]`` only if it is
+    the exec span, and ``annotate`` targets ``spans[-1]`` — appending
+    would orphan the stage's own span. No-op on untraced events."""
+    spans = ev.meta.get("spans")
+    if not spans or not child_spans:
+        return
+    if spans[-1]["kind"] == "exec":
+        spans[-1:-1] = child_spans
+    else:
+        spans.extend(child_spans)
+
+
+def shard_fanout_spans(fanout: list) -> list:
+    """Build the ``shard_fanout`` span family from a MeshCube fan-out
+    record list (``take_fanout()``): one ``cube:shard_fanout`` parent
+    covering the scatter/gather envelope plus one ``shard_<s>:shard_fetch``
+    child per sub-batch. The spans travel through Chrome export like any
+    other (kind rides in the ``stage:kind`` name), so ``critical_path`` /
+    ``shard_profile`` attribute tail latency to the slowest shard from an
+    exported trace alone."""
+    if not fanout:
+        return []
+    t0 = min(f["t0"] for f in fanout)
+    t1 = max(f["t1"] for f in fanout)
+    spans = [{"stage": "cube", "kind": "shard_fanout", "t0": t0, "t1": t1,
+              "attrs": {"n_shards": len(fanout)}}]
+    for f in fanout:
+        spans.append({"stage": f"shard_{f['shard']}", "kind": "shard_fetch",
+                      "t0": f["t0"], "t1": f["t1"],
+                      "attrs": {"shard": f["shard"], "host": f["host"],
+                                "n_keys": f["n_keys"],
+                                "hedged": f["hedged"],
+                                "failed": f["failed"]}})
+    return spans
+
+
 def _status_of(ev) -> str:
     if ev.meta.get("error"):
         return "error"
@@ -307,3 +348,33 @@ def critical_path(rec: dict) -> dict:
     segments.sort(key=lambda seg: -seg["dur_s"])
     return {"total_s": total, "segments": segments,
             "unattributed_s": max(0.0, total - covered)}
+
+
+def shard_profile(rec: dict) -> dict:
+    """Per-shard time of one trace from its ``shard_fetch`` child spans:
+    ``{shard_id: {"dur_s", "n_fetches", "hosts", "hedged"}}``. The hot
+    shard — the fan-out straggler the request's tail hides behind — is
+    ``max(profile, key=lambda s: profile[s]["dur_s"])``. Works on live
+    records and on ``from_chrome`` reconstructions alike (shard ids
+    recover from the span attrs / stage name)."""
+    out: dict[int, dict] = {}
+    for sp in rec["spans"]:
+        if sp["kind"] != "shard_fetch":
+            continue
+        attrs = sp.get("attrs", {})
+        sid = attrs.get("shard")
+        if sid is None:
+            try:
+                sid = int(sp["stage"].rpartition("_")[2])
+            except ValueError:
+                continue
+        sid = int(sid)
+        ent = out.setdefault(sid, {"dur_s": 0.0, "n_fetches": 0,
+                                   "hosts": set(), "hedged": 0})
+        ent["dur_s"] += max(0.0, sp["t1"] - sp["t0"])
+        ent["n_fetches"] += 1
+        if attrs.get("host") is not None:
+            ent["hosts"].add(attrs["host"])
+        if attrs.get("hedged"):
+            ent["hedged"] += 1
+    return out

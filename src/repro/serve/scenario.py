@@ -230,6 +230,9 @@ class ServingSubstrate:
                  compact_after_blocks: int = 64,
                  compact_max_rows_per_pass: Optional[int] = None,
                  reverse_map_items: int = 65536, seed: int = 0,
+                 mesh_shards: int = 0, mesh_hosts: int = 0,
+                 mesh_replication: int = 2,
+                 mesh_hedge_after_s: Optional[float] = None,
                  _cube: Optional[ParameterCube] = None):
         self.tail_dim = tail_dim
         self.cube_cache_ratio = cube_cache_ratio
@@ -239,10 +242,24 @@ class ServingSubstrate:
         self.cube_cache = TwoTierLFUCache(0, 0)
         # ``_cube`` is the recovery path's injection point (a cube rebuilt
         # from a snapshot replaces the fresh one) — :meth:`recover` is the
-        # public surface
-        self.cube = _cube if _cube is not None else ParameterCube(
-            n_servers=n_servers, replication=replication,
-            block_rows=block_rows)
+        # public surface. ``mesh_shards > 0`` builds the scale-out tier
+        # instead (DESIGN.md §11): a MeshCube duck-types the cube surface,
+        # so every stage/cache/update path below runs unchanged.
+        if _cube is not None:
+            self.cube = _cube
+        elif mesh_shards > 0:
+            from repro.mesh import MeshCube
+            self.cube = MeshCube(
+                n_shards=mesh_shards,
+                n_hosts=mesh_hosts or mesh_shards,
+                replication=mesh_replication, seed=seed,
+                hedge_after_s=mesh_hedge_after_s,
+                n_servers=n_servers, cube_replication=replication,
+                block_rows=block_rows)
+        else:
+            self.cube = ParameterCube(
+                n_servers=n_servers, replication=replication,
+                block_rows=block_rows)
         # warm-up state (DESIGN.md §9): while True, CubeFetchStage floors
         # every fetch at the stale-cache degradation tier and the quota
         # controllers shed against the warm-up quota; cleared once delta

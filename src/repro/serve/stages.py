@@ -26,7 +26,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.obs.trace import annotate
+from repro.obs.trace import add_child_spans, annotate, shard_fanout_spans
 from repro.core.cube import (TIER_DEFAULT, TIER_PRIMARY, TIER_REPLICA,
                              TIER_STALE_CACHE)
 from repro.sparse.hashing import hash_bucket_np
@@ -444,6 +444,19 @@ class CubeFetchStage(Stage):
                          degraded_tier=int(tier))
                 if tier > TIER_PRIMARY:
                     ev.meta["_degraded"] = True
+            if getattr(sub.cube, "is_mesh", False):
+                # attach this batch's shard scatter/gather as child spans
+                # (one shard_fanout parent + one shard_fetch per shard
+                # sub-batch) to every traced event — `critical_path` /
+                # `shard_profile` then attribute the fetch tail to the
+                # slowest shard. Inserted before the open exec span; each
+                # event gets its own copies.
+                fan = sub.cube.take_fanout()
+                if fan:
+                    proto = shard_fanout_spans(fan)
+                    for ev in batch:
+                        add_child_spans(ev, [dict(s, attrs=dict(s["attrs"]))
+                                             for s in proto])
         # post-fetch deadline check: a fetch that burned the whole budget
         # on breaker probes / slow disk marks the event now, so the NEXT
         # dispatch sheds it before it ever occupies the model stage

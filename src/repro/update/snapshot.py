@@ -69,12 +69,21 @@ _PREFIX = "snap_"
 _CHECKSUMS = "CHECKSUMS"
 _AUX_CHECKSUMS = "AUX_CHECKSUMS"
 _AUX_FILES = ("aux.json",)
+# sharded (mesh) snapshots publish behind their own marker pair —
+# deliberately NOT "DONE", so legacy single-cube listing/recovery treats
+# a sharded snapshot as unpublished and skips it instead of half-loading
+_MESH_DONE = "MESH_DONE"
+_MESH_CHECKSUMS = "MESH_CHECKSUMS"
+_SHARD_PREFIX = "shard_"
 
 __all__ = [
     "SnapshotIntegrityError", "snapshot_path", "write_cube_snapshot",
     "write_aux_state", "verify_snapshot", "load_cube_snapshot",
     "load_aux_state", "list_snapshots", "latest_valid_snapshot",
     "prune_snapshots", "prune_delta_log", "CubeSnapshotter",
+    "write_sharded_snapshot", "verify_sharded_snapshot",
+    "load_sharded_snapshot", "list_sharded_snapshots",
+    "latest_valid_sharded_snapshot",
 ]
 
 
@@ -110,17 +119,31 @@ def write_cube_snapshot(snapshot_dir: str, cube, pv, delta_version: int,
     before any file is replaced), mirroring ``write_delta``'s re-emit
     discipline. Returns the snapshot directory."""
     path = snapshot_path(snapshot_dir, delta_version)
+    _unpublish(path)
+    _write_snapshot_files(path, cube, pv, delta_version,
+                          groups=groups, extra_meta=extra_meta)
+    return path
+
+
+def _unpublish(path: str):
+    """Remove a snapshot dir marker-first: a reader listing mid-rewrite
+    must see an unpublished directory, never a published one being
+    replaced."""
     if os.path.exists(path):
-        # unpublish-first: a reader listing mid-rewrite must see an
-        # unpublished directory, never a published one being replaced
-        for marker in ("AUX_DONE", "DONE", _AUX_CHECKSUMS, _CHECKSUMS):
+        for marker in ("AUX_DONE", "DONE", _MESH_DONE, _AUX_CHECKSUMS,
+                       _CHECKSUMS, _MESH_CHECKSUMS):
             try:
                 os.remove(os.path.join(path, marker))
             except OSError:
                 pass
         shutil.rmtree(path, ignore_errors=True)
-    os.makedirs(path, exist_ok=True)
 
+
+def _write_snapshot_files(path: str, cube, pv, delta_version: int,
+                          groups=(), extra_meta: Optional[dict] = None):
+    """One cube's snapshot payload into ``path`` (data → CHECKSUMS →
+    DONE last). Shared by the single-cube and per-shard writers."""
+    os.makedirs(path, exist_ok=True)
     ver, psigs, psrv, pblk, poff = pv.snap
     meta = {
         "format": 1,
@@ -381,6 +404,141 @@ def latest_valid_snapshot(snapshot_dir: str) -> Optional[str]:
     return None
 
 
+# ------------------------------------------------------ sharded snapshots
+
+def write_sharded_snapshot(snapshot_dir: str, mesh, record,
+                           delta_version: int, groups=(),
+                           extra_meta: Optional[dict] = None) -> str:
+    """Capture a sharded (mesh) cube: ``snap_<v>/shard_<s>/`` — each shard
+    serialized with the single-cube discipline (its own meta/CHECKSUMS/
+    DONE) at the shard version pinned by ``record`` (a MeshCube's
+    ``_MeshRecord``: one cross-shard frontier, so the snapshot is
+    batch-atomic across shards exactly like a pinned read). A top-level
+    ``mesh_meta.json`` records the per-shard cursor map + topology, and
+    ``MESH_DONE`` publishes LAST. The marker is deliberately not ``DONE``:
+    legacy single-cube recovery sees an unpublished dir and skips it.
+
+    This is the item-5 hook: a mesh restart = per-shard restore from the
+    shard cursors + delta-log replay from ``delta_version + 1``."""
+    path = snapshot_path(snapshot_dir, delta_version)
+    _unpublish(path)
+    os.makedirs(path, exist_ok=True)
+    for s, (shard, pin) in enumerate(zip(mesh.shards, record.shard_pins)):
+        _write_snapshot_files(os.path.join(path, f"{_SHARD_PREFIX}{s}"),
+                              shard, pin, delta_version,
+                              groups=groups, extra_meta=extra_meta)
+    topo = mesh.router.topology
+    meta = {
+        "format": 1,
+        "n_shards": int(mesh.n_shards),
+        "mesh_version": int(record.version),
+        "delta_version": int(delta_version),
+        # per-shard cursor: the shard-local cube version each shard_<s>/
+        # captures — the coordinate a per-shard replayer resumes from
+        "shard_cursors": {str(s): int(p.version)
+                          for s, p in enumerate(record.shard_pins)},
+        "topology": {"version": int(topo.version), "seed": int(topo.seed),
+                     "hosts": list(topo.hosts),
+                     "assignments": [list(a) for a in topo.assignments]},
+        "shapes": {str(g): [int(dim), np.dtype(dt).name]
+                   for g, (dim, dt) in mesh._shapes.items()},
+        "groups": [[str(f), int(v), int(g)] for f, v, g in groups],
+        "extra": extra_meta or {},
+    }
+    mp = os.path.join(path, "mesh_meta.json")
+    with open(mp, "w") as f:
+        json.dump(meta, f)
+    crash_point("snapshot.pre_mesh_manifest")
+    with open(os.path.join(path, _MESH_CHECKSUMS), "w") as f:
+        f.write(f"{_sha256(mp)}  mesh_meta.json\n")
+    crash_point("snapshot.pre_mesh_done")
+    with open(os.path.join(path, _MESH_DONE), "w"):
+        pass
+    return path
+
+
+def verify_sharded_snapshot(path: str) -> bool:
+    """MESH_DONE present, mesh_meta re-hashes clean, and every shard dir
+    passes the single-cube verification. Raises
+    :class:`SnapshotIntegrityError` on any violation."""
+    base = os.path.basename(path)
+    if not os.path.exists(os.path.join(path, _MESH_DONE)):
+        raise SnapshotIntegrityError(f"{base}: unpublished (no MESH_DONE)")
+    manifest = os.path.join(path, _MESH_CHECKSUMS)
+    if not os.path.exists(manifest):
+        raise SnapshotIntegrityError(f"{base}: no MESH_CHECKSUMS")
+    with open(manifest) as f:
+        digest, fn = f.read().strip().split(None, 1)
+    if _sha256(os.path.join(path, fn.strip())) != digest:
+        raise SnapshotIntegrityError(f"{base}: mesh_meta.json sha256 "
+                                     f"mismatch")
+    with open(os.path.join(path, "mesh_meta.json")) as f:
+        meta = json.load(f)
+    for s in range(int(meta["n_shards"])):
+        sdir = os.path.join(path, f"{_SHARD_PREFIX}{s}")
+        if not os.path.isdir(sdir):
+            raise SnapshotIntegrityError(f"{base}: missing shard_{s}")
+        verify_snapshot(sdir)
+    return True
+
+
+def load_sharded_snapshot(path: str, verify: bool = True):
+    """Rebuild every shard cube of a sharded snapshot. Returns
+    ``(shard_cubes, mesh_meta)`` — each shard restored with the proven
+    single-cube loader (bit-identical lookups at its pinned cursor,
+    replica failover included)."""
+    if verify:
+        verify_sharded_snapshot(path)
+    with open(os.path.join(path, "mesh_meta.json")) as f:
+        meta = json.load(f)
+    shards = []
+    for s in range(int(meta["n_shards"])):
+        cube, _smeta = load_cube_snapshot(
+            os.path.join(path, f"{_SHARD_PREFIX}{s}"), verify=False)
+        shards.append(cube)
+    return shards, meta
+
+
+def list_sharded_snapshots(snapshot_dir: str):
+    """Sharded snapshot dirs as ``(version, path, published)``,
+    version-sorted (published = MESH_DONE present)."""
+    if not os.path.isdir(snapshot_dir):
+        return []
+    out = []
+    for d in os.listdir(snapshot_dir):
+        if not d.startswith(_PREFIX):
+            continue
+        try:
+            ver = int(d[len(_PREFIX):])
+        except ValueError:
+            continue
+        full = os.path.join(snapshot_dir, d)
+        if not os.path.isdir(os.path.join(full, f"{_SHARD_PREFIX}0")) \
+                and not os.path.exists(os.path.join(full, _MESH_DONE)):
+            continue
+        out.append((ver, full,
+                    os.path.exists(os.path.join(full, _MESH_DONE))))
+    out.sort()
+    return out
+
+
+def latest_valid_sharded_snapshot(snapshot_dir: str) -> Optional[str]:
+    """Newest published sharded snapshot that verifies clean; torn ones
+    are logged and skipped."""
+    for ver, path, published in reversed(list_sharded_snapshots(
+            snapshot_dir)):
+        if not published:
+            continue
+        try:
+            verify_sharded_snapshot(path)
+            return path
+        except SnapshotIntegrityError as e:
+            log_event(log, "sharded_snapshot_corrupt_ignored",
+                      level=logging.WARNING, version=ver,
+                      snapshot=os.path.basename(path), error=str(e))
+    return None
+
+
 # --------------------------------------------------------------- retention
 
 def prune_snapshots(snapshot_dir: str, keep: int = 2) -> list[str]:
@@ -460,9 +618,13 @@ class CubeSnapshotter:
         # version — don't rewrite it on the first post-restart apply
         self.last_snapshot_version = -1
         newest = latest_valid_snapshot(snapshot_dir)
+        meta_name = "meta.json"
+        if newest is None:
+            newest = latest_valid_sharded_snapshot(snapshot_dir)
+            meta_name = "mesh_meta.json"
         if newest is not None:
             try:
-                with open(os.path.join(newest, "meta.json")) as f:
+                with open(os.path.join(newest, meta_name)) as f:
                     self.last_snapshot_version = int(
                         json.load(f)["delta_version"])
             except (OSError, ValueError, KeyError):
@@ -495,15 +657,25 @@ class CubeSnapshotter:
                     return None
                 groups = [(f, v, g)
                           for (f, v), g in self.sub.groups.items()]
-                path = write_cube_snapshot(
-                    self.snapshot_dir, self.sub.cube, pv, delta_ver,
-                    groups=groups,
-                    extra_meta={"tail_dim": self.sub.tail_dim})
-                write_aux_state(
-                    path,
-                    {g: rm.export()
-                     for g, rm in self.sub.bucket_items.items()},
-                    touched_log, touched_floor)
+                if getattr(self.sub.cube, "is_mesh", False):
+                    # sharded capture: pv pins a MeshCube record — one
+                    # cross-shard frontier; each shard serializes at its
+                    # pinned cursor under snap_<v>/shard_<s>/. Aux state
+                    # is skipped (mesh recovery starts with cold caches).
+                    path = write_sharded_snapshot(
+                        self.snapshot_dir, self.sub.cube, pv.snap,
+                        delta_ver, groups=groups,
+                        extra_meta={"tail_dim": self.sub.tail_dim})
+                else:
+                    path = write_cube_snapshot(
+                        self.snapshot_dir, self.sub.cube, pv, delta_ver,
+                        groups=groups,
+                        extra_meta={"tail_dim": self.sub.tail_dim})
+                    write_aux_state(
+                        path,
+                        {g: rm.export()
+                         for g, rm in self.sub.bucket_items.items()},
+                        touched_log, touched_floor)
             self.last_snapshot_version = delta_ver
             self.snapshots_taken += 1
             self.last_snapshot_s = time.perf_counter() - t0

@@ -1,0 +1,681 @@
+"""Multi-host serving mesh (DESIGN.md §11).
+
+Contracts under test:
+
+  * rendezvous routing is deterministic, stable under topology REPUBLISH
+    (failover bumps the version without moving a single key) and minimal
+    under RESHARD (only the new shard's wins move);
+  * a mesh pin freezes ONE cross-shard frontier: pinned multi-group
+    reads racing multi-shard ``apply_batch`` publishes observe every
+    group on every shard at a single batch version (the §6.6 guarantee
+    extended across the shard tier — the torn-read hunter below is the
+    tentpole's acceptance test);
+  * a dead host degrades DATA reads (zeros + ``TIER_DEFAULT``) but never
+    membership, failover restores bit-identical rows, and a hedged
+    request races a second host and CANCELS the loser;
+  * the replica-fleet balancer drains a killed replica: post-kill
+    arrivals route to survivors only, queued events still complete;
+  * the satellites: bit-exact vectorized arrivals, one-strike host
+    breakers, hot-shard reconstruction from an exported Chrome trace
+    alone, ``snap_<v>/shard_<s>/`` snapshot roundtrip, labeled mesh
+    metrics.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.cube import TIER_DEFAULT, ParameterCube
+from repro.core.executors import AsyncExecutor, SimExecutor
+from repro.core.multitenant import make_balance_op
+from repro.core.sedp import SEDP, Event
+from repro.data.synthetic import (diurnal_burst_arrivals,
+                                  diurnal_burst_arrivals_loop)
+from repro.faults.health import BREAKER_OPEN, HealthRegistry
+from repro.mesh import (FleetBalancer, MeshCube, Replica, ShardHost,
+                        ShardClient, ShardRouter, make_topology, mix64,
+                        register_mesh_collectors)
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import (TraceBuffer, Tracer, add_child_spans,
+                             shard_fanout_spans, shard_profile)
+from repro.sparse.hashing import signature_np
+from repro.update.snapshot import (SnapshotIntegrityError,
+                                   latest_valid_sharded_snapshot,
+                                   latest_valid_snapshot,
+                                   load_sharded_snapshot,
+                                   verify_sharded_snapshot,
+                                   write_sharded_snapshot)
+
+DIM = 4
+N_IDS = 256
+N_GROUPS = 3
+ALL_IDS = np.arange(N_IDS, dtype=np.int64)
+
+
+def _mesh(n_shards=4, n_hosts=4, n_groups=N_GROUPS, **kw):
+    kw.setdefault("n_servers", 2)
+    kw.setdefault("cube_replication", 2)
+    kw.setdefault("block_rows", 64)
+    mesh = MeshCube(n_shards=n_shards, n_hosts=n_hosts, **kw)
+    for g in range(n_groups):
+        mesh.load_table(g, np.zeros((N_IDS, DIM), np.float32),
+                        raw_ids=ALL_IDS)
+    return mesh
+
+
+def _batch_parts(value, n_groups=N_GROUPS, ids=None):
+    ids = ALL_IDS if ids is None else ids
+    return [(g, ids, np.full((ids.size, DIM), float(value), np.float32),
+             None) for g in range(n_groups)]
+
+
+# ------------------------------------------------------------------ routing
+
+def test_rendezvous_routing_deterministic_and_stable_under_republish():
+    topo = make_topology(4, ("host0", "host1", "host2", "host3"),
+                         replication=2)
+    sigs = mix64(np.arange(20000, dtype=np.uint64))
+    owners = topo.shard_of(sigs)
+    assert owners.min() >= 0 and owners.max() < 4
+    counts = np.bincount(owners, minlength=4)
+    assert counts.min() > 0.15 * sigs.size  # rendezvous balances ~evenly
+
+    # failover REPUBLISH: version bumps, preference order demotes the dead
+    # host, and the key→shard mapping does not move one key
+    down = topo.with_host_down("host1")
+    assert down.version == topo.version + 1
+    np.testing.assert_array_equal(down.shard_of(sigs), owners)
+    for s in range(4):
+        hosts = down.hosts_for(s)
+        if "host1" in topo.hosts_for(s):
+            assert hosts[-1] == "host1"       # demoted, still failover-able
+        assert set(hosts) == set(topo.hosts_for(s))
+
+    # the router swaps topologies atomically and refuses rollbacks
+    router = ShardRouter(topo)
+    router.publish(down)
+    assert router.topology is down
+    with pytest.raises(ValueError):
+        router.publish(topo)                  # stale version: never rolls back
+
+    # split() is a partition consistent with shard_of, one capture per batch
+    parts = router.split(sigs)
+    seen = np.concatenate([idx for _, idx in parts])
+    assert np.array_equal(np.sort(seen), np.arange(sigs.size))
+    for s, idx in parts:
+        assert np.all(owners[idx] == s)
+
+
+def test_reshard_moves_only_the_new_shards_keys():
+    topo4 = make_topology(4, ("h0", "h1", "h2", "h3"))
+    topo5 = topo4.with_shards(5)
+    sigs = mix64(np.arange(50000, dtype=np.uint64))
+    old, new = topo4.shard_of(sigs), topo5.shard_of(sigs)
+    moved = old != new
+    assert np.all(new[moved] == 4)            # only the added shard gains keys
+    frac = moved.mean()
+    assert 0.15 < frac < 0.25                 # ~1/5, the rendezvous bound
+
+
+# ------------------------------------------------- cube-surface equivalence
+
+def test_mesh_lookup_bit_identical_to_single_cube_oracle(rng):
+    mesh = _mesh()
+    oracle = ParameterCube(n_servers=4, replication=2, block_rows=64)
+    for g in range(N_GROUPS):
+        oracle.load_table(g, np.zeros((N_IDS, DIM), np.float32),
+                          raw_ids=ALL_IDS)
+    for r in range(4):                        # identical churn on both
+        parts = []
+        for g in range(N_GROUPS):
+            ids = rng.choice(N_IDS, 50, replace=False).astype(np.int64)
+            rows = rng.standard_normal((50, DIM)).astype(np.float32)
+            dels = rng.choice(N_IDS, 6, replace=False).astype(np.int64)
+            parts.append((g, ids, rows, dels))
+        mesh.apply_batch(parts)
+        oracle.apply_batch(parts)
+    try:
+        for g in range(N_GROUPS):
+            live = oracle.contains(g, ALL_IDS)
+            np.testing.assert_array_equal(mesh.contains(g, ALL_IDS), live)
+            rows, tiers = mesh.lookup_ex(g, ALL_IDS)
+            want, _ = oracle.lookup_ex(g, ALL_IDS)
+            np.testing.assert_array_equal(rows, want)
+            assert np.all(tiers < TIER_DEFAULT)   # healthy: nothing degraded
+            np.testing.assert_array_equal(mesh.lookup(g, ALL_IDS[live]),
+                                          oracle.lookup(g, ALL_IDS[live]))
+        mesh.compact(max_rows_per_pass=100)       # per-shard incremental fold
+        oracle.compact()
+        assert mesh.overlay_blocks == 0
+        for g in range(N_GROUPS):
+            rows, _ = mesh.lookup_ex(g, ALL_IDS)
+            want, _ = oracle.lookup_ex(g, ALL_IDS)
+            np.testing.assert_array_equal(rows, want)
+    finally:
+        mesh.shutdown()
+
+
+def test_mesh_pin_freezes_cross_shard_frontier():
+    mesh = _mesh()
+    try:
+        v0 = mesh.version
+        with mesh.pin() as pv:
+            v1 = mesh.apply_batch(_batch_parts(7.0))
+            assert v1 == v0 + 1               # one bump for 3 groups × 4 shards
+            for g in range(N_GROUPS):         # pinned reader: whole OLD frontier
+                assert np.all(mesh.lookup(g, ALL_IDS, version=pv) == 0.0)
+        for g in range(N_GROUPS):             # fresh pin: whole NEW frontier
+            assert np.all(mesh.lookup(g, ALL_IDS) == 7.0)
+    finally:
+        mesh.shutdown()
+
+
+def test_mesh_apply_batch_validation_failure_publishes_nothing():
+    mesh = _mesh()
+    try:
+        v0, overlays0 = mesh.version, mesh.overlay_blocks
+        ids = np.arange(8, dtype=np.int64)
+        good = (0, ids, np.full((8, DIM), 4.0, np.float32), None)
+        bad = (1, ids, np.full((8, DIM + 1), 4.0, np.float32), None)
+        with pytest.raises(ValueError):
+            mesh.apply_batch([good, bad])     # validated BEFORE any shard apply
+        assert mesh.version == v0
+        assert mesh.overlay_blocks == overlays0
+        assert np.all(mesh.lookup(0, ids) == 0.0)
+    finally:
+        mesh.shutdown()
+
+
+# ------------------------------------------------------- torn-read hunter
+
+def _hunter_expected(published, pin_version):
+    vs = [v for v in published if v <= pin_version]
+    return published[max(vs)] if vs else None
+
+
+def test_cross_shard_torn_read_hunter_async(rng):
+    """THE tentpole acceptance test: concurrent pinned readers hammer
+    multi-group lookups against a 4-shard mesh while a writer streams
+    value-stamped multi-shard delta batches and incremental compactions.
+    Every pin must observe all groups ON ALL SHARDS at one single batch
+    version — a torn frontier shows up as two values under one pin."""
+    mesh = _mesh()
+    published = {mesh.version: 0.0}
+    stop = threading.Event()
+    first_batch = threading.Event()
+    writer_err = []
+    pins_checked = [0]
+
+    def writer():
+        try:
+            first_batch.wait(timeout=10)
+            k = 0
+            while not stop.is_set():
+                next_v = mesh.version + 1
+                published[next_v] = float(next_v)   # record BEFORE publish
+                assert mesh.apply_batch(_batch_parts(float(next_v))) == next_v
+                k += 1
+                if k % 5 == 0:
+                    # compact republishes too: the intermediate versions
+                    # carry the same values, _hunter_expected resolves them
+                    mesh.compact(max_rows_per_pass=64)
+                time.sleep(0.002)
+        except Exception as e:                 # pragma: no cover - debug aid
+            writer_err.append(e)
+
+    def op_lookup(batch, ctx):
+        first_batch.set()
+        for ev in batch:
+            ids = ev.payload["ids"]
+            with mesh.pin() as pv:             # ONE pin spanning shards+groups
+                per_group = [np.unique(mesh.lookup(g, ids, version=pv))
+                             for g in range(N_GROUPS)]
+                ev.payload["version"] = pv.version
+            ev.payload["values"] = np.unique(np.concatenate(per_group))
+            pins_checked[0] += 1
+        return batch
+
+    g = SEDP()
+    g.add_stage("ingress", lambda b, c: b, batch_size=4, parallelism=2)
+    g.add_stage("lookup", op_lookup, batch_size=8, parallelism=3)
+    g.add_stage("respond", lambda b, c: b, batch_size=8)
+    g.chain("ingress", "lookup", "respond")
+    events = [Event(payload={"ids": rng.integers(0, N_IDS, 24)})
+              for _ in range(400)]
+    th = threading.Thread(target=writer, daemon=True)
+    th.start()
+    try:
+        report = AsyncExecutor(g.compile()).run(events)
+    finally:
+        stop.set()
+        th.join(timeout=10)
+        mesh.shutdown()
+    assert not writer_err
+    assert len(report.results) == len(events)
+    assert pins_checked[0] >= 300
+    seen_versions = set()
+    for ev in report.results:
+        vals = ev.payload["values"]
+        # every row of every group under one pin carries ONE value ⇒ the
+        # pin saw a single cross-shard batch frontier — no tear anywhere
+        assert vals.size == 1, f"cross-shard torn read: values {vals}"
+        assert _hunter_expected(published, ev.payload["version"]) == \
+            float(vals[0])
+        seen_versions.add(ev.payload["version"])
+    assert len(seen_versions) >= 2, seen_versions
+
+
+# ---------------------------------------------- degradation + failover
+
+def test_host_kill_degrades_data_not_membership_and_failover_restores():
+    mesh = _mesh(n_shards=4, n_hosts=4, replication=2)
+    try:
+        mesh.apply_batch(_batch_parts(3.0))
+        baseline = mesh.lookup(0, ALL_IDS)
+        assert np.all(baseline == 3.0)
+
+        # shard 0 lives on hosts (0, 1); kill BOTH → its keys degrade to
+        # zeros + TIER_DEFAULT while membership stays authoritative
+        mesh.kill_host("host0")
+        mesh.kill_host("host1")
+        owners = mesh.router.topology.shard_of(signature_np(0, ALL_IDS))
+        dead = owners == 0
+        assert dead.any() and (~dead).any()
+        rows, tiers = mesh.lookup_ex(0, ALL_IDS)
+        assert np.all(tiers[dead] == TIER_DEFAULT)
+        assert np.all(rows[dead] == 0.0)
+        assert np.all(tiers[~dead] < TIER_DEFAULT)
+        np.testing.assert_array_equal(rows[~dead], baseline[~dead])
+        # membership is a local metadata probe: an outage never fabricates
+        # tombstones (zeros stay marked degraded, not absent)
+        assert mesh.contains(0, ALL_IDS).all()
+
+        # single-host kill: the client fails over within the preference
+        # list and the read stays bit-identical (degraded nowhere)
+        mesh.revive_host("host1")
+        rows2, tiers2 = mesh.lookup_ex(0, ALL_IDS)
+        np.testing.assert_array_equal(rows2, baseline)
+        assert np.all(tiers2 < TIER_DEFAULT)
+        assert mesh.client.stats["failovers"] > 0
+
+        # control-plane failover REPUBLISH stops paying the dead-host
+        # probe: host0 demotes to the back of every preference list
+        rejected_before = mesh.hosts["host0"].rejected
+        assert rejected_before > 0
+        topo = mesh.fail_over("host0")
+        assert topo.version > 1
+        for _ in range(3):
+            mesh.lookup(0, ALL_IDS)
+        assert mesh.hosts["host0"].rejected == rejected_before
+        mesh.revive_host("host0")
+        np.testing.assert_array_equal(mesh.lookup(0, ALL_IDS), baseline)
+    finally:
+        mesh.shutdown()
+
+
+def test_hedged_request_cancels_the_loser():
+    """Acceptance: a slow primary trips the hedge window, the secondary
+    answers, and the loser is cancelled — it never touches the shard."""
+    hosts = {"h0": ShardHost("h0", wall_latency=True),
+             "h1": ShardHost("h1", wall_latency=True)}
+    router = ShardRouter(make_topology(1, ("h0", "h1"), replication=2))
+    client = ShardClient(hosts, router, hedge_after_s=0.02)
+    hosts["h0"].extra_latency_s = 0.25        # primary stalls past the window
+    executed = []
+
+    def fn():
+        executed.append(threading.current_thread().name)
+        return "rows"
+
+    try:
+        out, meta = client.call(0, fn)
+        assert out == "rows"
+        assert meta["host"] == "h1" and meta["hedged"] is True
+        assert client.stats["hedges"] == 1
+        assert client.stats["hedge_wins"] == 1
+        assert client.stats["cancelled"] == 1
+        # the loser wakes from its injected stall, sees its cancel event,
+        # and aborts BEFORE executing the shard read
+        deadline = time.monotonic() + 2.0
+        while hosts["h0"].cancelled == 0 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert hosts["h0"].cancelled == 1
+        assert hosts["h0"].served == 0
+        assert len(executed) == 1             # only the winner ran fn
+
+        # control: with the stall gone no hedge launches
+        hosts["h0"].extra_latency_s = 0.0
+        out2, meta2 = client.call(0, fn)
+        assert out2 == "rows" and meta2["hedged"] is False
+        assert client.stats["hedges"] == 1    # unchanged
+    finally:
+        client.shutdown()
+
+
+# ------------------------------------------------------------ fleet balancer
+
+def _fleet_plan(bal, kill_at=None, kill_name="r0"):
+    inner = make_balance_op(bal.pick)
+    seen, kill_order = [0], [None]
+
+    def balance(batch, ctx):
+        out = inner(batch, ctx)
+        for ev in out:
+            seen[0] += 1
+            ev.payload["order"] = seen[0]
+        if (kill_at is not None and seen[0] >= kill_at
+                and kill_order[0] is None):
+            bal.kill(kill_name)
+            kill_order[0] = seen[0]
+        return out
+
+    def replica_op(name):
+        def op(batch, ctx):
+            for ev in batch:
+                ev.payload["served_by"] = name
+            return batch
+        return op
+
+    g = SEDP()
+    g.add_stage("ingress", lambda b, c: b, batch_size=4)
+    g.add_stage("balance", balance, batch_size=4)
+    for r in bal.replicas:
+        g.add_stage(r.entry, replica_op(r.name), batch_size=4,
+                    sim_base_s=1e-4)
+        g.add_edge("balance", r.entry)
+        g.add_stage(f"respond_{r.name}", lambda b, c: b, batch_size=4)
+        g.add_edge(r.entry, f"respond_{r.name}")
+    g.add_edge("ingress", "balance")
+    return g.compile(), kill_order
+
+
+def test_balancer_drains_killed_replica():
+    """Acceptance: a replica killed mid-run receives ZERO post-kill
+    arrivals; its queued events still complete; survivors absorb the
+    rest of the stream."""
+    bal = FleetBalancer([Replica("r0", "r0"), Replica("r1", "r1"),
+                         Replica("r2", "r2")])
+    plan, kill_order = _fleet_plan(bal, kill_at=24)
+    arrivals = [(i * 1e-3, Event(payload={"i": i})) for i in range(90)]
+    report = SimExecutor(plan).run(arrivals)
+    assert len(report.results) == 90          # queued events drained, none lost
+    assert kill_order[0] is not None
+    routed_to_dead_after_kill = [
+        ev for ev in report.results
+        if ev.payload["order"] > kill_order[0]
+        and ev.meta["replica"] == "r0"]
+    assert not routed_to_dead_after_kill
+    for ev in report.results:                 # balance decision = actual path
+        assert ev.meta["replica"] == ev.payload["served_by"]
+    snap = bal.snapshot()
+    assert snap["r0"]["routed"] > 0           # it DID serve before the kill
+    assert not snap["r0"]["alive"]
+    assert snap["r1"]["routed"] + snap["r2"]["routed"] == 90 - \
+        snap["r0"]["routed"]
+    # survivors share the post-kill load instead of pile-on
+    assert snap["r1"]["routed"] > 0 and snap["r2"]["routed"] > 0
+
+
+def test_balancer_unroutable_fleet_terminates_events_with_error():
+    bal = FleetBalancer([Replica("r0", "r0"), Replica("r1", "r1")])
+    bal.kill("r0"), bal.kill("r1")
+    plan, _ = _fleet_plan(bal)
+    report = SimExecutor(plan).run(
+        [(i * 1e-3, Event(payload={"i": i})) for i in range(5)])
+    assert len(report.results) == 5
+    for ev in report.results:
+        assert ev.meta["error"] == "no live replica"
+        assert "served_by" not in ev.payload  # never reached a replica
+    assert bal.unroutable == 5
+
+
+def test_balancer_open_breaker_skips_replica_like_a_kill():
+    now = [0.0]
+    health = HealthRegistry(keys=[("r0", "entry"), ("r1", "entry")],
+                            clock=lambda: now[0], cooldown_s=60.0)
+    bal = FleetBalancer([Replica("r0", "r0"), Replica("r1", "r1")],
+                        health=health)
+    health[("r0", "entry")].trip(now[0])
+
+    class _Ctx:
+        def queue_depth(self, stage):
+            return 0
+    for _ in range(6):
+        assert bal.pick(Event(payload={}), _Ctx()) == "r1"
+    assert bal.by_name["r0"].routed == 0
+
+
+# -------------------------------------------------- one-strike host breakers
+
+def test_dead_host_costs_one_strike_not_one_per_shard():
+    """Satellite regression: (host, shard) breaker keys + the host-level
+    verdict. The FIRST HostDown trips every breaker of the host at once —
+    later calls for other shards skip it for free instead of paying one
+    failed probe per shard."""
+    now = [0.0]
+    mesh = _mesh(n_shards=4, n_hosts=2, replication=2, n_groups=1)
+    try:
+        reg = mesh.attach_health(HealthRegistry.for_mesh(
+            mesh.router.topology.hosts, 4, clock=lambda: now[0],
+            failure_threshold=3, cooldown_s=5.0))
+        mesh.kill_host("host0")
+        # shard 0's primary is host0: ONE failed probe, then failover
+        out, meta = mesh.client.call(0, lambda: "ok")
+        assert out == "ok" and meta["host"] == "host1"
+        assert mesh.hosts["host0"].rejected == 1
+        assert mesh.client.stats["host_failures"] == 1
+        # the single strike opened ALL of host0's breakers at once...
+        assert all(st == BREAKER_OPEN
+                   for st in reg.host_states("host0").values())
+        assert all(reg[("host0", s)].opens == 1 for s in range(4))
+        # ...so shard 2 (also primary host0) never probes the dead host
+        out2, _ = mesh.client.call(2, lambda: "ok")
+        assert out2 == "ok"
+        assert mesh.hosts["host0"].rejected == 1      # STILL one
+        assert mesh.client.stats["host_failures"] == 1
+        # host1's breakers are untouched
+        assert all(st != BREAKER_OPEN
+                   for st in reg.host_states("host1").values())
+        # cooldown: the revived host closes back via one half-open probe
+        mesh.revive_host("host0")
+        now[0] = 10.0
+        out3, meta3 = mesh.client.call(0, lambda: "ok")
+        assert out3 == "ok" and meta3["host"] == "host0"
+        assert reg[("host0", 0)].state != BREAKER_OPEN
+    finally:
+        mesh.shutdown()
+
+
+# ----------------------------------------------------- vectorized arrivals
+
+@pytest.mark.parametrize("kw", [
+    dict(base_qps=40.0, peak_mult=3.0, day_s=600.0),
+    dict(base_qps=60.0, peak_mult=2.0, day_s=300.0,
+         burst_rate_per_s=0.05, burst_mult=6.0, burst_dur_s=2.0),
+    dict(base_qps=25.0, peak_mult=5.0, day_s=120.0, start_frac=0.0,
+         burst_rate_per_s=0.5, burst_mult=3.0, burst_dur_s=0.25),
+], ids=["diurnal", "bursty", "burst-heavy"])
+def test_vectorized_arrivals_bit_identical_to_loop(kw):
+    """Satellite: the chunked/vectorized NHPP thinning sampler must equal
+    the per-event reference loop BIT-FOR-BIT at a fixed seed — same
+    derived sub-streams, same float association, overshoot discarded."""
+    fast = diurnal_burst_arrivals(np.random.default_rng(7), 3000, **kw)
+    slow = diurnal_burst_arrivals_loop(np.random.default_rng(7), 3000, **kw)
+    assert fast.dtype == slow.dtype
+    np.testing.assert_array_equal(fast, slow)
+    assert fast.size == 3000
+    assert np.all(np.diff(fast) >= 0.0)       # arrival times, sorted
+    again = diurnal_burst_arrivals(np.random.default_rng(7), 3000, **kw)
+    np.testing.assert_array_equal(fast, again)  # deterministic
+
+
+# --------------------------------------------------------- trace attribution
+
+def test_hot_shard_reconstructed_from_exported_trace_alone():
+    """Satellite: one slow host shows up as the hot shard in
+    ``shard_profile`` — computed from an exported Chrome trace document
+    ONLY (no live objects), the way the fleet bench attributes its tail."""
+    mesh = _mesh(wall_latency=True, n_groups=1)
+    try:
+        mesh.hosts["host2"].extra_latency_s = 0.05   # shard 2's primary
+
+        def op(batch, ctx):
+            for ev in batch:
+                with mesh.pin() as pv:
+                    mesh.lookup(0, ev.payload["ids"], version=pv)
+                fan = mesh.take_fanout()
+                assert {f["shard"] for f in fan} == {0, 1, 2, 3}
+                add_child_spans(ev, shard_fanout_spans(fan))
+            return batch
+
+        g = SEDP()
+        g.add_stage("fetch", op, batch_size=2)
+        g.add_stage("respond", lambda b, c: b, batch_size=2)
+        g.chain("fetch", "respond")
+        tr = Tracer()
+        report = AsyncExecutor(g.compile(), tracer=tr).run(
+            [Event(payload={"ids": ALL_IDS}) for _ in range(4)])
+        assert len(report.results) == 4
+        doc = tr.buffer.export_chrome()
+        for rec in TraceBuffer.from_chrome(doc):
+            prof = shard_profile(rec)
+            assert set(prof) == {0, 1, 2, 3}
+            hot = max(prof, key=lambda s: prof[s]["dur_s"])
+            assert hot == 2                   # the stalled host's shard
+            assert prof[2]["dur_s"] >= 0.04
+            assert prof[2]["dur_s"] > 2 * max(
+                prof[s]["dur_s"] for s in (0, 1, 3))
+            assert "host2" in prof[2]["hosts"]
+            # the stage's own exec span survived the child insertion
+            execs = [sp for sp in rec["spans"]
+                     if sp["stage"] == "fetch" and sp["kind"] == "exec"]
+            assert len(execs) == 1 and execs[0]["t1"] >= execs[0]["t0"]
+    finally:
+        mesh.shutdown()
+
+
+def test_fetch_stage_attaches_shard_fanout_spans_end_to_end():
+    """The CubeFetchStage integration: a scenario pipeline on a mesh
+    substrate (``mesh_shards=4`` — construction otherwise unchanged)
+    yields traces whose cube stage carries per-shard ``shard_fetch``
+    children, and the requests serve undegraded."""
+    from repro.serve.scenario import (PipelineBuilder, ScenarioSpec,
+                                      ServingSubstrate, make_request_events)
+    sub = ServingSubstrate(mesh_shards=4, block_rows=512, seed=0)
+    assert getattr(sub.cube, "is_mesh", False)
+    try:
+        b = PipelineBuilder(sub)
+        b.add_ingress("ingress")
+        rt = b.add_scenario(ScenarioSpec(name="din", arch_id="din",
+                                         shed=False, seed=0),
+                            namespaced=False)
+        b.g.add_edge("ingress", b.entries["din"])
+        _graph, plan = b.compile()
+        tr = Tracer()
+        reqs = make_request_events([rt.model_cfg], 8, seed=0)
+        report = AsyncExecutor(plan, tracer=tr).run(reqs)
+        assert len(report.results) == 8
+        for ev in report.results:
+            assert ev.meta["response"].degraded_tier == 0
+        traced = tr.buffer.traces()
+        assert len(traced) == 8
+        with_fanout = 0
+        for rec in traced:
+            fetch = [sp for sp in rec["spans"]
+                     if sp["kind"] == "shard_fetch"]
+            if fetch:
+                with_fanout += 1
+                prof = shard_profile(rec)
+                assert prof and all(p["n_fetches"] >= 1
+                                    for p in prof.values())
+        # cold cube cache ⇒ at least the early requests fan out to shards
+        assert with_fanout > 0
+    finally:
+        sub.cube.shutdown()
+
+
+# ------------------------------------------------------- sharded snapshots
+
+def test_sharded_snapshot_roundtrip_two_shards(tmp_path, rng):
+    mesh = _mesh(n_shards=2, n_hosts=2, n_groups=2)
+    sd = str(tmp_path)
+    try:
+        for g in range(2):
+            ids = rng.choice(N_IDS, 60, replace=False).astype(np.int64)
+            rows = rng.standard_normal((60, DIM)).astype(np.float32)
+            dels = rng.choice(N_IDS, 8, replace=False).astype(np.int64)
+            mesh.apply_batch([(g, ids, rows, dels)])
+        with mesh.pin() as pv:
+            path = write_sharded_snapshot(
+                sd, mesh, pv.snap, delta_version=7,
+                groups=(("f0", N_IDS, 0), ("f1", N_IDS, 1)))
+        assert os.path.basename(path) == "snap_000000000007"
+        for s in range(2):                    # per-shard naming + publish
+            assert os.path.exists(os.path.join(path, f"shard_{s}", "DONE"))
+        assert verify_sharded_snapshot(path)
+        assert latest_valid_sharded_snapshot(sd) == path
+        # invisible to LEGACY single-cube recovery: no top-level DONE
+        assert latest_valid_snapshot(sd) is None
+
+        shards, meta = load_sharded_snapshot(path)
+        assert meta["n_shards"] == 2
+        assert meta["delta_version"] == 7
+        assert meta["groups"] == [["f0", N_IDS, 0], ["f1", N_IDS, 1]]
+        # the per-shard cursor map records each shard's pinned version
+        assert meta["shard_cursors"] == {
+            str(s): mesh.shards[s].version for s in range(2)}
+        assert meta["topology"]["hosts"] == ["host0", "host1"]
+        # bit-identical per shard at the pinned cursor, tombstones kept
+        for g in range(2):
+            sigs = signature_np(g, ALL_IDS)
+            for s, idx in mesh.router.split(sigs):
+                want_live = mesh.shards[s].contains(g, ALL_IDS[idx])
+                got_live = shards[s].contains(g, ALL_IDS[idx])
+                np.testing.assert_array_equal(want_live, got_live)
+                np.testing.assert_array_equal(
+                    shards[s].lookup(g, ALL_IDS[idx][got_live]),
+                    mesh.shards[s].lookup(g, ALL_IDS[idx][want_live]))
+
+        # a newer snapshot wins; a torn one (no MESH_DONE) is skipped
+        mesh.apply_batch([(0, ALL_IDS[:4],
+                           np.full((4, DIM), 9.0, np.float32), None)])
+        with mesh.pin() as pv:
+            p2 = write_sharded_snapshot(sd, mesh, pv.snap, delta_version=9)
+        assert latest_valid_sharded_snapshot(sd) == p2
+        os.remove(os.path.join(p2, "MESH_DONE"))
+        with pytest.raises(SnapshotIntegrityError):
+            verify_sharded_snapshot(p2)
+        assert latest_valid_sharded_snapshot(sd) == path
+    finally:
+        mesh.shutdown()
+
+
+# ---------------------------------------------------------------- metrics
+
+def test_mesh_metrics_families_are_shard_host_replica_labeled():
+    mesh = _mesh(n_shards=2, n_hosts=2, n_groups=1)
+    try:
+        fleet = FleetBalancer([Replica("r0", "r0"), Replica("r1", "r1")])
+        fleet.by_name["r0"].routed = 5
+        fleet.kill("r1")
+        reg = MetricsRegistry()
+        register_mesh_collectors(reg, mesh=mesh, fleet=fleet)
+        mesh.lookup(0, ALL_IDS)
+        mesh.kill_host("host1")
+        snap = reg.snapshot()
+        for s in range(2):
+            assert snap[f"jizhi_mesh_shard_calls{{shard={s}}}"] >= 1.0
+            assert snap[f"jizhi_mesh_shard_rows{{shard={s}}}"] > 0.0
+        assert snap["jizhi_mesh_host_alive{host=host0}"] == 1.0
+        assert snap["jizhi_mesh_host_alive{host=host1}"] == 0.0
+        assert snap["jizhi_mesh_topology_version{}"] == 1.0
+        assert snap["jizhi_mesh_version{}"] == float(mesh.version)
+        assert snap["jizhi_fleet_replica_routed{replica=r0}"] == 5.0
+        assert snap["jizhi_fleet_replica_alive{replica=r1}"] == 0.0
+        prom = reg.to_prometheus()
+        assert 'jizhi_mesh_shard_rows{shard="0"}' in prom
+        assert 'jizhi_fleet_replica_alive{replica="r0"} 1' in prom
+    finally:
+        mesh.shutdown()
